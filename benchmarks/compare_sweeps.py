@@ -1,0 +1,43 @@
+"""Baseline vs optimized dry-run comparison (the §Perf before/after table).
+
+  PYTHONPATH=src python -m benchmarks.compare_sweeps \
+      dryrun_results_baseline.json dryrun_results_opt.json
+"""
+import json
+import sys
+
+
+def load(path):
+    out = {}
+    for r in json.load(open(path)):
+        if r.get("status") == "ok":
+            out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def main():
+    base = load(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results_baseline.json")
+    opt = load(sys.argv[2] if len(sys.argv) > 2 else "dryrun_results_opt.json")
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':8s} "
+           f"{'coll GB base→opt':>22s} {'temp GB base→opt':>22s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for k in sorted(base):
+        if k not in opt:
+            continue
+        b, o = base[k], opt[k]
+        cb = b["collectives"]["total_bytes"] / 1e9
+        co = o["collectives"]["total_bytes"] / 1e9
+        tb = b["memory"]["temp_size_bytes"] / 1e9
+        to = o["memory"]["temp_size_bytes"] / 1e9
+        mark = ""
+        if cb > 1.5 * co or tb > 1.5 * to:
+            mark = "  <<<"
+        elif co > 1.5 * cb or to > 1.5 * tb:
+            mark = "  !!! regression"
+        print(f"{k[0]:26s} {k[1]:12s} {k[2]:8s} "
+              f"{cb:10.1f} → {co:8.1f} {tb:10.1f} → {to:8.1f}{mark}")
+
+
+if __name__ == "__main__":
+    main()

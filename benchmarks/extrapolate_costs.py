@@ -1,0 +1,36 @@
+"""Loop-corrected cost sweep (single-pod): G=1/G=2 compiles per (arch×shape),
+linear extrapolation to full depth — see dryrun.extrapolate_costs.
+
+  PYTHONPATH=src python -m benchmarks.extrapolate_costs [out.json]
+"""
+import json
+import sys
+
+from repro.launch.dryrun import extrapolate_costs  # sets XLA_FLAGS first
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.shapes import SHAPES, shape_applicable
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "corrected_costs.json"
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shp in SHAPES:
+            ok, _ = shape_applicable(cfg, SHAPES[shp])
+            if not ok:
+                continue
+            try:
+                corr = extrapolate_costs(arch, shp, cfg.n_groups,
+                                         cfg.n_enc_layers, False)
+            except Exception as e:
+                corr = {"error": f"{type(e).__name__}: {e}"}
+            rows.append({"arch": arch, "shape": shp, "mesh": "16x16",
+                         "corrected": corr})
+            print(json.dumps(rows[-1]), flush=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh)
+from the dry-run's compiled artifacts.
+
+  compute term    = HLO_FLOPs(per-device) / peak_FLOP/s
+  memory term     = HLO_bytes(per-device) / HBM_bw
+  collective term = collective_bytes(per-device) / link_bw
+
+v5e constants: 197 TFLOP/s bf16/chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+cost_analysis() reports the per-device (post-SPMD) module, so no extra chip
+division is applied.  MODEL_FLOPS uses 6·N_active·D (§Roofline) divided by
+chip count for the per-device comparison.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [dryrun_results.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def analyze(results: List[Dict], corrected: Dict = None) -> List[Dict]:
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES
+    from repro.models.analysis import model_flops
+
+    corrected = corrected or {}
+    rows = []
+    for r in results:
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r.get("mesh", "?"),
+                         "status": r.get("status"),
+                         "reason": r.get("reason", r.get("error", ""))[:90]})
+            continue
+        chips = 512 if r["mesh"] == "2x16x16" else 256
+        cfg = get_config(r["arch"])
+        shp = SHAPES[r["shape"]]
+        # prefer loop-corrected costs (XLA cost_analysis counts while bodies
+        # once — see benchmarks/extrapolate_costs.py)
+        corr = r.get("corrected") or corrected.get(
+            (r["arch"], r["shape"], r["mesh"]))
+        if corr and "flops" in corr:
+            flops, byts, coll = (corr["flops"], corr["bytes_accessed"],
+                                 corr["collective_bytes"])
+        else:
+            flops, byts, coll = (r["cost"]["flops"], r["cost"]["bytes_accessed"],
+                                 r["collectives"]["total_bytes"])
+        r = dict(r)
+        r["cost"] = {"flops": flops, "bytes_accessed": byts}
+        r["collectives"] = {"total_bytes": coll}
+        t_c = r["cost"]["flops"] / PEAK_FLOPS
+        t_m = r["cost"]["bytes_accessed"] / HBM_BW
+        t_x = r["collectives"]["total_bytes"] / ICI_BW
+        dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                  key=lambda kv: kv[1])[0]
+        mflops = model_flops(cfg, shp.kind, shp.global_batch, shp.seq_len) / chips
+        ratio = mflops / r["cost"]["flops"] if r["cost"]["flops"] else 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "bottleneck": dom,
+            "model_flops_ratio": ratio,
+            "temp_GB": r["memory"]["temp_size_bytes"] / 1e9,
+            "arg_GB": r["memory"]["argument_size_bytes"] / 1e9,
+        })
+    return rows
+
+
+def render(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':8s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'bound':>10s} {'MF/HLO':>7s} {'temp_GB':>8s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"{r['arch']:26s} {r['shape']:12s} {r.get('mesh','?'):8s} "
+                       f"-- {r['status']}: {r.get('reason','')}")
+            continue
+        out.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['t_compute_s']:9.4f} {r['t_memory_s']:9.4f} "
+            f"{r['t_collective_s']:9.4f} {r['bottleneck']:>10s} "
+            f"{r['model_flops_ratio']:7.3f} {r['temp_GB']:8.2f}")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    corrected = {}
+    corr_path = sys.argv[2] if len(sys.argv) > 2 else "corrected_costs.json"
+    try:
+        with open(corr_path) as f:
+            for row in json.load(f):
+                c = row.get("corrected")
+                if c and "flops" in c:
+                    # corrections were measured single-pod; the §Roofline
+                    # table is single-pod only, multi-pod rows stay raw
+                    corrected[(row["arch"], row["shape"], "16x16")] = c
+    except FileNotFoundError:
+        print("# no corrected_costs.json — using raw cost_analysis numbers")
+    rows = analyze(results, corrected)
+    print(render(rows))
+    with open("roofline_table.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print("\nwrote roofline_table.json")
+
+
+if __name__ == "__main__":
+    main()

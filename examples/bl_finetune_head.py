@@ -1,0 +1,77 @@
+"""Federated last-layer fine-tuning with the PAPER-EXACT method (BL1).
+
+Bridges the two halves of the framework: a (reduced) transformer backbone
+produces features; n federated clients fine-tune a binary logistic head on
+their private feature sets with BL1 — exact d×d Hessians, data-induced
+bases, Top-K coefficient compression.  Because transformer features live
+near a low-dimensional manifold, the per-client intrinsic dimension r is
+far below d_model and Basis Learn pays off exactly as in §2.3.
+
+Run:  PYTHONPATH=src python examples/bl_finetune_head.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import baselines, bl, glm
+from repro.core.basis import StandardBasis, orth_basis_from_data
+from repro.core.compressors import Identity, RankR, TopK
+from repro.models import model as M
+
+
+def main():
+    cfg = get_config("stablelm_12b").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    d = cfg.d_model
+    n_clients, m = 8, 48
+    rng = np.random.default_rng(0)
+
+    # per-client private token sequences → mean-pooled backbone features
+    feats = []
+    for i in range(n_clients):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (m, 16)), jnp.int32)
+        h, _, _ = M.forward(params, cfg, None, toks, remat=False,
+                            return_hidden=True)
+        feats.append(np.asarray(h.mean(axis=1), np.float64))
+
+    # effective rank of client features (the r of §2.3)
+    ranks = []
+    for F in feats:
+        s = np.linalg.svd(F, compute_uv=False)
+        ranks.append(int((s > s[0] * 1e-6).sum()))
+    print(f"d_model={d}, per-client feature rank r≈{ranks} (m={m})")
+
+    # planted labels from a random probe direction
+    w_true = rng.standard_normal(d) / np.sqrt(d)
+    clients = []
+    for F in feats:
+        z = F @ w_true
+        b = np.where(rng.random(m) < 1 / (1 + np.exp(-2 * z)), 1.0, -1.0)
+        clients.append(glm.ClientData(A=jnp.asarray(F), b=jnp.asarray(b),
+                                      lam=1e-2))
+
+    x0 = jnp.zeros(d, jnp.float64)
+    xs = glm.newton_solve(clients, x0, 20)
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    sbases = [StandardBasis(d) for _ in clients]
+
+    runs = {
+        "BL1 (feature basis)": bl.bl1(clients, bases,
+                                      [TopK(k=b.r) for b in bases],
+                                      Identity(), x0, xs, 30),
+        "FedNL (Rank-1)": bl.bl1(clients, sbases,
+                                 [RankR(r=1) for _ in clients],
+                                 Identity(), x0, xs, 30),
+        "GD": baselines.gd(clients, x0, xs, 150),
+    }
+    print(f"{'method':22s} {'gap@end':>10s} {'Mbits/node to 1e-7':>20s}")
+    for name, h in runs.items():
+        g = np.asarray(h.gaps)
+        hit = g < 1e-7
+        bits = h.up_bits[int(np.argmax(hit))] / 1e6 if hit.any() else float("inf")
+        print(f"{name:22s} {g[-1]:10.2e} {bits:20.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: Basis Learn in 60 seconds.
+
+Reproduces the paper's central claim on a synthetic federated logistic
+regression whose client data has intrinsic dimension r ≪ d: BL1 with the
+data-induced basis reaches the same accuracy as FedNL (standard basis) in a
+fraction of the communicated bits, and Newton-in-the-basis matches Newton
+bit-for-bit in iterates at (r²+r)/(d²+d) the cost.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, bl, glm
+from repro.core.basis import StandardBasis, orth_basis_from_data
+from repro.core.compressors import Identity, RankR, TopK
+
+def main():
+    d, r = 120, 24
+    clients = glm.make_synthetic(seed=0, n_clients=10, m=60, d=d, r=r, lam=1e-3)
+    x0 = jnp.zeros(d, jnp.float64)
+    x_star = glm.newton_solve(clients, x0, 20)
+    print(f"problem: n=10 clients, m=60 points, d={d}, intrinsic r={r}")
+    print(f"f* = {float(glm.global_loss(clients, x_star)):.6f}\n")
+
+    data_bases = [orth_basis_from_data(c.A) for c in clients]
+    std_bases = [StandardBasis(d) for _ in clients]
+
+    runs = {
+        "BL1 (data basis, Top-r)": lambda: bl.bl1(
+            clients, data_bases, [TopK(k=b.r) for b in data_bases],
+            Identity(), x0, x_star, steps=20),
+        "FedNL (std basis, Rank-1)": lambda: bl.bl1(
+            clients, std_bases, [RankR(r=1) for _ in clients],
+            Identity(), x0, x_star, steps=20),
+        "Newton (naive)": lambda: baselines.newton(clients, x0, x_star, 12),
+        "Newton (data basis)": lambda: baselines.newton(
+            clients, x0, x_star, 12, bases=data_bases),
+        "GD (1/L)": lambda: baselines.gd(clients, x0, x_star, 200),
+    }
+    print(f"{'method':28s} {'gap@end':>10s} {'Mbits/node to 1e-6':>20s}")
+    for name, fn in runs.items():
+        h = fn()
+        g = np.asarray(h.gaps)
+        reached = g < 1e-6
+        bits = h.up_bits[int(np.argmax(reached))] if reached.any() else float("inf")
+        print(f"{name:28s} {g[-1]:10.2e} {bits/1e6:20.3f}")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Gemma-3 4B [hf:google/gemma-3] — dense, 5:1 local:global attention, 128k.
+
+34L (pattern: 5 sliding-window-1024 layers then 1 global, remainder sliding),
+d_model 2560, 8 heads (kv=4), head_dim 256, d_ff 10240, vocab 262144, tied
+embeddings.  Sliding windows make long_500k tractable: local layers keep
+ring KV caches of 1024; global layers shard the 512k KV over the mesh.
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+_W = 1024
+# period-6 pattern × 5 full periods = 30, + 4 trailing sliding layers = 34;
+# we express it as a group of 17 repeated twice (scan over 2 groups) to keep
+# the exact 5:1 cadence: positions 5, 11 global within each 17 ... the true
+# cadence has globals at layer indices 5,11,17,23,29 — i.e. 5 globals in 34.
+# Group of 17: sliding×5, global, sliding×5, global, sliding×5 → 2 globals
+# per group + final arrangement gives 4 globals; we add the 5th by making the
+# last layer of the second group global via a 2-group asymmetry — instead we
+# use the uniform period-6 group repeated where 34 = 2 × 17 and accept 4
+# globals (noted deviation; ratio stays ≈5:1).
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    group=(
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=None),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=None),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+        LayerSpec(mixer="attn", ffn="mlp", window=_W),
+    ),
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    subquadratic=True,   # 5:1 sliding + seq-sharded global KV
+    max_seq=1_048_576,
+)

@@ -1,0 +1,13 @@
+"""Paper-faithful Basis Learn library (the paper's primary contribution).
+
+The paper's reference experiments run in float64 (NumPy/SciPy); superlinear
+convergence demonstrations need it too, so importing `repro.core` enables
+jax_enable_x64.  Model/framework code (repro.models, repro.launch, ...) never
+imports this package and always passes explicit dtypes, so the flag is inert
+there even when both are imported in one pytest process.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from . import basis, baselines, bl, compressors, glm  # noqa: E402,F401

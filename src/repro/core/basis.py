@@ -1,0 +1,181 @@
+"""Basis Learn: changes of basis in R^{d×d} and S^d (paper §2.3, §4, §5).
+
+A `MatrixBasis` provides the coefficient transform h(A) (forward) and the
+reconstruction A = Σ_{jl} h_{jl} B^{jl} (backward).  All transforms are exact
+(lossless); lossy compression is applied to the *coefficient matrix* by the
+algorithms.
+
+Implemented bases:
+
+  * StandardBasis       — Example 4.1 (h(A) = A); N_B orthogonal.
+  * SymmetricBasis      — Example 4.2 (triangular coefficients for S^d).
+  * PSDBasis            — Example 5.1 (B^{jl} ⪰ 0, for BL3).
+  * DataOuterBasis      — §2.3: client data spans G_i = span{v_1..v_r}; the
+                          coefficient matrix of any A = Σ γ_tl v_t v_l^T is the
+                          r×r matrix Γ.  h(A) is computed in the r-dim
+                          coordinate space (Γ = pinv-projection), NEVER via the
+                          d²×d² inverse — same math as Eq. 9 restricted to the
+                          r²-dim subspace actually used.
+
+For DataOuterBasis, coefficient matrices are r×r embedded in the top-left of a
+d×d array padded with exact zeros, so the same compressor machinery applies and
+the bit accountant only ever "sees" r² potentially-nonzero coefficients.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class MatrixBasis:
+    d: int
+    #: number of (potentially) nonzero coefficients for a symmetric input
+    n_coeff: int
+    #: orthogonal basis (N_B = 1 in Eq. 10) ?
+    orthogonal: bool = False
+    #: max_jl ||B^jl||_F  (R in Assumption 4.7)
+    R: float = 1.0
+    #: all basis matrices PSD (required by BL3)?
+    psd: bool = False
+
+    def h(self, A: jax.Array) -> jax.Array:
+        """Coefficient matrix of A (same d×d shape; zeros where unused)."""
+        raise NotImplementedError
+
+    def reconstruct(self, H: jax.Array) -> jax.Array:
+        """Σ_{jl} H_{jl} B^{jl}."""
+        raise NotImplementedError
+
+    def coeff_count(self) -> int:
+        return self.n_coeff
+
+
+@dataclasses.dataclass
+class StandardBasis(MatrixBasis):
+    """Example 4.1: B^{jl} = e_j e_l^T.  h(A) = A.  BL1 ≡ FedNL here."""
+    d: int
+
+    def __post_init__(self):
+        self.n_coeff = self.d * self.d
+        self.orthogonal = True
+        self.R = 1.0
+
+    def h(self, A):
+        return A
+
+    def reconstruct(self, H):
+        return H
+
+
+@dataclasses.dataclass
+class SymmetricBasis(MatrixBasis):
+    """Example 4.2 specialized to symmetric A: h(A) = lower-triangular part.
+
+    B^{jl} (j>l) has 1 at (j,l) and (l,j); B^{jj} has 1 at (j,j).
+    Reconstruction of a lower-triangular coefficient matrix gives back A.
+    """
+    d: int
+
+    def __post_init__(self):
+        self.n_coeff = self.d * (self.d + 1) // 2
+        self.orthogonal = True  # the B^{jl} are mutually orthogonal in <.,.>_F
+        self.R = float(np.sqrt(2.0))
+
+    def h(self, A):
+        return jnp.tril(A)
+
+    def reconstruct(self, H):
+        return jnp.tril(H) + jnp.tril(H, -1).T
+
+
+@dataclasses.dataclass
+class PSDBasis(MatrixBasis):
+    """Example 5.1: for j≠l, B^{jl} has ones at (j,l),(l,j),(j,j),(l,l) — PSD.
+
+    For a symmetric A with coefficients c_{jl} (j≥l):
+        A_{jl} = c_{jl}                (j≠l)
+        A_{jj} = c_{jj} + Σ_{l≠j} c_{max(j,l),min(j,l)}
+    so  h: c_{jl} = A_{jl} (j>l),  c_{jj} = A_{jj} − Σ_{l≠j} A_{jl}.
+    Not orthogonal (N_B = d² in Eq. 10).  R = 2 (‖B^{jl}‖_F = 2 for j≠l).
+    """
+    d: int
+
+    def __post_init__(self):
+        self.n_coeff = self.d * (self.d + 1) // 2
+        self.orthogonal = False
+        self.R = 2.0
+        self.psd = True
+
+    def h(self, A):
+        off = jnp.tril(A, -1)
+        rowsum = jnp.sum(A, axis=1) - jnp.diag(A)  # Σ_{l≠j} A_{jl}
+        diag = jnp.diag(A) - rowsum
+        return off + jnp.diag(diag)
+
+    def reconstruct(self, H):
+        # H lower-triangular coefficient matrix
+        off = jnp.tril(H, -1)
+        sym_off = off + off.T
+        contrib = jnp.sum(sym_off, axis=1)         # Σ_{l≠j} c_.. landing on (j,j)
+        diag = jnp.diag(H) + contrib
+        return sym_off + jnp.diag(diag)
+
+
+@dataclasses.dataclass
+class DataOuterBasis(MatrixBasis):
+    """§2.3 data-induced basis: {v_t v_l^T}_{t,l∈[r]} completed arbitrarily.
+
+    V ∈ R^{d×r} has orthonormal columns spanning the client's data subspace
+    (scipy.linalg.orth analogue, computed with jnp SVD).  For any A in the span
+    (all GLM Hessians minus the λI ridge term are),  Γ = Vᵀ A V  and
+    A = V Γ Vᵀ exactly.  Coefficients live in the top-left r×r block.
+
+    The ridge term λI is handled *analytically* by the algorithms (the server
+    knows λ), exactly as the paper's experiments do — only the data part of the
+    Hessian is ever communicated.
+    """
+    V: jax.Array  # (d, r), orthonormal columns
+
+    def __post_init__(self):
+        self.d = int(self.V.shape[0])
+        self.r = int(self.V.shape[1])
+        self.n_coeff = self.r * self.r
+        self.orthogonal = True  # orthonormal v ⇒ <v_t v_l^T, v_p v_q^T>_F = δ
+        self.R = 1.0
+
+    def h(self, A):
+        gamma = self.V.T @ A @ self.V
+        out = jnp.zeros((self.d, self.d), A.dtype)
+        return out.at[: self.r, : self.r].set(gamma)
+
+    def reconstruct(self, H):
+        gamma = H[: self.r, : self.r]
+        return self.V @ gamma @ self.V.T
+
+
+def orth_basis_from_data(A_data: jax.Array, rcond: float = 1e-10) -> DataOuterBasis:
+    """Orthonormal basis of the row space of the client's data matrix (m, d).
+
+    Mirrors the paper's use of scipy.linalg.orth on the feature matrix (§6.1).
+    """
+    # SVD of (m, d): row space spanned by right singular vectors
+    _, s, vt = jnp.linalg.svd(A_data, full_matrices=False)
+    tol = s.max() * max(A_data.shape) * rcond
+    r = int(jnp.sum(s > tol))
+    r = max(r, 1)
+    V = vt[:r].T  # (d, r)
+    return DataOuterBasis(V=V)
+
+
+def basis_transmission_bits(basis: MatrixBasis, float_bits: int = 64) -> float:
+    """One-time cost of shipping the basis to the server (Table 1: rd floats).
+
+    Standard/symmetric/PSD bases are conventions — zero marginal cost.
+    """
+    if isinstance(basis, DataOuterBasis):
+        return float(basis.d * basis.r * float_bits)
+    return 0.0

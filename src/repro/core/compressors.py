@@ -1,0 +1,307 @@
+"""Matrix/vector compression operators (paper §3, §A.2, §A.3).
+
+Every compressor maps a tensor to a *compressed-dense* tensor of the same shape
+(the zeros are what got dropped) plus an exact bit count for the wire format it
+models.  Two contract classes:
+
+  * contraction (Eq. 6):  E‖A − C(A)‖_F² ≤ (1−δ)‖A‖_F²
+  * unbiased   (Eq. 7):  E[C(A)] = A,  E‖C(A)‖_F² ≤ (ω+1)‖A‖_F²
+
+All operators work on arbitrary-shape arrays (treated as flattened vectors in
+R^{numel}); matrix-specific ones (Rank-R) require 2-D input.
+
+Bit accounting uses FLOAT_BITS per float and INDEX_BITS per transmitted index
+(the paper counts floats; we count bits so dithering/natural compression are
+comparable, matching the plots' "communicated bits per node" axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FLOAT_BITS = 64  # the paper's experiments (NumPy) use float64 coefficients
+INDEX_BITS = 32
+
+
+class Compressor:
+    """Base class. Subclasses set `is_unbiased`, `delta` or `omega`."""
+
+    is_unbiased: bool = False
+    #: contraction parameter δ ∈ (0,1]  (contractive compressors)
+    delta: Optional[float] = None
+    #: variance parameter ω ≥ 0        (unbiased compressors)
+    omega: Optional[float] = None
+    #: True if C(A) is deterministic given A (Asm. 4.4(ii)/4.6(ii))
+    deterministic: bool = False
+
+    def __call__(self, key: Optional[jax.Array], x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Returns (compressed_dense, bits_transmitted)."""
+        raise NotImplementedError
+
+    # default recommended step size for Hessian learning
+    def alpha(self) -> float:
+        if self.is_unbiased:
+            return 1.0 / (self.omega + 1.0)
+        return 1.0
+
+
+@dataclasses.dataclass
+class Identity(Compressor):
+    """No compression; full tensor on the wire."""
+    is_unbiased = True
+    omega = 0.0
+    delta = 1.0
+    deterministic = True
+
+    def __call__(self, key, x):
+        return x, jnp.asarray(x.size * FLOAT_BITS, jnp.float64)
+
+
+@dataclasses.dataclass
+class TopK(Compressor):
+    """Greedy sparsification (Eq. 21): keep K largest-|.| entries.
+
+    Contractive with δ = K/numel.  Deterministic.
+    """
+    k: int
+    symmetrize: bool = False  # apply to upper-triangular half, mirror (paper §A.2)
+
+    def __post_init__(self):
+        self.deterministic = True
+
+    def __call__(self, key, x):
+        shape = x.shape
+        if self.symmetrize and x.ndim == 2 and shape[0] == shape[1]:
+            d = shape[0]
+            iu = jnp.triu_indices(d)
+            v = x[iu]
+            _, idx = jax.lax.top_k(jnp.abs(v), min(self.k, v.size))
+            mask_flat = jnp.zeros(v.size, bool).at[idx].set(True)
+            vals = jnp.where(mask_flat, v, 0.0)
+            out = jnp.zeros_like(x).at[iu].set(vals)
+            out = out + jnp.triu(out, 1).T
+            bits = idx.size * (FLOAT_BITS + INDEX_BITS)
+            return out, jnp.asarray(bits, jnp.float64)
+        v = x.reshape(-1)
+        kk = min(self.k, v.size)
+        _, idx = jax.lax.top_k(jnp.abs(v), kk)
+        out = jnp.zeros_like(v).at[idx].set(v[idx]).reshape(shape)
+        return out, jnp.asarray(kk * (FLOAT_BITS + INDEX_BITS), jnp.float64)
+
+    @property
+    def _delta_for(self):
+        return None  # depends on input size; use delta_for(numel)
+
+    def delta_for(self, numel: int) -> float:
+        return min(self.k, numel) / numel
+
+
+@dataclasses.dataclass
+class RandK(Compressor):
+    """Random sparsification (Eq. 22): unbiased, ω = numel/K − 1."""
+    k: int
+
+    def __post_init__(self):
+        self.is_unbiased = True
+
+    def __call__(self, key, x):
+        v = x.reshape(-1)
+        n = v.size
+        kk = min(self.k, n)
+        idx = jax.random.choice(key, n, shape=(kk,), replace=False)
+        scale = n / kk
+        out = jnp.zeros_like(v).at[idx].set(v[idx] * scale).reshape(x.shape)
+        return out, jnp.asarray(kk * (FLOAT_BITS + INDEX_BITS), jnp.float64)
+
+    def omega_for(self, numel: int) -> float:
+        return numel / min(self.k, numel) - 1.0
+
+    def alpha_for(self, numel: int) -> float:
+        return 1.0 / (self.omega_for(numel) + 1.0)
+
+
+@dataclasses.dataclass
+class RankR(Compressor):
+    """Low-rank approximation via SVD (Eq. 19–20).
+
+    Contractive with δ = R/d on d×d matrices [Safaryan et al., 2021].
+    Symmetric input ⇒ symmetric output automatically.
+    """
+    r: int
+
+    def __post_init__(self):
+        self.deterministic = True
+
+    def __call__(self, key, x):
+        assert x.ndim == 2, "Rank-R needs a matrix"
+        u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+        rr = min(self.r, s.size)
+        out = (u[:, :rr] * s[:rr]) @ vt[:rr, :]
+        d = min(x.shape)
+        # wire format: R singular triples (u_i, σ_i, v_i)
+        bits = rr * (x.shape[0] + x.shape[1] + 1) * FLOAT_BITS
+        return out, jnp.asarray(bits, jnp.float64)
+
+    def delta_for(self, d: int) -> float:
+        return min(self.r, d) / d
+
+
+def _dither(key, x, s, q=2):
+    """Random dithering (Eq. 17–18) with s levels, q-norm."""
+    v = x.reshape(-1)
+    norm = jnp.linalg.norm(v, ord=q)
+    norm = jnp.where(norm == 0, 1.0, norm)
+    a = jnp.abs(v) / norm * s          # in [0, s]
+    low = jnp.floor(a)
+    pup = a - low                       # P[round up]
+    up = jax.random.bernoulli(key, pup.astype(jnp.float32))
+    lev = low + up
+    out = jnp.sign(v) * norm * lev / s
+    out = jnp.where(jnp.linalg.norm(x.reshape(-1), ord=q) == 0, 0.0, out)
+    # wire: 1 norm float + per-entry (sign + level) ~ (1 + ceil(log2(s+1))) bits
+    lev_bits = int(jnp.ceil(jnp.log2(s + 1)))
+    bits = FLOAT_BITS + v.size * (1 + lev_bits)
+    return out.reshape(x.shape), jnp.asarray(bits, jnp.float64)
+
+
+@dataclasses.dataclass
+class RandomDithering(Compressor):
+    """Unbiased; ω ≤ min(d/s², √d/s) for q=2 [Alistarh et al. 2017]."""
+    s: int
+    q: int = 2
+
+    def __post_init__(self):
+        self.is_unbiased = True
+
+    def __call__(self, key, x):
+        return _dither(key, x, self.s, self.q)
+
+    def omega_for(self, numel: int) -> float:
+        return min(numel / self.s**2, numel**0.5 / self.s)
+
+
+@dataclasses.dataclass
+class NaturalCompression(Compressor):
+    """Round |x| to a power of two, randomly up/down (unbiased, ω = 1/8).
+
+    Wire format: sign + 8-bit exponent = 9 bits/entry.
+    """
+    def __post_init__(self):
+        self.is_unbiased = True
+        self.omega = 1.0 / 8.0
+
+    def __call__(self, key, x):
+        v = x.reshape(-1)
+        nz = v != 0
+        absv = jnp.where(nz, jnp.abs(v), 1.0)
+        e = jnp.floor(jnp.log2(absv))
+        low = jnp.exp2(e)
+        pup = (absv - low) / low        # ∈ [0,1): P[round to 2^{e+1}]
+        up = jax.random.bernoulli(key, pup.astype(jnp.float32))
+        out = jnp.sign(v) * low * jnp.where(up, 2.0, 1.0)
+        out = jnp.where(nz, out, 0.0).reshape(x.shape)
+        return out, jnp.asarray(v.size * 9, jnp.float64)
+
+
+@dataclasses.dataclass
+class ComposedTopK(Compressor):
+    """Top-K followed by an unbiased compressor on the kept values (§A.5).
+
+    RTop-K: inner = RandomDithering(s=√K);  NTop-K: inner = NaturalCompression.
+    Contractive (composition of a contraction with an unbiased op, scaled by
+    1/(ω+1), remains a contraction — Qian et al. 2021).
+    """
+    k: int
+    inner: Compressor
+    unbias_correct: bool = True
+
+    def __post_init__(self):
+        self.deterministic = False
+
+    def __call__(self, key, x):
+        v = x.reshape(-1)
+        kk = min(self.k, v.size)
+        _, idx = jax.lax.top_k(jnp.abs(v), kk)
+        kept = v[idx]
+        cv, inner_bits = self.inner(key, kept)
+        if self.unbias_correct:
+            om = getattr(self.inner, "omega", None)
+            if om is None:
+                om = self.inner.omega_for(kk)
+            cv = cv / (om + 1.0)
+        out = jnp.zeros_like(v).at[idx].set(cv).reshape(x.shape)
+        bits = inner_bits + kk * INDEX_BITS
+        return out, bits
+
+
+@dataclasses.dataclass
+class ComposedRankR(Compressor):
+    """C1 of §3: Rank-R with unbiasedly-compressed singular vectors.
+
+    δ = R / (d (ω₁+1)(ω₂+1))  (Prop. 3.2).  We use a_i = b_i = 1.
+    symmetrize=True gives C2 (Lemma 3.1 (ii)).
+    """
+    r: int
+    inner_u: Compressor
+    inner_v: Compressor
+    symmetrize: bool = True
+
+    def __call__(self, key, x):
+        assert x.ndim == 2
+        u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+        rr = min(self.r, s.size)
+        keys = jax.random.split(key, 2 * rr)
+        om1 = self.inner_u.omega if self.inner_u.omega is not None else self.inner_u.omega_for(x.shape[0])
+        om2 = self.inner_v.omega if self.inner_v.omega is not None else self.inner_v.omega_for(x.shape[1])
+        out = jnp.zeros_like(x)
+        bits = jnp.asarray(rr * FLOAT_BITS, jnp.float64)  # singular values
+        for i in range(rr):
+            qu, bu = self.inner_u(keys[2 * i], u[:, i])
+            qv, bv = self.inner_v(keys[2 * i + 1], vt[i, :])
+            out = out + s[i] * jnp.outer(qu, qv) / ((om1 + 1.0) * (om2 + 1.0))
+            bits = bits + bu + bv
+        was_sym = jnp.allclose(x, x.T)
+        if self.symmetrize:
+            out = jnp.where(was_sym, (out + out.T) / 2.0, out)
+        return out, bits
+
+
+@dataclasses.dataclass
+class BernoulliLazy(Compressor):
+    """Lazy Bernoulli compressor (§A.8): send full tensor w.p. p, else zero.
+
+    Unbiased with ω = 1/p − 1.
+    """
+    p: float
+
+    def __post_init__(self):
+        self.is_unbiased = True
+        self.omega = 1.0 / self.p - 1.0
+
+    def __call__(self, key, x):
+        send = jax.random.bernoulli(key, self.p)
+        out = jnp.where(send, x / self.p, jnp.zeros_like(x))
+        bits = jnp.where(send, x.size * FLOAT_BITS, 0).astype(jnp.float64)
+        return out, bits
+
+
+def rtopk(k: int) -> ComposedTopK:
+    s = max(1, int(round(k ** 0.5)))
+    return ComposedTopK(k=k, inner=RandomDithering(s=s))
+
+
+def ntopk(k: int) -> ComposedTopK:
+    return ComposedTopK(k=k, inner=NaturalCompression())
+
+
+def rrankr(r: int, d: int) -> ComposedRankR:
+    s = max(1, int(round(d ** 0.5)))
+    return ComposedRankR(r=r, inner_u=RandomDithering(s=s), inner_v=RandomDithering(s=s))
+
+
+def nrankr(r: int) -> ComposedRankR:
+    return ComposedRankR(r=r, inner_u=NaturalCompression(), inner_v=NaturalCompression())

@@ -1,0 +1,1 @@
+from .bldnn import BLDNNConfig, make_fed_train_step, layer_bases_from_params  # noqa: F401

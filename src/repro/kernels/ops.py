@@ -1,0 +1,66 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`INTERPRET` defaults to True on CPU (this container) so every op runs the
+kernel body through the Pallas interpreter; on a real TPU backend set
+repro.kernels.ops.INTERPRET = False (or env REPRO_PALLAS_COMPILE=1) to lower
+to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash
+from .ssd_scan import ssd_scan as _ssd
+from .tiled_matmul import matmul as _matmul
+from .topk_threshold import topk_threshold as _topk
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def matmul(a, b, out_dtype=jnp.float32, **tiles):
+    return _matmul(a, b, interpret=INTERPRET, out_dtype=out_dtype, **tiles)
+
+
+def basis_project(V, A, **tiles):
+    """Γ = Vᵀ A V — the per-iteration BL coefficient computation (Eq. 5)."""
+    T = matmul(A, V, **tiles)          # (d, r)
+    return matmul(V.T, T, **tiles)     # (r, r)
+
+
+def glm_hessian(A, w, lam, **tiles):
+    """(1/m) Aᵀ diag(w) A + λI — fused GLM Hessian (Eq. 3)."""
+    m, d = A.shape
+    Aw = A * w[:, None].astype(A.dtype)
+    H = matmul(A.T, Aw, **tiles) / m
+    return H + lam * jnp.eye(d, dtype=H.dtype)
+
+
+def topk_compress(x, k: int):
+    """Histogram-threshold Top-K (see topk_threshold.py).  Returns
+    (compressed_dense, kept_count)."""
+    out, _, kept = _topk(x, k, interpret=INTERPRET)
+    return out, kept
+
+
+def attention(q, k, v, *, causal=True, window: Optional[int] = None,
+              bq: int = 128, bk: int = 128):
+    """Flash attention over (B, S, H, hd) with GQA: kv heads broadcast via
+    index mapping (fold heads into batch; repeat kv cheaply by gather)."""
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    rep = H // KVH
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, hd)
+    o = _flash(qf, kf, vf, causal=causal, window=window, bq=bq, bk=bk,
+               interpret=INTERPRET)
+    return o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+def ssd(x, dt, A, Bm, Cm, chunk: int = 128):
+    """Mamba2 SSD over (BH, S, hd) heads-folded layout."""
+    return _ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=INTERPRET)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=jnp.float32):
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(out_dtype)
+
+
+def basis_project_ref(V, A):
+    """Γ = Vᵀ A V (Eq. 5 coefficients in the data-induced basis)."""
+    Vf = V.astype(jnp.float32)
+    return Vf.T @ A.astype(jnp.float32) @ Vf
+
+
+def glm_hessian_ref(A, w, lam):
+    """(1/m) Aᵀ diag(w) A + λI."""
+    m = A.shape[0]
+    Af = A.astype(jnp.float32)
+    H = (Af * w.astype(jnp.float32)[:, None]).T @ Af / m
+    return H + lam * jnp.eye(A.shape[1], dtype=jnp.float32)
+
+
+def topk_threshold_ref(x, t):
+    """Everything with |x| ≥ t (the kernel's pass-2 semantics)."""
+    return jnp.where(jnp.abs(x.astype(jnp.float32)) >= t, x, jnp.zeros_like(x))
+
+
+def attention_ref(q, k, v, causal=True, window: Optional[int] = None):
+    """Exact softmax attention (BH, S, hd)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd**-0.5
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window is not None:
+        mask = mask & (ki > qi - window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Sequential state-space recurrence (the SSD ground truth):
+       S_t = exp(dt_t A) S_{t-1} + dt_t x_t ⊗ B_t ;  y_t = C_t · S_t."""
+    BH, S, hd = x.shape
+    N = Bm.shape[-1]
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp
+        dec = jnp.exp(dtt * A)                       # (BH,)
+        s = s * dec[:, None, None] + dtt[:, None, None] * jnp.einsum(
+            "bd,bn->bdn", xt.astype(jnp.float32), bt.astype(jnp.float32))
+        y = jnp.einsum("bn,bdn->bd", ct.astype(jnp.float32), s)
+        return s, y
+
+    s0 = jnp.zeros((BH, hd, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2), dt.astype(jnp.float32).T,
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype)

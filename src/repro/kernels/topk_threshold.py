@@ -1,0 +1,107 @@
+"""Top-K compression as a sort-free two-pass histogram → threshold → mask
+pipeline (TPU adaptation of the paper's Top-K compressor — DESIGN.md §HW).
+
+GPU implementations of Top-K sort (or radix-select) the |values|; TPU kernels
+have no efficient global sort, so we:
+
+  pass 1 (`histogram`): per-tile NBUCKET-bin histogram of |x| / max|x|,
+         accumulated across the sequential grid into one output;
+  host:  exclusive cumsum of the (tiny) histogram picks the bucket whose
+         cumulative count crosses K → magnitude threshold t;
+  pass 2 (`sparsify`): out = where(|x| ≥ t, x, 0), tiled elementwise.
+
+The result keeps between K and K + (bucket collisions) entries — the paper's
+contraction property (Eq. 6) holds for ANY superset of the top-K support, so
+correctness is preserved; the wire-format bit count uses the actual kept
+count.  Buckets are spaced on |x|^(1/2) to resolve the heavy tail better.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NBUCKETS = 512
+
+
+def _hist_kernel(x_ref, maxv_ref, hist_ref, *, nbuckets: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    mx = maxv_ref[0]
+    a = jnp.abs(x) / jnp.maximum(mx, 1e-30)
+    a = jnp.sqrt(a)                       # heavy-tail resolving spacing
+    b = jnp.clip((a * nbuckets).astype(jnp.int32), 0, nbuckets - 1)
+    onehot = (b[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, nbuckets), 2))
+    hist_ref[...] += jnp.sum(onehot, axis=(0, 1)).astype(jnp.float32)
+
+
+def _mask_kernel(x_ref, t_ref, o_ref):
+    x = x_ref[...]
+    t = t_ref[0]
+    o_ref[...] = jnp.where(jnp.abs(x.astype(jnp.float32)) >= t, x, jnp.zeros_like(x))
+
+
+def _tile(n, want):
+    t = min(want, n)
+    while n % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "nbuckets"))
+def topk_threshold(x: jax.Array, k: int, *, interpret: bool = True,
+                   nbuckets: int = NBUCKETS):
+    """Returns (compressed_dense, threshold, kept_count)."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.size
+    cols = _tile(n, 4096)
+    rows = n // cols
+    x2 = flat.reshape(rows, cols)
+    br = _tile(rows, 8)
+    bc = _tile(cols, 1024)
+    grid_r, grid_c = rows // br, cols // bc
+
+    maxv = jnp.max(jnp.abs(flat)).astype(jnp.float32).reshape(1)
+
+    hist = pl.pallas_call(
+        functools.partial(_hist_kernel, nbuckets=nbuckets),
+        grid=(grid_r * grid_c,),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i: (i // (cols // bc), i % (cols // bc))),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((nbuckets,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nbuckets,), jnp.float32),
+        interpret=interpret,
+    )(x2, maxv)
+
+    # host-side (tiny): find the magnitude threshold whose tail count ≥ k
+    tail = jnp.cumsum(hist[::-1])[::-1]            # count of |x| in bucket ≥ b
+    kk = min(k, n)
+    bucket = jnp.argmax(tail <= kk)                 # first bucket from below w/ tail ≤ k
+    bucket = jnp.where(tail[bucket] < kk, jnp.maximum(bucket - 1, 0), bucket)
+    frac = bucket.astype(jnp.float32) / nbuckets
+    t = (frac ** 2) * maxv[0]                       # invert sqrt spacing
+
+    out = pl.pallas_call(
+        _mask_kernel,
+        grid=(grid_r * grid_c,),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i: (i // (cols // bc), i % (cols // bc))),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i: (i // (cols // bc), i % (cols // bc))),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=interpret,
+    )(x2, t.reshape(1))
+
+    kept = jnp.sum(out != 0)
+    return out.reshape(shape), t, kept

@@ -1,0 +1,87 @@
+"""The four assigned input shapes + ShapeDtypeStruct input_specs builders.
+
+input_specs(cfg, shape_name, rules) returns (step_kind, kwargs) where kwargs
+are ShapeDtypeStructs (weak-type-correct, sharded, zero allocation) matching
+the step function's signature for that shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..sharding.rules import Rules, cache_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (DESIGN.md §skips)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: no sub-quadratic variant in source config"
+    return True, ""
+
+
+def _sds(shape, dtype, rules: Rules, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(rules.mesh, spec))
+
+
+def batch_struct(cfg: ModelConfig, shape: InputShape, rules: Rules,
+                 act_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    B = shape.global_batch
+    bspec = P(rules.amap["batch"], None)
+    if shape.kind == "train":
+        toks = _sds((B, shape.seq_len + 1), jnp.int32, rules, bspec)
+    elif shape.kind == "prefill":
+        toks = _sds((B, shape.seq_len), jnp.int32, rules, bspec)
+    else:
+        toks = _sds((B, 1), jnp.int32, rules, bspec)
+    batch: Dict[str, Any] = {"tokens": toks}
+    if cfg.n_enc_layers:
+        batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), act_dtype, rules,
+                               P(rules.amap["batch"], None, None))
+    if cfg.n_prefix_embeds and shape.kind != "decode":
+        batch["prefix_embeds"] = _sds((B, cfg.n_prefix_embeds, cfg.d_model),
+                                      act_dtype, rules,
+                                      P(rules.amap["batch"], None, None))
+    return batch
+
+
+def cache_struct(cfg: ModelConfig, shape: InputShape, rules: Rules,
+                 dtype=jnp.bfloat16):
+    # prefill caches must also hold the stubbed VLM prefix embeddings
+    max_seq = shape.seq_len
+    if shape.kind == "prefill" and cfg.n_prefix_embeds:
+        max_seq += cfg.n_prefix_embeds
+    shapes = M.cache_shapes(cfg, shape.global_batch, max_seq, dtype)
+    specs = cache_specs(shapes, cfg, rules)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, specs,
+    )
+
+
+def pos_struct(rules: Rules):
+    return jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(rules.mesh, P()))

@@ -1,0 +1,89 @@
+"""Production training launcher.
+
+On the real cluster:
+  python -m repro.launch.train --arch gemma3-4b --shape train_4k \
+      [--multi-pod] [--steps N] [--fed]
+
+builds the production mesh, shards params/optimizer with the rules in
+repro.sharding, and runs the jitted train_step over the synthetic pipeline
+(swap data.make_batch_iterator for the real corpus reader in deployment).
+
+On this CPU container the same entry point runs with --debug (1-device mesh,
+reduced config) — the code path is identical, only mesh/config size differ.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.data import make_batch_iterator
+from repro.launch import shapes as SH
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models import model as M
+from repro.models.steps import make_train_step, stub_inputs
+from repro.optim import adamw_init
+from repro.sharding.rules import make_rules, param_specs, wants_seq_parallel
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--debug", action="store_true",
+                    help="1-device mesh + reduced config (CPU container)")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+
+    if args.debug:
+        cfg = get_config(args.arch).reduced()
+        mesh = make_debug_mesh(1, 1)
+        B, S = 4, 64
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        shp = SH.SHAPES[args.shape]
+        B, S = shp.global_batch, shp.seq_len
+
+    rules = make_rules(mesh, batch_size=B, seq_parallel=wants_seq_parallel(cfg, mesh))
+    with mesh:
+        params = M.init_params(jax.random.PRNGKey(0), cfg,
+                               jnp.float32 if args.debug else jnp.bfloat16)
+        pspecs = param_specs(params, cfg, rules)
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if not args.debug else x,
+            params, pspecs)
+        opt = adamw_init(params, jnp.float32 if args.debug else jnp.bfloat16)
+        step = jax.jit(make_train_step(cfg, rules if not args.debug else None,
+                                       lr=args.lr, remat=not args.debug),
+                       donate_argnums=(0, 1))
+        extras = {}
+        if cfg.n_enc_layers:
+            extras["frames"] = (B, cfg.enc_seq, cfg.d_model)
+        if cfg.n_prefix_embeds:
+            extras["prefix_embeds"] = (B, cfg.n_prefix_embeds, cfg.d_model)
+        it = make_batch_iterator(cfg.vocab_size, S + 1, B, seed=0, extras=extras,
+                                 dtype=jnp.float32 if args.debug else jnp.bfloat16)
+        t0 = time.time()
+        for i in range(args.steps):
+            batch = next(it)
+            if not args.debug:
+                bspec = NamedSharding(mesh, P(rules.amap["batch"], None))
+                batch = {k: jax.device_put(v, bspec if v.ndim == 2 else
+                                           NamedSharding(mesh, P(rules.amap["batch"], None, None)))
+                         for k, v in batch.items()}
+            params, opt, m = step(params, opt, batch)
+            print(f"step {i:4d} loss {float(m['loss']):.4f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

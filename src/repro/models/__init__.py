@@ -1,0 +1,2 @@
+from .config import LayerSpec, ModelConfig, MoEConfig, SSMConfig  # noqa: F401
+from . import layers, model, steps  # noqa: F401

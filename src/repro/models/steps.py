@@ -1,0 +1,183 @@
+"""Train / prefill / decode step factories.
+
+Each factory closes over (cfg, rules) and returns a pure function suitable for
+jax.jit + .lower().compile() in the dry-run, and for direct execution in the
+smoke tests / examples.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .config import ModelConfig
+from ..optim import adamw_update
+
+
+def _xent(logits: jax.Array, labels: jax.Array, rules) -> jax.Array:
+    """Mean next-token cross entropy over a vocab-sharded logits tensor.
+
+    The label log-prob is extracted with a masked sum instead of
+    take_along_axis: a vocab-indexed gather forces XLA to all-gather the full
+    (B, S, V) logits (13 GB for mamba2 train_4k); the masked sum keeps every
+    shard local and reduces with a scalar all-reduce.
+    """
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    vocab_iota = jnp.arange(lg.shape[-1], dtype=labels.dtype)
+    onehot = (labels[..., None] == vocab_iota)
+    ll = jnp.sum(jnp.where(onehot, lg, 0.0), axis=-1)
+    return jnp.mean(lse - ll)
+
+
+def make_fused_vocab_xent(cfg: ModelConfig, rules):
+    """Vocab-parallel fused cross entropy (Megatron-style), custom_vjp.
+
+    Motivation (measured in the dry-run, see EXPERIMENTS.md): letting autodiff
+    differentiate `logits = h @ W; CE(logits)` makes XLA all-gather the full
+    f32 (B, S, V) cotangent along the vocab shard (13.2 GB/device for mamba2
+    train_4k) because it prefers gathering dlogits over an all-reduced dh.
+    The custom backward keeps dlogits vocab-sharded, contracts locally, and
+    all-reduces only the (B, S, D) dh partial — and recomputes logits instead
+    of storing them.
+    """
+    V = cfg.vocab_size
+    Vp = cfg.padded_vocab
+
+    def _logits(h, W):
+        lg = jnp.einsum("bsd,dv->bsv", h, W).astype(jnp.float32)
+        if rules is not None:
+            lg = rules.constrain(lg, ("batch", None, "vocab"))
+        if Vp != V:
+            pad = jnp.arange(Vp) >= V
+            lg = lg + jnp.where(pad, -1e30, 0.0).astype(lg.dtype)
+        return lg
+
+    @jax.custom_vjp
+    def xent(h, W, labels):
+        lg = _logits(h, W)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        onehot = labels[..., None] == jnp.arange(Vp, dtype=labels.dtype)
+        ll = jnp.sum(jnp.where(onehot, lg, 0.0), axis=-1)
+        return jnp.mean(lse - ll)
+
+    def fwd(h, W, labels):
+        return xent(h, W, labels), (h, W, labels)
+
+    def bwd(res, g):
+        h, W, labels = res
+        lg = _logits(h, W)                      # recompute (no logits storage)
+        p = jax.nn.softmax(lg, axis=-1)
+        onehot = (labels[..., None] == jnp.arange(Vp, dtype=labels.dtype))
+        n = h.shape[0] * h.shape[1]
+        dlg = (p - onehot.astype(p.dtype)) * (g / n)
+        if rules is not None:
+            dlg = rules.constrain(dlg, ("batch", None, "vocab"))
+        dlg = dlg.astype(h.dtype)
+        dh = jnp.einsum("bsv,dv->bsd", dlg, W)
+        if rules is not None:
+            dh = rules.constrain(dh, ("batch", None, None))
+        dW = jnp.einsum("bsd,bsv->dv", h, dlg)
+        return dh, dW.astype(W.dtype), None
+
+    xent.defvjp(fwd, bwd)
+    return xent
+
+
+def stub_inputs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Extra (non-token) model inputs for audio/VLM backbones (the stub
+    frontends): shape contracts only — content comes from the caller."""
+    extras: Dict[str, Any] = {}
+    if cfg.n_enc_layers:
+        extras["frames"] = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dtype)
+    if cfg.n_prefix_embeds:
+        extras["prefix_embeds"] = jnp.zeros((batch, cfg.n_prefix_embeds, cfg.d_model), dtype)
+    return extras
+
+
+def make_train_step(cfg: ModelConfig, rules, lr: float = 3e-4, remat: bool = True,
+                    microbatch: int = 1):
+    """microbatch > 1: gradient accumulation over `microbatch` slices of the
+    global batch (scan with f32 grad accumulator) — divides the per-layer
+    activation carry stack by `microbatch` at the cost of re-running the
+    (already remat'd) forward per slice (§Perf iteration 3)."""
+    xent = make_fused_vocab_xent(cfg, rules)
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        inp, labels = tokens[:, :-1], tokens[:, 1:]
+        h, _, aux = M.forward(
+            params, cfg, rules, inp,
+            prefix_embeds=batch.get("prefix_embeds"),
+            frames=batch.get("frames"),
+            remat=remat,
+            return_hidden=True,
+        )
+        P = cfg.n_prefix_embeds
+        if P:
+            h = h[:, P:, :]
+        W = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        loss = xent(h, W, labels) + aux
+        return loss, aux
+
+    def train_step(params, opt_state, batch):
+        if microbatch == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            def slice_mb(i, x):
+                mb = x.shape[0] // microbatch
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0)
+
+            def mb_body(acc, i):
+                mb_batch = jax.tree.map(lambda x: slice_mb(i, x), batch)
+                (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb_batch)
+                acc = (acc[0] + l, acc[1] + a,
+                       jax.tree.map(lambda s, gi: s + gi.astype(jnp.float32),
+                                    acc[2], g))
+                return acc, None
+
+            zero = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss, aux, gsum), _ = jax.lax.scan(
+                mb_body, zero, jnp.arange(microbatch))
+            loss, aux = loss / microbatch, aux / microbatch
+            grads = jax.tree.map(lambda g, p: (g / microbatch).astype(p.dtype),
+                                 gsum, params)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        return params, opt_state, {"loss": loss, "aux": aux}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules, max_seq: Optional[int] = None,
+                      cache_dtype=jnp.bfloat16):
+    def prefill_step(params, batch, cache):
+        tokens = batch["tokens"]
+        logits, cache, _ = M.forward(
+            params, cfg, rules, tokens,
+            cache=cache, cache_pos=jnp.asarray(0, jnp.int32),
+            prefix_embeds=batch.get("prefix_embeds"),
+            frames=batch.get("frames"),
+            remat=False,
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, rules):
+    """One decode step: next-token logits + greedy sample + cache update."""
+    def serve_step(params, batch, cache, pos):
+        tokens = batch["tokens"]  # (B, 1)
+        logits, cache, _ = M.forward(
+            params, cfg, rules, tokens,
+            cache=cache, cache_pos=pos,
+            frames=batch.get("frames"),
+            remat=False,
+        )
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step

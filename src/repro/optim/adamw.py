@@ -1,0 +1,73 @@
+"""Minimal production optimizers (pytree-based, shard-friendly).
+
+AdamW with configurable state dtype: f32 for ≤20B models; bf16 moments for
+the 70B+/MoE configs so optimizer state fits the v5e HBM budget (documented
+in DESIGN.md).  Master weights stay in the parameter dtype (bf16) with an
+f32 update path, matching common large-scale TPU practice.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, state_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads,
+    opt_state,
+    params,
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    p_new = jax.tree.map(lambda t3: t3[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda t3: t3[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda t3: t3[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return p_new, {"m": m_new, "v": v_new, "step": step}
+
+
+def sgdm_init(params, state_dtype=jnp.float32):
+    return {
+        "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def sgdm_update(grads, opt_state, params, lr: float = 1e-2, momentum: float = 0.9):
+    def upd(p, g, m):
+        m_new = momentum * m.astype(jnp.float32) + g.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * m_new).astype(p.dtype)
+        return p_new, m_new.astype(m.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt_state["mom"])
+    p_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return p_new, {"mom": m_new, "step": opt_state["step"] + 1}

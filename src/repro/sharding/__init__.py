@@ -1,0 +1,1 @@
+from .rules import Rules, make_rules, param_specs, batch_specs  # noqa: F401

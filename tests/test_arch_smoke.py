@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned architecture family runs one forward/train step + prefill + decode on
+CPU, asserting output shapes and the absence of NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model as M
+from repro.models.steps import (
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    stub_inputs,
+)
+from repro.optim import adamw_init
+
+B, S = 2, 32
+
+
+def _batch(cfg, seq, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, seq)), jnp.int32)}
+    b.update(stub_inputs(cfg, B, jnp.float32))
+    return b
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = get_config(request.param).reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return request.param, cfg, params
+
+
+def test_reduced_config_limits(arch_setup):
+    _, cfg, _ = arch_setup
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    assert cfg.n_layers <= 17  # ≤ one group for patterned archs, else 2
+
+
+def test_train_step(arch_setup):
+    name, cfg, params = arch_setup
+    batch = _batch(cfg, S + 1)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, None, remat=False))
+    p2, o2, metrics = step(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), (name, loss)
+    assert 0.0 < loss < 20.0, (name, loss)
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, x: a + float(jnp.abs(x).sum()),
+        jax.tree.map(lambda a, b: a - b, p2, params), 0.0)
+    assert delta > 0.0
+    # a second step decreases loss on the same batch (sanity of grads)
+    _, _, m2 = step(p2, o2, batch)
+    assert float(m2["loss"]) < loss + 1e-3
+
+
+def test_prefill_and_decode(arch_setup):
+    name, cfg, params = arch_setup
+    max_seq = 64
+    cache = M.init_cache(cfg, B, max_seq, jnp.float32)
+    batch = _batch(cfg, S)
+    logits, cache = jax.jit(make_prefill_step(cfg, None))(params, batch, cache)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), name
+
+    serve = jax.jit(make_serve_step(cfg, None))
+    svb = {"tokens": jnp.ones((B, 1), jnp.int32)}
+    if cfg.n_enc_layers:
+        svb["frames"] = batch["frames"]
+    tok, cache2 = serve(params, svb, cache, jnp.asarray(S, jnp.int32))
+    assert tok.shape == (B,)
+    assert (np.asarray(tok) >= 0).all() and (np.asarray(tok) < cfg.vocab_size).all()
+    # cache advanced: at least one leaf changed
+    changed = jax.tree.reduce(
+        lambda a, x: a + float(jnp.abs(x).sum()),
+        jax.tree.map(lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32)),
+                     cache2, cache), 0.0)
+    assert changed > 0.0, name
+
+
+def test_decode_matches_full_forward():
+    """Decode-with-cache must reproduce the full-context forward logits
+    (numerical parity of the KV-cache path) — checked on a dense arch."""
+    cfg = get_config("granite_20b").reduced()
+    params = M.init_params(jax.random.PRNGKey(1), cfg, jnp.float32)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 9)), jnp.int32)
+
+    # full forward over 9 tokens
+    logits_full, _, _ = M.forward(params, cfg, None, toks, remat=False)
+
+    # prefill 8 then decode token 9
+    cache = M.init_cache(cfg, 1, 16, jnp.float32)
+    _, cache = make_prefill_step(cfg, None)(params, {"tokens": toks[:, :8]}, cache)
+    logits_dec, _, _ = M.forward(params, cfg, None, toks[:, 8:9], cache=cache,
+                                 cache_pos=jnp.asarray(8, jnp.int32), remat=False)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[0, 0]), np.asarray(logits_full[0, -1]),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_full_forward_mamba():
+    """Same parity check for the SSM recurrence (chunked scan vs step)."""
+    cfg = get_config("mamba2_370m").reduced()
+    params = M.init_params(jax.random.PRNGKey(1), cfg, jnp.float32)
+    rng = np.random.default_rng(4)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 9)), jnp.int32)
+    logits_full, _, _ = M.forward(params, cfg, None, toks, remat=False)
+    cache = M.init_cache(cfg, 1, 16, jnp.float32)
+    _, cache = make_prefill_step(cfg, None)(params, {"tokens": toks[:, :8]}, cache)
+    logits_dec, _, _ = M.forward(params, cfg, None, toks[:, 8:9], cache=cache,
+                                 cache_pos=jnp.asarray(8, jnp.int32), remat=False)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[0, 0]), np.asarray(logits_full[0, -1]),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_ring_cache_matches_window_mask():
+    """Gemma3-style ring cache decode == full cache with window masking."""
+    from repro.models.config import LayerSpec, ModelConfig
+    cfg = ModelConfig(
+        name="win-test", n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+        head_dim=32, d_ff=128, vocab_size=97,
+        group=(LayerSpec(window=4),), max_seq=64)
+    params = M.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+    T = 12
+    toks = jnp.asarray(rng.integers(0, 97, (1, T + 1)), jnp.int32)
+
+    # reference: full forward with window mask
+    logits_full, _, _ = M.forward(params, cfg, None, toks, remat=False)
+
+    # ring: prefill 8 (window 4 ring), then decode tokens 8..T
+    cache = M.init_cache(cfg, 1, 8, jnp.float32)   # ring size = window = 4
+    assert cache["l0"]["k"].shape[2] == 4
+    _, cache = make_prefill_step(cfg, None)(params, {"tokens": toks[:, :8]}, cache)
+    outs = []
+    for t in range(8, T + 1):
+        lg, cache, _ = M.forward(params, cfg, None, toks[:, t:t+1], cache=cache,
+                                 cache_pos=jnp.asarray(t, jnp.int32), remat=False)
+        outs.append(np.asarray(lg[0, 0]))
+    ref = np.asarray(logits_full[0, 8:])
+    np.testing.assert_allclose(np.stack(outs), ref, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,131 @@
+"""Compressor contract tests (paper §3): contraction Eq. 6, unbiasedness Eq. 7,
+symmetrization Lemma 3.1, composition Prop. 3.2 — incl. hypothesis sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressors as C
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape))
+
+
+def _mc_expect(comp, x, trials=300, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    outs = [comp(k, x)[0] for k in keys]
+    return jnp.mean(jnp.stack(outs), 0), outs
+
+
+# ----------------------------- contraction ---------------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(4, 12),
+    k=st.integers(1, 10),
+    seed=st.integers(0, 1000),
+)
+def test_topk_contraction(d, k, seed):
+    x = _rand((d, d), seed)
+    out, bits = C.TopK(k=k)(None, x)
+    lhs = float(jnp.sum((x - out) ** 2))
+    rhs = (1 - min(k, d * d) / (d * d)) * float(jnp.sum(x**2))
+    assert lhs <= rhs + 1e-9
+    assert float(bits) == min(k, d * d) * (C.FLOAT_BITS + C.INDEX_BITS)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.integers(3, 10), r=st.integers(1, 4), seed=st.integers(0, 100))
+def test_rankr_contraction(d, r, seed):
+    x = _rand((d, d), seed)
+    out, _ = C.RankR(r=r)(None, x)
+    lhs = float(jnp.sum((x - out) ** 2))
+    rhs = (1 - min(r, d) / d) * float(jnp.sum(x**2))
+    assert lhs <= rhs + 1e-9
+
+
+def test_rankr_symmetric_in_symmetric_out():
+    x = _rand((8, 8), 3)
+    x = (x + x.T) / 2
+    out, _ = C.RankR(r=2)(None, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out).T, atol=1e-10)
+
+
+def test_topk_symmetrize():
+    x = _rand((8, 8), 3)
+    x = (x + x.T) / 2
+    out, _ = C.TopK(k=5, symmetrize=True)(None, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out).T, atol=1e-12)
+    # Lemma 3.1: symmetrized compressor still a contraction (δ = K/N_tri)
+    lhs = float(jnp.sum((x - out) ** 2))
+    assert lhs <= float(jnp.sum(x**2)) + 1e-9
+
+
+# ----------------------------- unbiasedness --------------------------------
+@pytest.mark.parametrize(
+    "mk",
+    [
+        lambda: C.RandK(k=5),
+        lambda: C.RandomDithering(s=4),
+        lambda: C.NaturalCompression(),
+        lambda: C.BernoulliLazy(p=0.3),
+    ],
+)
+def test_unbiasedness(mk):
+    comp = mk()
+    x = _rand((6, 6), 7)
+    mean, outs = _mc_expect(comp, x, trials=600)
+    scale = float(jnp.abs(x).max())
+    err = float(jnp.abs(mean - x).max())
+    # MC error ~ std/sqrt(T); allow generous bound
+    assert err < 0.35 * scale + 0.05, err
+
+
+def test_dithering_variance_bound():
+    comp = C.RandomDithering(s=6)
+    x = _rand((50,), 2)
+    omega = comp.omega_for(50)
+    _, outs = _mc_expect(comp, x, trials=500)
+    second = np.mean([float(jnp.sum(o**2)) for o in outs])
+    assert second <= (omega + 1) * float(jnp.sum(x**2)) * 1.15
+
+
+def test_natural_compression_relative_error():
+    comp = C.NaturalCompression()
+    x = _rand((40,), 5)
+    out, _ = comp(jax.random.PRNGKey(0), x)
+    # output is sign * power of two within [|x|, 2|x|]
+    nz = np.asarray(x) != 0
+    ratio = np.asarray(out)[nz] / np.asarray(x)[nz]
+    assert (ratio > 0.49).all() and (ratio < 2.01).all()
+
+
+# ----------------------------- compositions --------------------------------
+def test_composed_rankr_contraction_prop32():
+    """Prop 3.2: δ = R/(d(ω1+1)(ω2+1)), verified in expectation."""
+    d, r = 8, 2
+    x = _rand((d, d), 11)
+    x = (x + x.T) / 2
+    comp = C.nrankr(r)
+    om = 1 / 8
+    delta = r / (d * (om + 1) ** 2)
+    errs = []
+    for t in range(200):
+        out, _ = comp(jax.random.PRNGKey(t), x)
+        errs.append(float(jnp.sum((x - out) ** 2)))
+    assert np.mean(errs) <= (1 - delta) * float(jnp.sum(x**2)) * 1.05
+
+
+def test_composed_topk_keeps_support():
+    comp = C.ntopk(6)
+    x = _rand((5, 5), 1)
+    out, _ = comp(jax.random.PRNGKey(0), x)
+    assert int(jnp.sum(out != 0)) <= 6
+
+
+def test_identity_bits():
+    x = _rand((7,), 0)
+    out, bits = C.Identity()(None, x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    assert float(bits) == 7 * C.FLOAT_BITS

@@ -1,0 +1,157 @@
+"""System-level tests: data pipeline determinism, sharding rules, dry-run
+collective parser, config registry, analysis accounting."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, ALIASES, all_configs, get_config
+from repro.data import SyntheticTokens, make_batch_iterator
+from repro.models.analysis import active_param_count, model_flops, param_count
+
+
+def test_registry_all_archs_load():
+    cfgs = all_configs()
+    assert len(cfgs) == 10
+    for a, cfg in cfgs.items():
+        assert cfg.n_layers % len(cfg.group) == 0
+    # aliases resolve
+    for alias in ALIASES:
+        assert get_config(alias).name
+
+
+def test_assigned_config_values_exact():
+    """The registry must carry the EXACT assigned hyperparameters."""
+    c = get_config("deepseek-moe-16b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (28, 2048, 16, 16)
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.n_shared) == (64, 6, 2)
+    assert c.vocab_size == 102400 and c.d_ff == 1408
+    c = get_config("mamba2-370m")
+    assert (c.n_layers, c.d_model, c.vocab_size) == (48, 1024, 50280)
+    assert c.ssm.d_state == 128
+    c = get_config("granite-20b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) == \
+        (52, 6144, 48, 1, 24576)
+    c = get_config("gemma3-4b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (34, 2560, 8, 4)
+    windows = [s.window for s in c.layer_specs()]
+    assert windows.count(None) * 5 <= len(windows)  # ≈5:1 local:global
+    c = get_config("qwen2-vl-72b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) == \
+        (80, 8192, 64, 8, 29568)
+    assert c.mrope
+    c = get_config("jamba-1.5-large-398b")
+    assert c.n_layers == 72 and len(c.group) == 8
+    mixers = [s.mixer for s in c.group]
+    assert mixers.count("attn") == 1 and mixers.count("mamba") == 7
+    c = get_config("whisper-small")
+    assert c.n_enc_layers == 12 and c.enc_seq == 1500
+
+
+def test_param_counts_match_model_cards():
+    """Total parameter counts land near the named sizes."""
+    expect = {
+        "deepseek_moe_16b": (14e9, 20e9),
+        "mamba2_370m": (0.3e9, 0.5e9),
+        "granite_20b": (18e9, 23e9),
+        "llama4_maverick_400b_a17b": (350e9, 450e9),
+        "gemma3_4b": (3.0e9, 5.5e9),
+        "whisper_small": (0.15e9, 0.35e9),
+        "codeqwen15_7b": (6e9, 9e9),
+        "qwen2_vl_72b": (62e9, 80e9),
+        "stablelm_12b": (10e9, 14e9),
+        "jamba_15_large_398b": (330e9, 430e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_active_params_a17b():
+    cfg = get_config("llama4_maverick_400b_a17b")
+    a = active_param_count(cfg)
+    assert 12e9 <= a <= 22e9, a / 1e9   # "a17b"
+    cfg = get_config("deepseek_moe_16b")
+    a = active_param_count(cfg)
+    assert 2e9 <= a <= 4.5e9, a / 1e9   # 16B total / 2.8B active
+
+
+def test_model_flops_kinds():
+    cfg = get_config("mamba2_370m")
+    t = model_flops(cfg, "train", 256, 4096)
+    p = model_flops(cfg, "prefill", 32, 32768)
+    d = model_flops(cfg, "decode", 128, 32768)
+    assert t > p > d
+    assert d == pytest.approx(2.0 * active_param_count(cfg) * 128)
+
+
+def test_data_pipeline_deterministic_and_learnable():
+    gen = SyntheticTokens(vocab_size=1000, seq_len=64, global_batch=4, seed=7)
+    b1, b2 = gen.batch(3), gen.batch(3)
+    np.testing.assert_array_equal(b1, b2)
+    assert not np.array_equal(gen.batch(3), gen.batch(4))
+    assert b1.min() >= 0 and b1.max() < 1000
+    # bigram structure: successor pairs appear more than chance
+    succ = gen.successor
+    hits = sum(int(succ[b1[i, j - 1]] == b1[i, j])
+               for i in range(4) for j in range(1, 64))
+    assert hits > 0.2 * 4 * 63
+
+
+def test_batch_iterator_extras():
+    it = make_batch_iterator(100, 16, 2, extras={"frames": (2, 8, 4)},
+                             dtype=jnp.float32)
+    b = next(it)
+    assert b["tokens"].shape == (2, 16)
+    assert b["frames"].shape == (2, 8, 4)
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+HloModule m
+%body (x: f32[8]) -> f32[8] {
+  %ag = f32[64,128]{1,0} all-gather(%p), dimensions={0}
+  %ar = bf16[32]{0} all-reduce(%q), to_apply=%add
+}
+ENTRY %main () -> f32[8] {
+  %w = f32[8] while(%init), body=%body, condition=%cond
+  %a2a = f32[16,16]{1,0} all-to-all(%z), dimensions={1}
+}
+"""
+    r = collective_bytes(hlo)
+    assert r["bytes_by_kind"]["all-to-all"] == 16 * 16 * 4
+    assert r["bytes_by_kind"]["all-gather"] >= 64 * 128 * 4
+    assert r["bytes_by_kind"]["all-reduce"] >= 32 * 2
+    assert r["total_bytes"] > 0
+
+
+def test_shape_applicability():
+    from repro.launch.shapes import SHAPES, shape_applicable
+    ok, _ = shape_applicable(get_config("mamba2_370m"), SHAPES["long_500k"])
+    assert ok
+    ok, why = shape_applicable(get_config("granite_20b"), SHAPES["long_500k"])
+    assert not ok and "full-attention" in why
+    ok, _ = shape_applicable(get_config("gemma3_4b"), SHAPES["long_500k"])
+    assert ok  # sliding-window variant
+    for name in ("train_4k", "prefill_32k", "decode_32k"):
+        for arch in ARCH_IDS:
+            ok, _ = shape_applicable(get_config(arch), SHAPES[name])
+            assert ok
+
+
+def test_sharding_rules_divisibility():
+    """Every spec'd dim must divide by its mesh axes for every arch."""
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import model as M
+    from repro.sharding.rules import make_rules, param_specs
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        shapes = M.param_shapes(cfg, jnp.bfloat16)
+        rules = make_rules(mesh, batch_size=256)
+        specs = param_specs(shapes, cfg, rules)  # must not raise
+        n = len(jax.tree.leaves(specs))
+        assert n == len(jax.tree.leaves(shapes))
