@@ -3,14 +3,21 @@ kernel micro-benches.  Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig1r1
+  PYTHONPATH=src python -m benchmarks.run --only fig1r1 --json
 
 `derived` encodes the figure's headline quantity — for the convergence
 figures that is Mbits/node to reach gap 1e-6 (the paper's x-axis), for the
 kernels it is GFLOP/s (interpret-mode: correctness-path timing only).
+
+``--json`` additionally writes one ``BENCH_<name>.json`` perf record per
+bench group (per-bench µs + derived metric), seeding the repo's benchmark
+trajectory; ``--json-dir`` picks the output directory (default: cwd).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -60,12 +67,25 @@ def fig1r1():
     dbases = [orth_basis_from_data(c.A) for c in clients]
     sbases = [StandardBasis(120) for _ in clients]
     r = dbases[0].r
-    t_bl = _timeit(lambda: bl.bl1(clients, dbases, [TopK(k=r) for _ in clients],
-                                  Identity(), x0, xs, 3), reps=1)
+    STEPS = 3
+
+    def bl1_run(backend):
+        return lambda: bl.bl1(clients, dbases, [TopK(k=r) for _ in clients],
+                              Identity(), x0, xs, STEPS, backend=backend)
+
+    def fednl_run(backend):
+        return lambda: bl.bl1(clients, sbases, [RankR(r=1) for _ in clients],
+                              Identity(), x0, xs, STEPS, backend=backend)
+
+    t_bl = _timeit(bl1_run("fast"), reps=3)
+    t_bl_ref = _timeit(bl1_run("reference"), reps=1)
+    t_fn = _timeit(fednl_run("fast"), reps=3)          # FedNL timed on its own config
     h_bl = bl.bl1(clients, dbases, [TopK(k=r) for _ in clients], Identity(), x0, xs, 18)
     h_fn = bl.bl1(clients, sbases, [RankR(r=1) for _ in clients], Identity(), x0, xs, 18)
-    return [("fig1r1_BL1", t_bl / 3, f"Mbits_to_1e-6={_bits_to(h_bl):.3f}"),
-            ("fig1r1_FedNL", t_bl / 3, f"Mbits_to_1e-6={_bits_to(h_fn):.3f}")]
+    return [("fig1r1_BL1", t_bl / STEPS, f"Mbits_to_1e-6={_bits_to(h_bl):.3f}"),
+            ("fig1r1_BL1_reference", t_bl_ref / STEPS,
+             f"fast_speedup={t_bl_ref / t_bl:.1f}x"),
+            ("fig1r1_FedNL", t_fn / STEPS, f"Mbits_to_1e-6={_bits_to(h_fn):.3f}")]
 
 
 @bench("fig1r2_BL1_vs_first_order")
@@ -199,17 +219,40 @@ def kbasis():
     return [("kernel_basis_project_512", us, "interp")]
 
 
+def _write_json(json_dir, group, rows):
+    record = {
+        "bench": group,
+        "unix_time": time.time(),
+        "rows": [
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in rows
+        ],
+    }
+    path = os.path.join(json_dir, f"BENCH_{group}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    return path
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write a BENCH_<name>.json record per bench group")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for --json records (default: cwd)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and args.only not in name:
             continue
         try:
-            for row in fn():
+            rows = fn()
+            for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+            if args.json:
+                _write_json(args.json_dir, name, rows)
         except Exception as e:  # keep the harness robust
             print(f"{name},ERROR,{type(e).__name__}:{e}", flush=True)
 

@@ -11,3 +11,4 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 from . import basis, baselines, bl, compressors, glm  # noqa: E402,F401
+from . import batched, bl_reference, client_batch  # noqa: E402,F401

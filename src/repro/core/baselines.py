@@ -17,7 +17,7 @@ import numpy as np
 
 from . import glm
 from .basis import DataOuterBasis, MatrixBasis
-from .bl import History, _grad_uplink_bits, _client_hcoef, _server_reconstruct, proj_mu
+from .bl import _BACKENDS, History, _grad_uplink_bits, _client_hcoef, _server_reconstruct, proj_mu
 from .compressors import FLOAT_BITS, Compressor, RandK
 
 
@@ -44,9 +44,20 @@ def newton(
     x_star: jax.Array,
     steps: int,
     bases: Optional[Sequence[MatrixBasis]] = None,
+    backend: str = "auto",
 ) -> History:
     """Classical Newton.  bases=None → naive d² floats/iter (§2.1);
     per-client DataOuterBasis → r²+r floats/iter (§2.3, the §A.4 comparison)."""
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+    if backend != "reference":
+        from . import batched
+
+        try:
+            return batched.newton_fast(clients, x0, x_star, steps, bases=bases)
+        except batched.FastPathUnavailable:
+            if backend == "fast":
+                raise
     clients = list(clients)
     n = len(clients)
     d = x0.shape[0]
@@ -128,7 +139,18 @@ def nl1(
 # --------------------------------------------------------------------------
 # First-order methods
 # --------------------------------------------------------------------------
-def gd(clients, x0, x_star, steps, lr: Optional[float] = None) -> History:
+def gd(clients, x0, x_star, steps, lr: Optional[float] = None,
+       backend: str = "auto") -> History:
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+    if backend != "reference":
+        from . import batched
+
+        try:
+            return batched.gd_fast(clients, x0, x_star, steps, lr=lr)
+        except batched.FastPathUnavailable:
+            if backend == "fast":
+                raise
     clients = list(clients)
     d = x0.shape[0]
     f_star = _fstar(clients, x_star)
@@ -153,9 +175,21 @@ def diana(
     omega: float,
     lr: Optional[float] = None,
     seed: int = 0,
+    backend: str = "auto",
 ) -> History:
     """DIANA [Mishchenko et al. 2019]: compressed gradient differences with
     local shifts h_i; theoretical stepsizes."""
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+    if backend != "reference":
+        from . import batched
+
+        try:
+            return batched.diana_fast(clients, x0, x_star, steps, comp, omega,
+                                      lr=lr, seed=seed)
+        except batched.FastPathUnavailable:
+            if backend == "fast":
+                raise
     clients = list(clients)
     n = len(clients)
     d = x0.shape[0]

@@ -1,9 +1,22 @@
-"""BL1 / BL2 / BL3 (Algorithms 1–3) — faithful JAX implementation.
+"""BL1 / BL2 / BL3 (Algorithms 1–3) — public API and backend dispatch.
+
+Two backends implement the same algorithms with the same `History` contract:
+
+  * ``repro.core.batched``      — the fast path: per-client state stacked on a
+    leading axis, compressors vmapped, rounds run under `jax.lax.scan` inside
+    one jitted XLA program.  Used whenever the configuration is homogeneous
+    enough to stack (same client shapes, one basis kind, one compressor
+    config per role).
+  * ``repro.core.bl_reference`` — the original op-by-op Python loops, kept as
+    the paper-faithful ground truth the fast path is pinned against.
+
+`bl1/bl2/bl3` below take ``backend="auto"|"fast"|"reference"``: "auto"
+(default) tries the fast path and silently falls back, "fast" raises
+`batched.FastPathUnavailable` instead of falling back, "reference" forces
+the loops.
 
 Conventions
 -----------
-* Clients are a list of `glm.ClientData`; d is small (paper regime), so the
-  methods run op-by-op without jit.
 * Compression operates on *coefficient matrices* h^i(∇²f_i) in the client's
   basis.  With `DataOuterBasis` the Hessian's data part (which lives in the
   basis span) is encoded and the ridge λI is added analytically server-side,
@@ -24,6 +37,8 @@ import numpy as np
 from . import glm
 from .basis import DataOuterBasis, MatrixBasis, PSDBasis, basis_transmission_bits
 from .compressors import FLOAT_BITS, Compressor
+
+_BACKENDS = ("auto", "fast", "reference")
 
 
 def proj_mu(A: jax.Array, mu: float) -> jax.Array:
@@ -77,189 +92,7 @@ def _init_bits(basis: MatrixBasis, init_exact: bool) -> float:
 
 
 # --------------------------------------------------------------------------
-# BL1 — Algorithm 1
-# --------------------------------------------------------------------------
-def bl1(
-    clients: Sequence[glm.ClientData],
-    bases: Sequence[MatrixBasis],
-    hess_comp: Sequence[Compressor],
-    model_comp: Compressor,
-    x0: jax.Array,
-    x_star: jax.Array,
-    steps: int,
-    alpha: float = 1.0,
-    eta: float = 1.0,
-    p: float = 1.0,
-    mu: Optional[float] = None,
-    seed: int = 0,
-    init_exact_hessian: bool = True,
-) -> History:
-    """Basis Learn with Bidirectional Compression.
-
-    StandardBasis + Rank-R + identity model compressor ≡ FedNL (option 1);
-    Top-K model compressor ≡ FedNL-BC.
-    """
-    clients = list(clients)
-    n = len(clients)
-    d = x0.shape[0]
-    lam = clients[0].lam
-    mu = lam if mu is None else mu
-    key = jax.random.PRNGKey(seed)
-    f_star = float(glm.global_loss(clients, x_star))
-
-    z = x0
-    w = x0
-    if init_exact_hessian:
-        L = [_client_hcoef(bases[i], clients[i], x0) for i in range(n)]
-    else:
-        L = [jnp.zeros((d, d), x0.dtype) for _ in range(n)]
-    H = sum(_server_reconstruct(bases[i], L[i], lam) for i in range(n)) / n
-    grad_w = glm.global_grad(clients, w)
-    xi = 1
-
-    up = _init_bits(bases[0], init_exact_hessian)
-    down = 0.0
-    hist = History([], [], [])
-
-    for _ in range(steps):
-        hist.append(float(glm.global_loss(clients, z)) - f_star, up, down)
-
-        Hmu = proj_mu(H, mu)
-        # gradient leg
-        if xi == 1:
-            w = z
-            grad_w = glm.global_grad(clients, w)
-            g = grad_w
-            up += _grad_uplink_bits(bases[0])
-        else:
-            g = Hmu @ (z - w) + grad_w
-
-        # Hessian-coefficient learning (clients → server)
-        H_delta = jnp.zeros((d, d), x0.dtype)
-        step_bits = 0.0
-        for i in range(n):
-            key, sk = jax.random.split(key)
-            target = _client_hcoef(bases[i], clients[i], z)
-            S, bits = hess_comp[i](sk, target - L[i])
-            L[i] = L[i] + alpha * S
-            H_delta = H_delta + bases[i].reconstruct(alpha * S)
-            step_bits += float(bits)
-        up += step_bits / n
-
-        # server model step + broadcast
-        x_next = z - jnp.linalg.solve(Hmu, g)
-        H = H + H_delta / n
-        key, sk = jax.random.split(key)
-        v, vbits = model_comp(sk, x_next - z)
-        down += float(vbits)
-        z = z + eta * v
-        key, sk = jax.random.split(key)
-        xi = 1 if p >= 1.0 else int(jax.random.bernoulli(sk, p))
-
-    return hist
-
-
-# --------------------------------------------------------------------------
-# BL2 — Algorithm 2
-# --------------------------------------------------------------------------
-def bl2(
-    clients: Sequence[glm.ClientData],
-    bases: Sequence[MatrixBasis],
-    hess_comp: Sequence[Compressor],
-    model_comp: Sequence[Compressor],
-    x0: jax.Array,
-    x_star: jax.Array,
-    steps: int,
-    alpha: float = 1.0,
-    eta: float = 1.0,
-    p: float = 1.0,
-    tau: Optional[int] = None,
-    seed: int = 0,
-    init_exact_hessian: bool = True,
-) -> History:
-    """Basis Learn with Bidirectional Compression and Partial Participation.
-
-    StandardBasis ≡ FedNL-PP (with Rank-R compressor, identity model comp).
-    """
-    clients = list(clients)
-    n = len(clients)
-    d = x0.shape[0]
-    lam = clients[0].lam
-    tau = n if tau is None else tau
-    key = jax.random.PRNGKey(seed)
-    f_star = float(glm.global_loss(clients, x_star))
-
-    def full_hess(i, x):
-        return glm.hess(clients[i], x)
-
-    z = [x0 for _ in range(n)]
-    w = [x0 for _ in range(n)]
-    if init_exact_hessian:
-        L = [_client_hcoef(bases[i], clients[i], x0) for i in range(n)]
-    else:
-        L = [jnp.zeros((d, d), x0.dtype) for _ in range(n)]
-    Hi = [_server_reconstruct(bases[i], L[i], lam) for i in range(n)]
-    li = [float(jnp.linalg.norm(_sym(Hi[i]) - full_hess(i, w[i]), "fro")) for i in range(n)]
-    gi = [(_sym(Hi[i]) + li[i] * jnp.eye(d, dtype=x0.dtype)) @ w[i] - glm.grad(clients[i], w[i]) for i in range(n)]
-    H = sum(Hi) / n
-    l_avg = sum(li) / n
-    g = sum(gi) / n
-
-    up = _init_bits(bases[0], init_exact_hessian)
-    down = 0.0
-    hist = History([], [], [])
-
-    for _ in range(steps):
-        x_cur = jnp.linalg.solve(_sym(H) + l_avg * jnp.eye(d, dtype=x0.dtype), g)
-        hist.append(float(glm.global_loss(clients, x_cur)) - f_star, up, down)
-
-        key, sk = jax.random.split(key)
-        part = np.array(jax.random.bernoulli(sk, tau / n, (n,)))
-        if not part.any():
-            idx = int(jax.random.randint(sk, (), 0, n))
-            part[idx] = True
-
-        step_up = 0.0
-        step_down = 0.0
-        for i in range(n):
-            if not part[i]:
-                continue
-            key, sk = jax.random.split(key)
-            v_i, vbits = model_comp[i](sk, x_cur - z[i])
-            step_down += float(vbits)
-            z[i] = z[i] + eta * v_i
-
-            key, sk = jax.random.split(key)
-            target = _client_hcoef(bases[i], clients[i], z[i])
-            S, bits = hess_comp[i](sk, target - L[i])
-            step_up += float(bits)
-            L_new = L[i] + alpha * S
-            Hi_new = Hi[i] + bases[i].reconstruct(alpha * S)
-            li_new = float(jnp.linalg.norm(_sym(Hi_new) - full_hess(i, z[i]), "fro"))
-            key, sk = jax.random.split(key)
-            xi = 1 if p >= 1.0 else int(jax.random.bernoulli(sk, p))
-            if xi == 1:
-                w[i] = z[i]
-                gi_new = (_sym(Hi_new) + li_new * jnp.eye(d, dtype=x0.dtype)) @ w[i] - glm.grad(clients[i], w[i])
-                step_up += d * FLOAT_BITS  # g_i^{k+1} − g_i^k
-            else:
-                # server reconstructs the g-difference from S_i and Δl
-                gi_new = gi[i] + (_sym(Hi_new) - _sym(Hi[i]) + (li_new - li[i]) * jnp.eye(d, dtype=x0.dtype)) @ w[i]
-                step_up += FLOAT_BITS + 1  # Δl float + ξ bit
-            # server-side aggregate updates
-            g = g + (gi_new - gi[i]) / n
-            H = H + (Hi_new - Hi[i]) / n
-            l_avg = l_avg + (li_new - li[i]) / n
-            L[i], Hi[i], li[i], gi[i] = L_new, Hi_new, li_new, gi_new
-
-        up += step_up / n
-        down += step_down / n
-
-    return hist
-
-
-# --------------------------------------------------------------------------
-# BL3 — Algorithm 3
+# PSD-basis helpers shared by both BL3 backends (Example 5.1, §5)
 # --------------------------------------------------------------------------
 def _psd_sum_matrix(d: int, dtype) -> jax.Array:
     """Σ_{j,l} B^{jl} for the PSD basis (ordered pairs + diagonal)."""
@@ -280,6 +113,87 @@ def _psd_reconstruct_full(M: jax.Array) -> jax.Array:
     return 2.0 * off + jnp.diag(diag)
 
 
+# --------------------------------------------------------------------------
+# dispatchers
+# --------------------------------------------------------------------------
+def _dispatch(backend: str, fast_fn, ref_fn):
+    from .batched import FastPathUnavailable
+
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+    if backend == "reference":
+        return ref_fn()
+    try:
+        return fast_fn()
+    except FastPathUnavailable:
+        if backend == "fast":
+            raise
+        return ref_fn()
+
+
+def bl1(
+    clients: Sequence[glm.ClientData],
+    bases: Sequence[MatrixBasis],
+    hess_comp: Sequence[Compressor],
+    model_comp: Compressor,
+    x0: jax.Array,
+    x_star: jax.Array,
+    steps: int,
+    alpha: float = 1.0,
+    eta: float = 1.0,
+    p: float = 1.0,
+    mu: Optional[float] = None,
+    seed: int = 0,
+    init_exact_hessian: bool = True,
+    backend: str = "auto",
+) -> History:
+    """Basis Learn with Bidirectional Compression (Algorithm 1).
+
+    StandardBasis + Rank-R + identity model compressor ≡ FedNL (option 1);
+    Top-K model compressor ≡ FedNL-BC.
+    """
+    from . import batched, bl_reference
+
+    args = (clients, bases, hess_comp, model_comp, x0, x_star, steps)
+    kw = dict(alpha=alpha, eta=eta, p=p, mu=mu, seed=seed,
+              init_exact_hessian=init_exact_hessian)
+    return _dispatch(
+        backend,
+        lambda: batched.bl1_fast(*args, **kw),
+        lambda: bl_reference.bl1_reference(*args, **kw),
+    )
+
+
+def bl2(
+    clients: Sequence[glm.ClientData],
+    bases: Sequence[MatrixBasis],
+    hess_comp: Sequence[Compressor],
+    model_comp: Sequence[Compressor],
+    x0: jax.Array,
+    x_star: jax.Array,
+    steps: int,
+    alpha: float = 1.0,
+    eta: float = 1.0,
+    p: float = 1.0,
+    tau: Optional[int] = None,
+    seed: int = 0,
+    init_exact_hessian: bool = True,
+    backend: str = "auto",
+) -> History:
+    """Basis Learn with Bidirectional Compression and Partial Participation
+    (Algorithm 2).  StandardBasis ≡ FedNL-PP (Rank-R, identity model comp)."""
+    from . import batched, bl_reference
+
+    args = (clients, bases, hess_comp, model_comp, x0, x_star, steps)
+    kw = dict(alpha=alpha, eta=eta, p=p, tau=tau, seed=seed,
+              init_exact_hessian=init_exact_hessian)
+    return _dispatch(
+        backend,
+        lambda: batched.bl2_fast(*args, **kw),
+        lambda: bl_reference.bl2_reference(*args, **kw),
+    )
+
+
 def bl3(
     clients: Sequence[glm.ClientData],
     hess_comp: Sequence[Compressor],
@@ -294,97 +208,15 @@ def bl3(
     c: float = 1e-8,
     option: int = 2,
     seed: int = 0,
+    backend: str = "auto",
 ) -> History:
-    """BL3 with the PSD basis of Example 5.1 (both β options)."""
-    clients = list(clients)
-    n = len(clients)
-    d = x0.shape[0]
-    tau = n if tau is None else tau
-    key = jax.random.PRNGKey(seed)
-    f_star = float(glm.global_loss(clients, x_star))
-    I = jnp.eye(d, dtype=x0.dtype)
-    Ssum = _psd_sum_matrix(d, x0.dtype)
+    """BL3 with the PSD basis of Example 5.1 (both β options, Algorithm 3)."""
+    from . import batched, bl_reference
 
-    def h_full(i, x):
-        return glm.hess(clients[i], x)
-
-    z = [x0 for _ in range(n)]
-    w = [x0 for _ in range(n)]
-    zprev = [x0 for _ in range(n)]  # z_i^{k-1} for Option 1
-    L = [_psd_h_tilde(h_full(i, x0)) for i in range(n)]
-    gam = [max(c, float(jnp.max(jnp.abs(L[i])))) for i in range(n)]
-    A_i = [_psd_reconstruct_full(L[i]) + 2.0 * gam[i] * Ssum for i in range(n)]
-    C_i = [2.0 * gam[i] * Ssum for i in range(n)]
-    beta_i = [float(jnp.max((_psd_h_tilde(h_full(i, w[i])) + 2 * gam[i]) / (L[i] + 2 * gam[i]))) for i in range(n)]
-    beta = max(beta_i)
-    g1 = [A_i[i] @ w[i] for i in range(n)]
-    g2 = [C_i[i] @ w[i] + glm.grad(clients[i], w[i]) for i in range(n)]
-    A_avg = sum(A_i) / n
-    C_avg = sum(C_i) / n
-    g1_avg = sum(g1) / n
-    g2_avg = sum(g2) / n
-
-    up = (d * (d + 1) // 2) * FLOAT_BITS  # ship L_i^0 coefficients
-    down = 0.0
-    hist = History([], [], [])
-
-    for _ in range(steps):
-        Hk = beta * A_avg - C_avg
-        gk = beta * g1_avg - g2_avg
-        x_cur = jnp.linalg.solve(Hk, gk)
-        hist.append(float(glm.global_loss(clients, x_cur)) - f_star, up, down)
-
-        key, sk = jax.random.split(key)
-        part = np.array(jax.random.bernoulli(sk, tau / n, (n,)))
-        if not part.any():
-            idx = int(jax.random.randint(sk, (), 0, n))
-            part[idx] = True
-
-        step_up = 0.0
-        step_down = 0.0
-        for i in range(n):
-            if not part[i]:
-                continue
-            key, sk = jax.random.split(key)
-            v_i, vbits = model_comp[i](sk, x_cur - z[i])
-            step_down += float(vbits)
-            zprev[i] = z[i]
-            z[i] = z[i] + eta * v_i
-
-            key, sk = jax.random.split(key)
-            target = _psd_h_tilde(h_full(i, z[i]))
-            S, bits = hess_comp[i](sk, target - L[i])
-            step_up += float(bits)
-            L_new = L[i] + alpha * S
-            gam_new = max(c, float(jnp.max(jnp.abs(L_new))))
-            if option == 1:
-                num = _psd_h_tilde(h_full(i, zprev[i]))
-            else:
-                num = target
-            beta_new = float(jnp.max((num + 2 * gam_new) / (L_new + 2 * gam_new)))
-            A_new = A_i[i] + _psd_reconstruct_full(L_new - L[i]) + 2.0 * (gam_new - gam[i]) * Ssum
-            C_new = C_i[i] + 2.0 * (gam_new - gam[i]) * Ssum
-            key, sk = jax.random.split(key)
-            xi = 1 if p >= 1.0 else int(jax.random.bernoulli(sk, p))
-            if xi == 1:
-                w[i] = z[i]
-                g1_new = A_new @ w[i]
-                g2_new = C_new @ w[i] + glm.grad(clients[i], w[i])
-                step_up += 2 * d * FLOAT_BITS  # the two g-differences
-            else:
-                g1_new = g1[i] + (A_new - A_i[i]) @ w[i]
-                g2_new = g2[i] + (C_new - C_i[i]) @ w[i]
-                step_up += 2 * FLOAT_BITS + 1  # β, Δγ floats + ξ bit
-            step_up += FLOAT_BITS  # β_i^{k+1} always reaches the server
-            A_avg = A_avg + (A_new - A_i[i]) / n
-            C_avg = C_avg + (C_new - C_i[i]) / n
-            g1_avg = g1_avg + (g1_new - g1[i]) / n
-            g2_avg = g2_avg + (g2_new - g2[i]) / n
-            L[i], gam[i], A_i[i], C_i[i], g1[i], g2[i] = L_new, gam_new, A_new, C_new, g1_new, g2_new
-            beta_i[i] = beta_new
-
-        beta = max(beta_i)
-        up += step_up / n
-        down += step_down / n
-
-    return hist
+    args = (clients, hess_comp, model_comp, x0, x_star, steps)
+    kw = dict(alpha=alpha, eta=eta, p=p, tau=tau, c=c, option=option, seed=seed)
+    return _dispatch(
+        backend,
+        lambda: batched.bl3_fast(*args, **kw),
+        lambda: bl_reference.bl3_reference(*args, **kw),
+    )

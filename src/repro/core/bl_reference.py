@@ -1,0 +1,329 @@
+"""Op-by-op reference backend for BL1 / BL2 / BL3 (Algorithms 1–3).
+
+These are the original, paper-faithful Python-loop implementations: one
+`for i in range(n)` over clients per round, history kept on the host.  They
+are kept as the ground truth the jitted fast path (`repro.core.batched`) is
+pinned against in `tests/test_batched_parity.py` — do not optimize them.
+
+Use them via the public dispatchers `repro.core.bl.bl1/bl2/bl3` with
+``backend="reference"``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import glm
+from .basis import MatrixBasis
+from .bl import (
+    History,
+    _client_hcoef,
+    _grad_uplink_bits,
+    _init_bits,
+    _psd_h_tilde,
+    _psd_reconstruct_full,
+    _psd_sum_matrix,
+    _server_reconstruct,
+    _sym,
+    proj_mu,
+)
+from .compressors import FLOAT_BITS, Compressor
+
+
+# --------------------------------------------------------------------------
+# BL1 — Algorithm 1
+# --------------------------------------------------------------------------
+def bl1_reference(
+    clients: Sequence[glm.ClientData],
+    bases: Sequence[MatrixBasis],
+    hess_comp: Sequence[Compressor],
+    model_comp: Compressor,
+    x0: jax.Array,
+    x_star: jax.Array,
+    steps: int,
+    alpha: float = 1.0,
+    eta: float = 1.0,
+    p: float = 1.0,
+    mu: Optional[float] = None,
+    seed: int = 0,
+    init_exact_hessian: bool = True,
+) -> History:
+    """Basis Learn with Bidirectional Compression.
+
+    StandardBasis + Rank-R + identity model compressor ≡ FedNL (option 1);
+    Top-K model compressor ≡ FedNL-BC.
+    """
+    clients = list(clients)
+    n = len(clients)
+    d = x0.shape[0]
+    lam = clients[0].lam
+    mu = lam if mu is None else mu
+    key = jax.random.PRNGKey(seed)
+    f_star = float(glm.global_loss(clients, x_star))
+
+    z = x0
+    w = x0
+    if init_exact_hessian:
+        L = [_client_hcoef(bases[i], clients[i], x0) for i in range(n)]
+    else:
+        L = [jnp.zeros((d, d), x0.dtype) for _ in range(n)]
+    H = sum(_server_reconstruct(bases[i], L[i], lam) for i in range(n)) / n
+    grad_w = glm.global_grad(clients, w)
+    xi = 1
+
+    # per-client ranks may differ (heterogeneous DataOuterBasis) — average
+    up = sum(_init_bits(b, init_exact_hessian) for b in bases) / n
+    grad_bits = sum(_grad_uplink_bits(b) for b in bases) / n
+    down = 0.0
+    hist = History([], [], [])
+
+    for _ in range(steps):
+        hist.append(float(glm.global_loss(clients, z)) - f_star, up, down)
+
+        Hmu = proj_mu(H, mu)
+        # gradient leg
+        if xi == 1:
+            w = z
+            grad_w = glm.global_grad(clients, w)
+            g = grad_w
+            up += grad_bits
+        else:
+            g = Hmu @ (z - w) + grad_w
+
+        # Hessian-coefficient learning (clients → server)
+        H_delta = jnp.zeros((d, d), x0.dtype)
+        step_bits = 0.0
+        for i in range(n):
+            key, sk = jax.random.split(key)
+            target = _client_hcoef(bases[i], clients[i], z)
+            S, bits = hess_comp[i](sk, target - L[i])
+            L[i] = L[i] + alpha * S
+            H_delta = H_delta + bases[i].reconstruct(alpha * S)
+            step_bits += float(bits)
+        up += step_bits / n
+
+        # server model step + broadcast
+        x_next = z - jnp.linalg.solve(Hmu, g)
+        H = H + H_delta / n
+        key, sk = jax.random.split(key)
+        v, vbits = model_comp(sk, x_next - z)
+        down += float(vbits)
+        z = z + eta * v
+        key, sk = jax.random.split(key)
+        xi = 1 if p >= 1.0 else int(jax.random.bernoulli(sk, p))
+
+    return hist
+
+
+# --------------------------------------------------------------------------
+# BL2 — Algorithm 2
+# --------------------------------------------------------------------------
+def bl2_reference(
+    clients: Sequence[glm.ClientData],
+    bases: Sequence[MatrixBasis],
+    hess_comp: Sequence[Compressor],
+    model_comp: Sequence[Compressor],
+    x0: jax.Array,
+    x_star: jax.Array,
+    steps: int,
+    alpha: float = 1.0,
+    eta: float = 1.0,
+    p: float = 1.0,
+    tau: Optional[int] = None,
+    seed: int = 0,
+    init_exact_hessian: bool = True,
+) -> History:
+    """Basis Learn with Bidirectional Compression and Partial Participation.
+
+    StandardBasis ≡ FedNL-PP (with Rank-R compressor, identity model comp).
+    """
+    clients = list(clients)
+    n = len(clients)
+    d = x0.shape[0]
+    lam = clients[0].lam
+    tau = n if tau is None else tau
+    key = jax.random.PRNGKey(seed)
+    f_star = float(glm.global_loss(clients, x_star))
+
+    def full_hess(i, x):
+        return glm.hess(clients[i], x)
+
+    z = [x0 for _ in range(n)]
+    w = [x0 for _ in range(n)]
+    if init_exact_hessian:
+        L = [_client_hcoef(bases[i], clients[i], x0) for i in range(n)]
+    else:
+        L = [jnp.zeros((d, d), x0.dtype) for _ in range(n)]
+    Hi = [_server_reconstruct(bases[i], L[i], lam) for i in range(n)]
+    li = [float(jnp.linalg.norm(_sym(Hi[i]) - full_hess(i, w[i]), "fro")) for i in range(n)]
+    gi = [(_sym(Hi[i]) + li[i] * jnp.eye(d, dtype=x0.dtype)) @ w[i] - glm.grad(clients[i], w[i]) for i in range(n)]
+    H = sum(Hi) / n
+    l_avg = sum(li) / n
+    g = sum(gi) / n
+
+    up = sum(_init_bits(b, init_exact_hessian) for b in bases) / n
+    down = 0.0
+    hist = History([], [], [])
+
+    for _ in range(steps):
+        x_cur = jnp.linalg.solve(_sym(H) + l_avg * jnp.eye(d, dtype=x0.dtype), g)
+        hist.append(float(glm.global_loss(clients, x_cur)) - f_star, up, down)
+
+        key, sk = jax.random.split(key)
+        part = np.array(jax.random.bernoulli(sk, tau / n, (n,)))
+        if not part.any():
+            idx = int(jax.random.randint(sk, (), 0, n))
+            part[idx] = True
+
+        step_up = 0.0
+        step_down = 0.0
+        for i in range(n):
+            if not part[i]:
+                continue
+            key, sk = jax.random.split(key)
+            v_i, vbits = model_comp[i](sk, x_cur - z[i])
+            step_down += float(vbits)
+            z[i] = z[i] + eta * v_i
+
+            key, sk = jax.random.split(key)
+            target = _client_hcoef(bases[i], clients[i], z[i])
+            S, bits = hess_comp[i](sk, target - L[i])
+            step_up += float(bits)
+            L_new = L[i] + alpha * S
+            Hi_new = Hi[i] + bases[i].reconstruct(alpha * S)
+            li_new = float(jnp.linalg.norm(_sym(Hi_new) - full_hess(i, z[i]), "fro"))
+            key, sk = jax.random.split(key)
+            xi = 1 if p >= 1.0 else int(jax.random.bernoulli(sk, p))
+            if xi == 1:
+                w[i] = z[i]
+                gi_new = (_sym(Hi_new) + li_new * jnp.eye(d, dtype=x0.dtype)) @ w[i] - glm.grad(clients[i], w[i])
+                step_up += d * FLOAT_BITS  # g_i^{k+1} − g_i^k
+            else:
+                # server reconstructs the g-difference from S_i and Δl
+                gi_new = gi[i] + (_sym(Hi_new) - _sym(Hi[i]) + (li_new - li[i]) * jnp.eye(d, dtype=x0.dtype)) @ w[i]
+                step_up += FLOAT_BITS + 1  # Δl float + ξ bit
+            # server-side aggregate updates
+            g = g + (gi_new - gi[i]) / n
+            H = H + (Hi_new - Hi[i]) / n
+            l_avg = l_avg + (li_new - li[i]) / n
+            L[i], Hi[i], li[i], gi[i] = L_new, Hi_new, li_new, gi_new
+
+        up += step_up / n
+        down += step_down / n
+
+    return hist
+
+
+# --------------------------------------------------------------------------
+# BL3 — Algorithm 3
+# --------------------------------------------------------------------------
+def bl3_reference(
+    clients: Sequence[glm.ClientData],
+    hess_comp: Sequence[Compressor],
+    model_comp: Sequence[Compressor],
+    x0: jax.Array,
+    x_star: jax.Array,
+    steps: int,
+    alpha: float = 1.0,
+    eta: float = 1.0,
+    p: float = 1.0,
+    tau: Optional[int] = None,
+    c: float = 1e-8,
+    option: int = 2,
+    seed: int = 0,
+) -> History:
+    """BL3 with the PSD basis of Example 5.1 (both β options)."""
+    clients = list(clients)
+    n = len(clients)
+    d = x0.shape[0]
+    tau = n if tau is None else tau
+    key = jax.random.PRNGKey(seed)
+    f_star = float(glm.global_loss(clients, x_star))
+    Ssum = _psd_sum_matrix(d, x0.dtype)
+
+    def h_full(i, x):
+        return glm.hess(clients[i], x)
+
+    z = [x0 for _ in range(n)]
+    w = [x0 for _ in range(n)]
+    zprev = [x0 for _ in range(n)]  # z_i^{k-1} for Option 1
+    L = [_psd_h_tilde(h_full(i, x0)) for i in range(n)]
+    gam = [max(c, float(jnp.max(jnp.abs(L[i])))) for i in range(n)]
+    A_i = [_psd_reconstruct_full(L[i]) + 2.0 * gam[i] * Ssum for i in range(n)]
+    C_i = [2.0 * gam[i] * Ssum for i in range(n)]
+    beta_i = [float(jnp.max((_psd_h_tilde(h_full(i, w[i])) + 2 * gam[i]) / (L[i] + 2 * gam[i]))) for i in range(n)]
+    beta = max(beta_i)
+    g1 = [A_i[i] @ w[i] for i in range(n)]
+    g2 = [C_i[i] @ w[i] + glm.grad(clients[i], w[i]) for i in range(n)]
+    A_avg = sum(A_i) / n
+    C_avg = sum(C_i) / n
+    g1_avg = sum(g1) / n
+    g2_avg = sum(g2) / n
+
+    up = (d * (d + 1) // 2) * FLOAT_BITS  # ship L_i^0 coefficients
+    down = 0.0
+    hist = History([], [], [])
+
+    for _ in range(steps):
+        Hk = beta * A_avg - C_avg
+        gk = beta * g1_avg - g2_avg
+        x_cur = jnp.linalg.solve(Hk, gk)
+        hist.append(float(glm.global_loss(clients, x_cur)) - f_star, up, down)
+
+        key, sk = jax.random.split(key)
+        part = np.array(jax.random.bernoulli(sk, tau / n, (n,)))
+        if not part.any():
+            idx = int(jax.random.randint(sk, (), 0, n))
+            part[idx] = True
+
+        step_up = 0.0
+        step_down = 0.0
+        for i in range(n):
+            if not part[i]:
+                continue
+            key, sk = jax.random.split(key)
+            v_i, vbits = model_comp[i](sk, x_cur - z[i])
+            step_down += float(vbits)
+            zprev[i] = z[i]
+            z[i] = z[i] + eta * v_i
+
+            key, sk = jax.random.split(key)
+            target = _psd_h_tilde(h_full(i, z[i]))
+            S, bits = hess_comp[i](sk, target - L[i])
+            step_up += float(bits)
+            L_new = L[i] + alpha * S
+            gam_new = max(c, float(jnp.max(jnp.abs(L_new))))
+            if option == 1:
+                num = _psd_h_tilde(h_full(i, zprev[i]))
+            else:
+                num = target
+            beta_new = float(jnp.max((num + 2 * gam_new) / (L_new + 2 * gam_new)))
+            A_new = A_i[i] + _psd_reconstruct_full(L_new - L[i]) + 2.0 * (gam_new - gam[i]) * Ssum
+            C_new = C_i[i] + 2.0 * (gam_new - gam[i]) * Ssum
+            key, sk = jax.random.split(key)
+            xi = 1 if p >= 1.0 else int(jax.random.bernoulli(sk, p))
+            if xi == 1:
+                w[i] = z[i]
+                g1_new = A_new @ w[i]
+                g2_new = C_new @ w[i] + glm.grad(clients[i], w[i])
+                step_up += 2 * d * FLOAT_BITS  # the two g-differences
+            else:
+                g1_new = g1[i] + (A_new - A_i[i]) @ w[i]
+                g2_new = g2[i] + (C_new - C_i[i]) @ w[i]
+                step_up += 2 * FLOAT_BITS + 1  # β, Δγ floats + ξ bit
+            step_up += FLOAT_BITS  # β_i^{k+1} always reaches the server
+            A_avg = A_avg + (A_new - A_i[i]) / n
+            C_avg = C_avg + (C_new - C_i[i]) / n
+            g1_avg = g1_avg + (g1_new - g1[i]) / n
+            g2_avg = g2_avg + (g2_new - g2[i]) / n
+            L[i], gam[i], A_i[i], C_i[i], g1[i], g2[i] = L_new, gam_new, A_new, C_new, g1_new, g2_new
+            beta_i[i] = beta_new
+
+        beta = max(beta_i)
+        up += step_up / n
+        down += step_down / n
+
+    return hist

@@ -1,0 +1,305 @@
+"""Stacked per-client state for the batched BL engine (`repro.core.batched`).
+
+The op-by-op reference backend (`repro.core.bl_reference`) keeps clients as a
+Python list and loops `for i in range(n)` every round.  The fast path instead
+stacks everything into leading-axis-`n` device arrays:
+
+  * `ClientBatch`  — data `A (n, m, d)`, labels `b (n, m)`, shared ridge λ;
+  * `BatchedBasis` — one *kind* of `MatrixBasis` for the whole fleet, with
+    per-client `DataOuterBasis` matrices zero-padded to a common `r_max`
+    (`V (n, d, r_max)`; padded columns are exactly zero, so coefficients
+    beyond a client's true rank are exactly zero — identical to the reference
+    padding of r×r coefficients into a d×d array).
+
+Both are registered JAX pytrees, so they flow through `jit`/`vmap`/`scan`
+untouched.  The batched GLM math below mirrors `repro.core.glm` one-to-one
+(same formulas, vectorized over the client axis), which is what makes the
+fast-vs-reference parity tests in `tests/test_batched_parity.py` tight.
+
+The hot coefficient transform Γ = VᵀAV can be routed through the batched
+Pallas `basis_project` kernel (`repro.kernels.ops`) by setting
+``REPRO_BL_PALLAS=1`` (or compiling the kernels with
+``REPRO_PALLAS_COMPILE=1`` on a real accelerator); the default on CPU is a
+float64 einsum, which the parity tests rely on (the Pallas MXU path
+accumulates in f32).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import glm
+from .basis import DataOuterBasis, MatrixBasis, StandardBasis, SymmetricBasis
+from .compressors import FLOAT_BITS
+
+
+# --------------------------------------------------------------------------
+# pytrees
+# --------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ClientBatch:
+    """All clients' GLM data stacked on a leading client axis."""
+
+    A: jax.Array  # (n, m, d)
+    b: jax.Array  # (n, m)
+    lam: float    # shared ridge coefficient (static)
+
+    @property
+    def n(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.A.shape[1]
+
+    @property
+    def d(self) -> int:
+        return self.A.shape[2]
+
+    def tree_flatten(self):
+        return (self.A, self.b), (self.lam,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(A=children[0], b=children[1], lam=aux[0])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BatchedBasis:
+    """A fleet-wide basis: one basis *kind*, per-client parameters stacked.
+
+    kind ∈ {"standard", "symmetric", "data_outer"}.  For "data_outer", `V` is
+    (n, d, r_max) with orthonormal columns up to each client's true rank and
+    exact-zero padding beyond; `rs` keeps the true per-client ranks for bit
+    accounting (the wire cost depends on r_i, not r_max).
+    """
+
+    kind: str                   # static
+    d: int                      # static
+    rs: Tuple[int, ...]         # static: per-client ranks (d for non-data bases)
+    V: Optional[jax.Array] = None  # (n, d, r_max) for kind == "data_outer"
+
+    @property
+    def r_max(self) -> int:
+        return max(self.rs)
+
+    def tree_flatten(self):
+        return (self.V,), (self.kind, self.d, self.rs)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(kind=aux[0], d=aux[1], rs=aux[2], V=children[0])
+
+    # ---- bit accounting (host-side floats, no device sync) ----------------
+    def grad_uplink_bits_mean(self) -> float:
+        """Per-client gradient uplink cost, averaged over the fleet (§2.3:
+        r_i coefficients for data bases, d floats otherwise)."""
+        if self.kind == "data_outer":
+            return sum(r * FLOAT_BITS for r in self.rs) / len(self.rs)
+        return self.d * FLOAT_BITS
+
+    def transmission_bits_mean(self) -> float:
+        """One-time basis shipping cost averaged over clients (Table 1)."""
+        if self.kind == "data_outer":
+            return sum(self.d * r * FLOAT_BITS for r in self.rs) / len(self.rs)
+        return 0.0
+
+    def coeff_count_mean(self) -> float:
+        if self.kind == "data_outer":
+            return sum(r * r for r in self.rs) / len(self.rs)
+        if self.kind == "symmetric":
+            return self.d * (self.d + 1) / 2
+        return self.d * self.d
+
+    def init_bits_mean(self, init_exact: bool) -> float:
+        bits = self.transmission_bits_mean()
+        if init_exact:
+            bits += self.coeff_count_mean() * FLOAT_BITS
+        return bits
+
+    # ---- coefficient transforms (batched h / reconstruct) -----------------
+    def h(self, A: jax.Array) -> jax.Array:
+        """Batched coefficient matrices: A (n, d, d) → (n, d, d)."""
+        if self.kind == "standard":
+            return A
+        if self.kind == "symmetric":
+            return jnp.tril(A)
+        gamma = _basis_project(self.V, A)            # (n, r_max, r_max)
+        out = jnp.zeros(A.shape, A.dtype)
+        return out.at[:, : self.r_max, : self.r_max].set(gamma)
+
+    def reconstruct(self, H: jax.Array) -> jax.Array:
+        """Batched Σ_{jl} H_{jl} B^{jl}: H (n, d, d) → (n, d, d)."""
+        if self.kind == "standard":
+            return H
+        if self.kind == "symmetric":
+            return jnp.tril(H) + jnp.transpose(jnp.tril(H, -1), (0, 2, 1))
+        gamma = H[:, : self.r_max, : self.r_max]
+        return jnp.einsum("ndr,nrs,nes->nde", self.V, gamma, self.V)
+
+    def server_reconstruct(self, H: jax.Array, lam: float) -> jax.Array:
+        """Reconstruct + analytic λI ridge for data bases (as the server does)."""
+        out = self.reconstruct(H)
+        if self.kind == "data_outer":
+            out = out + lam * jnp.eye(self.d, dtype=out.dtype)
+        return out
+
+
+def _basis_project(V: jax.Array, A: jax.Array) -> jax.Array:
+    """Γ = VᵀAV batched over clients: (n,d,r),(n,d,d) → (n,r,r).
+
+    Routed through the Pallas `basis_project` kernel when REPRO_BL_PALLAS=1
+    (accelerator deployments); einsum in float64 otherwise.
+    """
+    if os.environ.get("REPRO_BL_PALLAS", "0") == "1":
+        from repro.kernels import ops
+
+        return ops.basis_project(V, A)
+    return jnp.einsum("ndr,nde,nes->nrs", V, A, V)
+
+
+# --------------------------------------------------------------------------
+# builders
+# --------------------------------------------------------------------------
+def from_clients(clients: Sequence[glm.ClientData]) -> Optional[ClientBatch]:
+    """Stack a homogeneous client list; None if shapes/λ differ (fall back)."""
+    clients = list(clients)
+    if not clients:
+        return None
+    shape = clients[0].A.shape
+    lam = clients[0].lam
+    for c in clients:
+        if c.A.shape != shape or c.b.shape != (shape[0],) or c.lam != lam:
+            return None
+    return ClientBatch(
+        A=jnp.stack([c.A for c in clients]),
+        b=jnp.stack([c.b for c in clients]),
+        lam=lam,
+    )
+
+
+def stack_bases(bases: Sequence[MatrixBasis]) -> Optional[BatchedBasis]:
+    """Stack a homogeneous-kind basis list; None if mixed kinds (fall back)."""
+    bases = list(bases)
+    if not bases:
+        return None
+    b0 = bases[0]
+    if all(type(b) is StandardBasis for b in bases):
+        if any(b.d != b0.d for b in bases):
+            return None
+        return BatchedBasis(kind="standard", d=b0.d, rs=tuple(b.d for b in bases))
+    if all(type(b) is SymmetricBasis for b in bases):
+        if any(b.d != b0.d for b in bases):
+            return None
+        return BatchedBasis(kind="symmetric", d=b0.d, rs=tuple(b.d for b in bases))
+    if all(type(b) is DataOuterBasis for b in bases):
+        if any(b.d != b0.d for b in bases):
+            return None
+        rs = tuple(b.r for b in bases)
+        r_max = max(rs)
+        V = jnp.stack(
+            [
+                jnp.pad(b.V, ((0, 0), (0, r_max - b.r)))  # zero cols beyond r_i
+                for b in bases
+            ]
+        )
+        return BatchedBasis(kind="data_outer", d=b0.d, rs=rs, V=V)
+    return None
+
+
+# --------------------------------------------------------------------------
+# batched GLM math (mirrors repro.core.glm, vectorized over clients)
+# --------------------------------------------------------------------------
+def _per_client_x(batch: ClientBatch, x: jax.Array) -> jax.Array:
+    """Broadcast a shared iterate (d,) to (n, d); pass (n, d) through."""
+    if x.ndim == 1:
+        return jnp.broadcast_to(x, (batch.n, batch.d))
+    return x
+
+
+def losses(batch: ClientBatch, x: jax.Array) -> jax.Array:
+    xb = _per_client_x(batch, x)
+    z = jnp.einsum("nmd,nd->nm", batch.A, xb) * batch.b
+    data = jnp.mean(jnp.logaddexp(0.0, -z), axis=1)
+    return data + 0.5 * batch.lam * jnp.sum(xb * xb, axis=1)
+
+
+def global_loss(batch: ClientBatch, x: jax.Array) -> jax.Array:
+    return jnp.mean(losses(batch, x))
+
+
+def grads(batch: ClientBatch, x: jax.Array) -> jax.Array:
+    """Per-client gradients (n, d) at a shared or per-client iterate."""
+    xb = _per_client_x(batch, x)
+    z = jnp.einsum("nmd,nd->nm", batch.A, xb) * batch.b
+    coef = -batch.b * glm.sigmoid(-z)
+    return jnp.einsum("nmd,nm->nd", batch.A, coef) / batch.m + batch.lam * xb
+
+
+def global_grad(batch: ClientBatch, x: jax.Array) -> jax.Array:
+    return jnp.mean(grads(batch, x), axis=0)
+
+
+def hess_weights(batch: ClientBatch, x: jax.Array) -> jax.Array:
+    xb = _per_client_x(batch, x)
+    z = jnp.einsum("nmd,nd->nm", batch.A, xb) * batch.b
+    s = glm.sigmoid(z)
+    return s * (1.0 - s)
+
+
+def hess_data_part(batch: ClientBatch, x: jax.Array) -> jax.Array:
+    """Per-client data-part Hessians (n, d, d) — no λI term (§2.3)."""
+    w = hess_weights(batch, x)
+    return jnp.einsum("nmd,nm,nme->nde", batch.A, w, batch.A) / batch.m
+
+
+def hess(batch: ClientBatch, x: jax.Array) -> jax.Array:
+    """Per-client full Hessians (n, d, d)."""
+    H = hess_data_part(batch, x)
+    return H + batch.lam * jnp.eye(batch.d, dtype=H.dtype)
+
+
+def global_hess(batch: ClientBatch, x: jax.Array) -> jax.Array:
+    return jnp.mean(hess(batch, x), axis=0)
+
+
+def hess_coeff_target(basisb: BatchedBasis, batch: ClientBatch, x: jax.Array) -> jax.Array:
+    """Batched h^i(∇²f_i): data bases see only the data part (ridge is added
+    analytically server-side), dense bases see the full Hessian — exactly
+    `bl._client_hcoef` vectorized."""
+    if basisb.kind == "data_outer":
+        return basisb.h(hess_data_part(batch, x))
+    return basisb.h(hess(batch, x))
+
+
+# --------------------------------------------------------------------------
+# r-dim coordinate-space fast path (§2.3): never materialize the d×d Hessian
+# --------------------------------------------------------------------------
+def basis_AV(basisb: BatchedBasis, batch: ClientBatch) -> jax.Array:
+    """Per-client data matrices pre-rotated into the basis: (n, m, r_max).
+
+    Computed once per run; with it the coefficient target collapses to an
+    r-dim quadratic form (`hess_coeff_block`)."""
+    return jnp.einsum("nmd,ndr->nmr", batch.A, basisb.V)
+
+
+def hess_coeff_block(basisb: BatchedBasis, batch: ClientBatch, x: jax.Array,
+                     AV: jax.Array) -> jax.Array:
+    """Γ_i = Vᵢᵀ(∇²f_i^data)Vᵢ = (AᵢVᵢ)ᵀ Dᵢ (AᵢVᵢ)/m, natively (n, r, r).
+
+    Same math as `hess_coeff_target` for the data basis, but O(n·m·r²)
+    instead of O(n·m·d²) and no (n, d, d) intermediate — the batched
+    engine's block mode keeps coefficient state in this compact form."""
+    w = hess_weights(batch, x)
+    return jnp.einsum("nmr,nm,nms->nrs", AV, w, AV) / batch.m
+
+
+def reconstruct_block(basisb: BatchedBasis, G: jax.Array) -> jax.Array:
+    """(n, r, r) block coefficients → (n, d, d) data-part Hessians."""
+    return jnp.einsum("ndr,nrs,nes->nde", basisb.V, G, basisb.V)

@@ -17,6 +17,7 @@ comparable, matching the plots' "communicated bits per node" axis).
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Optional, Tuple
 
@@ -42,6 +43,19 @@ class Compressor:
         """Returns (compressed_dense, bits_transmitted)."""
         raise NotImplementedError
 
+    def batched(self, keys: Optional[jax.Array], x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Vectorized entry point: compress a stack of n inputs at once.
+
+        `x` carries a leading client axis (n, ...); `keys` is (n, 2) PRNG keys
+        (ignored by deterministic compressors — pass None to get dummies).
+        Returns (compressed (n, ...), bits (n,)).  Every compressor here is
+        jit/vmap-traceable, so this is the building block of the batched BL
+        engine (`repro.core.batched`).
+        """
+        if keys is None:
+            keys = jax.random.split(jax.random.PRNGKey(0), x.shape[0])
+        return jax.vmap(self.__call__)(keys, x)
+
     # default recommended step size for Hessian learning
     def alpha(self) -> float:
         if self.is_unbiased:
@@ -49,7 +63,7 @@ class Compressor:
         return 1.0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(unsafe_hash=True)
 class Identity(Compressor):
     """No compression; full tensor on the wire."""
     is_unbiased = True
@@ -61,7 +75,30 @@ class Identity(Compressor):
         return x, jnp.asarray(x.size * FLOAT_BITS, jnp.float64)
 
 
-@dataclasses.dataclass
+def _topk_keep_mask(v: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the K largest-|v| entries along the last axis.
+
+    The threshold search runs on an f32 copy — XLA's CPU sort/top_k on f64 is
+    ~75× slower, and this selection is the batched BL engine's hot spot.
+    Exactly K entries are kept per row: entries strictly above the f32
+    threshold, then earliest-index entries inside the threshold tie group
+    (sub-f32-ulp value differences inside the group are broken by index).
+    Scatter-free on purpose: mask + `where` instead of `.at[idx].set`.
+    """
+    a32 = jnp.abs(v).astype(jnp.float32)
+    vals, idx = jax.lax.top_k(a32, k)
+    # keep both outputs alive: with the indices dead, XLA rewrites top_k into
+    # a full stable sort (~12× slower on CPU for the d² coefficient arrays)
+    vals, _ = jax.lax.optimization_barrier((vals, idx))
+    t = vals[..., -1:]
+    above = a32 > t
+    eq = a32 == t
+    n_above = jnp.sum(above, axis=-1, keepdims=True)
+    cum = jnp.cumsum(eq, axis=-1)
+    return above | (eq & (cum <= k - n_above))
+
+
+@dataclasses.dataclass(unsafe_hash=True)
 class TopK(Compressor):
     """Greedy sparsification (Eq. 21): keep K largest-|.| entries.
 
@@ -79,18 +116,45 @@ class TopK(Compressor):
             d = shape[0]
             iu = jnp.triu_indices(d)
             v = x[iu]
-            _, idx = jax.lax.top_k(jnp.abs(v), min(self.k, v.size))
-            mask_flat = jnp.zeros(v.size, bool).at[idx].set(True)
-            vals = jnp.where(mask_flat, v, 0.0)
-            out = jnp.zeros_like(x).at[iu].set(vals)
+            kk = min(self.k, v.size)
+            keep_tri = _topk_keep_mask(v, kk)
+            # gather the triangular mask back to the dense upper half
+            # (static index map — no scatter)
+            pos = jnp.zeros((d, d), jnp.int32).at[iu].set(jnp.arange(v.size, dtype=jnp.int32))
+            upper = jnp.triu(jnp.ones((d, d), bool))
+            keep_full = keep_tri[pos] & upper
+            out = jnp.where(keep_full, x, 0.0)
             out = out + jnp.triu(out, 1).T
-            bits = idx.size * (FLOAT_BITS + INDEX_BITS)
+            bits = kk * (FLOAT_BITS + INDEX_BITS)
             return out, jnp.asarray(bits, jnp.float64)
         v = x.reshape(-1)
         kk = min(self.k, v.size)
-        _, idx = jax.lax.top_k(jnp.abs(v), kk)
-        out = jnp.zeros_like(v).at[idx].set(v[idx]).reshape(shape)
+        out = jnp.where(_topk_keep_mask(v, kk), v, 0.0).reshape(shape)
         return out, jnp.asarray(kk * (FLOAT_BITS + INDEX_BITS), jnp.float64)
+
+    def batched(self, keys, x):
+        """Natively batched (no vmap — optimization_barrier has no batching
+        rule, and `top_k`/the mask algebra batch over the last axis anyway)."""
+        n = x.shape[0]
+        if self.symmetrize and x.ndim == 3 and x.shape[1] == x.shape[2]:
+            d = x.shape[1]
+            iu = jnp.triu_indices(d)
+            v = x[:, iu[0], iu[1]]                      # (n, T)
+            kk = min(self.k, v.shape[1])
+            keep_tri = _topk_keep_mask(v, kk)
+            pos = jnp.zeros((d, d), jnp.int32).at[iu].set(
+                jnp.arange(v.shape[1], dtype=jnp.int32))
+            upper = jnp.triu(jnp.ones((d, d), bool))
+            keep_full = keep_tri[:, pos] & upper
+            out = jnp.where(keep_full, x, 0.0)
+            out = out + jnp.transpose(jnp.triu(out, 1), (0, 2, 1))
+            bits = jnp.full((n,), kk * (FLOAT_BITS + INDEX_BITS), jnp.float64)
+            return out, bits
+        v = x.reshape(n, -1)
+        kk = min(self.k, v.shape[1])
+        out = jnp.where(_topk_keep_mask(v, kk), v, 0.0).reshape(x.shape)
+        bits = jnp.full((n,), kk * (FLOAT_BITS + INDEX_BITS), jnp.float64)
+        return out, bits
 
     @property
     def _delta_for(self):
@@ -100,7 +164,7 @@ class TopK(Compressor):
         return min(self.k, numel) / numel
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(unsafe_hash=True)
 class RandK(Compressor):
     """Random sparsification (Eq. 22): unbiased, ω = numel/K − 1."""
     k: int
@@ -124,7 +188,7 @@ class RandK(Compressor):
         return 1.0 / (self.omega_for(numel) + 1.0)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(unsafe_hash=True)
 class RankR(Compressor):
     """Low-rank approximation via SVD (Eq. 19–20).
 
@@ -141,7 +205,6 @@ class RankR(Compressor):
         u, s, vt = jnp.linalg.svd(x, full_matrices=False)
         rr = min(self.r, s.size)
         out = (u[:, :rr] * s[:rr]) @ vt[:rr, :]
-        d = min(x.shape)
         # wire format: R singular triples (u_i, σ_i, v_i)
         bits = rr * (x.shape[0] + x.shape[1] + 1) * FLOAT_BITS
         return out, jnp.asarray(bits, jnp.float64)
@@ -153,22 +216,23 @@ class RankR(Compressor):
 def _dither(key, x, s, q=2):
     """Random dithering (Eq. 17–18) with s levels, q-norm."""
     v = x.reshape(-1)
-    norm = jnp.linalg.norm(v, ord=q)
-    norm = jnp.where(norm == 0, 1.0, norm)
+    raw_norm = jnp.linalg.norm(v, ord=q)
+    norm = jnp.where(raw_norm == 0, 1.0, raw_norm)
     a = jnp.abs(v) / norm * s          # in [0, s]
     low = jnp.floor(a)
     pup = a - low                       # P[round up]
     up = jax.random.bernoulli(key, pup.astype(jnp.float32))
     lev = low + up
     out = jnp.sign(v) * norm * lev / s
-    out = jnp.where(jnp.linalg.norm(x.reshape(-1), ord=q) == 0, 0.0, out)
+    out = jnp.where(raw_norm == 0, 0.0, out)
     # wire: 1 norm float + per-entry (sign + level) ~ (1 + ceil(log2(s+1))) bits
-    lev_bits = int(jnp.ceil(jnp.log2(s + 1)))
+    # (s is a Python int — keep the bit count on the host, no device sync)
+    lev_bits = math.ceil(math.log2(s + 1))
     bits = FLOAT_BITS + v.size * (1 + lev_bits)
     return out.reshape(x.shape), jnp.asarray(bits, jnp.float64)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(unsafe_hash=True)
 class RandomDithering(Compressor):
     """Unbiased; ω ≤ min(d/s², √d/s) for q=2 [Alistarh et al. 2017]."""
     s: int
@@ -184,7 +248,7 @@ class RandomDithering(Compressor):
         return min(numel / self.s**2, numel**0.5 / self.s)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(unsafe_hash=True)
 class NaturalCompression(Compressor):
     """Round |x| to a power of two, randomly up/down (unbiased, ω = 1/8).
 
@@ -207,7 +271,7 @@ class NaturalCompression(Compressor):
         return out, jnp.asarray(v.size * 9, jnp.float64)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(unsafe_hash=True)
 class ComposedTopK(Compressor):
     """Top-K followed by an unbiased compressor on the kept values (§A.5).
 
@@ -225,7 +289,11 @@ class ComposedTopK(Compressor):
     def __call__(self, key, x):
         v = x.reshape(-1)
         kk = min(self.k, v.size)
-        _, idx = jax.lax.top_k(jnp.abs(v), kk)
+        # f32 selection (see _topk_keep_mask) — f64 top_k is the CPU hot
+        # spot; the kept *values* stay full precision.  Barrier keeps the
+        # TopK custom call from decomposing into a full sort (vals unused).
+        vals, idx = jax.lax.top_k(jnp.abs(v).astype(jnp.float32), kk)
+        _, idx = jax.lax.optimization_barrier((vals, idx))
         kept = v[idx]
         cv, inner_bits = self.inner(key, kept)
         if self.unbias_correct:
@@ -237,8 +305,30 @@ class ComposedTopK(Compressor):
         bits = inner_bits + kk * INDEX_BITS
         return out, bits
 
+    def batched(self, keys, x):
+        """Natively batched — same selection/scatter as `__call__` per row
+        (vmap would trip on optimization_barrier's missing batching rule)."""
+        n = x.shape[0]
+        v = x.reshape(n, -1)
+        kk = min(self.k, v.shape[1])
+        vals, idx = jax.lax.top_k(jnp.abs(v).astype(jnp.float32), kk)
+        vals, idx = jax.lax.optimization_barrier((vals, idx))
+        kept = jnp.take_along_axis(v, idx, axis=1)
+        if keys is None:
+            keys = jax.random.split(jax.random.PRNGKey(0), n)
+        cv, inner_bits = jax.vmap(self.inner)(keys, kept)
+        if self.unbias_correct:
+            om = getattr(self.inner, "omega", None)
+            if om is None:
+                om = self.inner.omega_for(kk)
+            cv = cv / (om + 1.0)
+        out = jnp.zeros_like(v)
+        out = jax.vmap(lambda o, i, c: o.at[i].set(c))(out, idx, cv)
+        bits = inner_bits + kk * INDEX_BITS
+        return out.reshape(x.shape), bits
 
-@dataclasses.dataclass
+
+@dataclasses.dataclass(unsafe_hash=True)
 class ComposedRankR(Compressor):
     """C1 of §3: Rank-R with unbiasedly-compressed singular vectors.
 
@@ -257,20 +347,18 @@ class ComposedRankR(Compressor):
         keys = jax.random.split(key, 2 * rr)
         om1 = self.inner_u.omega if self.inner_u.omega is not None else self.inner_u.omega_for(x.shape[0])
         om2 = self.inner_v.omega if self.inner_v.omega is not None else self.inner_v.omega_for(x.shape[1])
-        out = jnp.zeros_like(x)
-        bits = jnp.asarray(rr * FLOAT_BITS, jnp.float64)  # singular values
-        for i in range(rr):
-            qu, bu = self.inner_u(keys[2 * i], u[:, i])
-            qv, bv = self.inner_v(keys[2 * i + 1], vt[i, :])
-            out = out + s[i] * jnp.outer(qu, qv) / ((om1 + 1.0) * (om2 + 1.0))
-            bits = bits + bu + bv
-        was_sym = jnp.allclose(x, x.T)
+        # vectorized over the rr singular triples (keys laid out exactly as the
+        # historical op-by-op loop: even → u-vector, odd → v-vector)
+        qu, bu = jax.vmap(self.inner_u)(keys[0::2], u[:, :rr].T)   # (rr, m)
+        qv, bv = jax.vmap(self.inner_v)(keys[1::2], vt[:rr, :])    # (rr, n)
+        out = jnp.einsum("r,rm,rn->mn", s[:rr], qu, qv) / ((om1 + 1.0) * (om2 + 1.0))
+        bits = jnp.asarray(rr * FLOAT_BITS, jnp.float64) + jnp.sum(bu) + jnp.sum(bv)
         if self.symmetrize:
-            out = jnp.where(was_sym, (out + out.T) / 2.0, out)
+            out = jnp.where(jnp.allclose(x, x.T), (out + out.T) / 2.0, out)
         return out, bits
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(unsafe_hash=True)
 class BernoulliLazy(Compressor):
     """Lazy Bernoulli compressor (§A.8): send full tensor w.p. p, else zero.
 

@@ -26,7 +26,23 @@ def matmul(a, b, out_dtype=jnp.float32, **tiles):
 
 
 def basis_project(V, A, **tiles):
-    """Γ = Vᵀ A V — the per-iteration BL coefficient computation (Eq. 5)."""
+    """Γ = Vᵀ A V — the per-iteration BL coefficient computation (Eq. 5).
+
+    Accepts a leading batch dimension (the batched BL engine's stacked-client
+    layout): V (n, d, r) with A (n, d, d) → (n, r, r), mapped over the same
+    tiled Pallas matmul kernel.  2-D inputs keep the original single-client
+    path.  The kernel accumulates in f32 (MXU) — use the engine's default
+    einsum path when float64 trajectories matter (CPU parity tests).
+    """
+    if A.ndim == 3:
+        if V.ndim == 2:
+            V = jnp.broadcast_to(V, (A.shape[0],) + V.shape)
+
+        def _one(Vi, Ai):
+            T = matmul(Ai, Vi, **tiles)                  # (d, r)
+            return matmul(Vi.T, T, **tiles)              # (r, r)
+
+        return jax.vmap(_one)(V, A)
     T = matmul(A, V, **tiles)          # (d, r)
     return matmul(V.T, T, **tiles)     # (r, r)
 

@@ -1,0 +1,275 @@
+"""Fast-path (repro.core.batched) vs reference-backend parity.
+
+Deterministic compressors + full participation must give identical
+trajectories (≤1e-8 gap difference); stochastic configurations draw from a
+different PRNG stream and are checked on their convergence envelope only.
+BL3's Top-K configurations are additionally tie-sensitive (a 1e-15
+perturbation can flip which of two near-tied coefficients is kept), so the
+strict parity check uses a tie-free compressor and the Top-K check is a
+relative envelope.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, batched, bl, glm
+from repro.core import compressors as C
+from repro.core.basis import StandardBasis, orth_basis_from_data
+from repro.core.compressors import (
+    Identity,
+    NaturalCompression,
+    RandK,
+    RandomDithering,
+    RankR,
+    TopK,
+    nrankr,
+    ntopk,
+    rrankr,
+    rtopk,
+)
+
+GAP_TOL = 1e-8
+
+
+@pytest.fixture(scope="module")
+def problem():
+    clients = glm.make_synthetic(seed=0, n_clients=6, m=30, d=40, r=12, lam=1e-3)
+    x0 = jnp.zeros(40, jnp.float64)
+    xs = glm.newton_solve(clients, x0, 20)
+    return clients, x0, xs
+
+
+def _both(fn):
+    """Run the same config on both backends and return (reference, fast)."""
+    return fn("reference"), fn("fast")
+
+
+def _assert_parity(h_ref, h_fast, gap_tol=GAP_TOL):
+    # atol pins converged trajectories at ≤1e-8; the tiny rtol only matters
+    # for transient gaps ≫1 where 1e-8 absolute is below f64 resolution
+    np.testing.assert_allclose(h_fast.gaps, h_ref.gaps, rtol=1e-9, atol=gap_tol)
+    np.testing.assert_allclose(h_fast.up_bits, h_ref.up_bits, rtol=1e-12)
+    np.testing.assert_allclose(h_fast.down_bits, h_ref.down_bits, rtol=1e-12)
+
+
+# ------------------------------ BL1 -----------------------------------------
+def test_bl1_parity_data_basis_topk(problem):
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    r = bases[0].r
+    h_ref, h_fast = _both(
+        lambda b: bl.bl1(clients, bases, [TopK(k=r) for _ in clients],
+                         Identity(), x0, xs, 14, backend=b)
+    )
+    _assert_parity(h_ref, h_fast)
+    assert h_fast.gaps[-1] < 1e-9  # still superlinear on the fast path
+
+
+def test_bl1_parity_standard_basis_rankr(problem):
+    """StandardBasis + Rank-R ≡ FedNL — the paper's headline comparison."""
+    clients, x0, xs = problem
+    bases = [StandardBasis(40) for _ in clients]
+    h_ref, h_fast = _both(
+        lambda b: bl.bl1(clients, bases, [RankR(r=1) for _ in clients],
+                         Identity(), x0, xs, 14, backend=b)
+    )
+    _assert_parity(h_ref, h_fast)
+
+
+def test_bl1_parity_no_exact_init(problem):
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    r = bases[0].r
+    h_ref, h_fast = _both(
+        lambda b: bl.bl1(clients, bases, [TopK(k=2 * r) for _ in clients],
+                         Identity(), x0, xs, 12, init_exact_hessian=False,
+                         backend=b)
+    )
+    _assert_parity(h_ref, h_fast)
+
+
+def test_bl1_stochastic_envelope(problem):
+    """Different PRNG streams ⇒ distributional match only: both backends
+    converge with the composed dithered Top-K compressor."""
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    r = bases[0].r
+    h_ref, h_fast = _both(
+        lambda b: bl.bl1(clients, bases, [rtopk(2 * r) for _ in clients],
+                         Identity(), x0, xs, 20, alpha=0.5, backend=b)
+    )
+    assert h_fast.gaps[-1] < 1e-8
+    assert h_ref.gaps[-1] < 1e-8
+
+
+def test_bl1_bidirectional_stochastic_envelope(problem):
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    r = bases[0].r
+    h_fast = bl.bl1(clients, bases, [TopK(k=r) for _ in clients],
+                    TopK(k=20), x0, xs, 30, p=0.5, seed=3, backend="fast")
+    assert h_fast.gaps[-1] < 1e-8
+    assert h_fast.down_bits[-1] > 0
+
+
+# ------------------------------ BL2 -----------------------------------------
+def test_bl2_parity_full_participation(problem):
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    r = bases[0].r
+    h_ref, h_fast = _both(
+        lambda b: bl.bl2(clients, bases, [TopK(k=4 * r) for _ in clients],
+                         [Identity() for _ in clients], x0, xs, 14, backend=b)
+    )
+    _assert_parity(h_ref, h_fast)
+    assert h_fast.gaps[-1] < 1e-7
+
+
+def test_bl2_partial_participation_envelope(problem):
+    """τ<n draws participation masks from different streams — envelope only."""
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    r = bases[0].r
+    h_fast = bl.bl2(clients, bases, [TopK(k=2 * r) for _ in clients],
+                    [Identity() for _ in clients], x0, xs, 35, tau=3, seed=2,
+                    backend="fast")
+    assert h_fast.gaps[-1] < 1e-6
+
+
+# ------------------------------ BL3 -----------------------------------------
+def test_bl3_parity_tie_free(problem):
+    """Identity Hessian compressor: no Top-K tie-flips, strict parity holds
+    for both β options."""
+    clients, x0, xs = problem
+    for option in (1, 2):
+        h_ref, h_fast = _both(
+            lambda b, option=option: bl.bl3(
+                clients, [Identity() for _ in clients],
+                [Identity() for _ in clients], x0, xs, 12, option=option,
+                backend=b)
+        )
+        _assert_parity(h_ref, h_fast)
+
+
+def test_bl3_topk_envelope(problem):
+    """Aggressive Top-K is tie-sensitive: the backends may pick different
+    near-tied coefficients, so require a tight *relative* envelope."""
+    clients, x0, xs = problem
+    h_ref, h_fast = _both(
+        lambda b: bl.bl3(clients, [TopK(k=80) for _ in clients],
+                         [Identity() for _ in clients], x0, xs, 15, backend=b)
+    )
+    g_ref = np.asarray(h_ref.gaps)
+    g_fast = np.asarray(h_fast.gaps)
+    np.testing.assert_allclose(g_fast, g_ref, rtol=1e-3)
+    np.testing.assert_allclose(h_fast.up_bits, h_ref.up_bits, rtol=1e-12)
+
+
+# ------------------------------ dispatch ------------------------------------
+def test_fast_backend_raises_on_heterogeneous_compressors(problem):
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    comps = [TopK(k=5 + i) for i in range(len(clients))]  # per-client configs
+    with pytest.raises(batched.FastPathUnavailable):
+        bl.bl1(clients, bases, comps, Identity(), x0, xs, 2, backend="fast")
+
+
+def test_auto_backend_falls_back(problem):
+    """auto silently routes heterogeneous configs to the reference loops and
+    must agree with an explicit reference run."""
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    comps = [TopK(k=10 + i) for i in range(len(clients))]
+    h_auto = bl.bl1(clients, bases, comps, Identity(), x0, xs, 4, backend="auto")
+    h_ref = bl.bl1(clients, bases, comps, Identity(), x0, xs, 4, backend="reference")
+    np.testing.assert_allclose(h_auto.gaps, h_ref.gaps, atol=0)
+
+
+def test_invalid_backend_rejected(problem):
+    clients, x0, xs = problem
+    with pytest.raises(ValueError):
+        bl.bl1(clients, [StandardBasis(40)] * 6, [Identity()] * 6, Identity(),
+               x0, xs, 1, backend="warp")
+
+
+# ------------------------------ compressors ---------------------------------
+@pytest.mark.parametrize(
+    "mk",
+    [
+        lambda: Identity(),
+        lambda: TopK(k=9),
+        lambda: TopK(k=9, symmetrize=True),
+        lambda: RandK(k=7),
+        lambda: RankR(r=2),
+        lambda: RandomDithering(s=4),
+        lambda: NaturalCompression(),
+        lambda: ntopk(6),
+        lambda: rtopk(6),
+        lambda: nrankr(2),
+        lambda: rrankr(2, 12),
+    ],
+)
+def test_batched_compressor_matches_loop(mk):
+    """`Compressor.batched` must agree bitwise with the per-client loop —
+    this is what makes the fast path's wire identical to the reference's."""
+    comp = mk()
+    X = jnp.asarray(np.random.default_rng(1).standard_normal((5, 12, 12)))
+    if getattr(comp, "symmetrize", False):
+        X = (X + X.transpose(0, 2, 1)) / 2.0
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    out_b, bits_b = comp.batched(keys, X)
+    for i in range(5):
+        out_i, bits_i = comp(keys[i], X[i])
+        np.testing.assert_array_equal(np.asarray(out_b[i]), np.asarray(out_i))
+        np.testing.assert_array_equal(np.asarray(bits_b[i]), np.asarray(bits_i))
+
+
+def test_dither_bit_count_is_host_side():
+    """The dithering bit count must not force a device→host sync (satellite
+    fix): it is a Python number before jnp.asarray, derived with math.log2."""
+    comp = RandomDithering(s=11)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(32))
+    _, bits = jax.jit(comp.__call__)(jax.random.PRNGKey(0), x)
+    # 1 norm float + 32 * (1 sign + ceil(log2(12)) = 4 level bits)
+    assert float(bits) == C.FLOAT_BITS + 32 * (1 + 4)
+
+
+# ------------------------------ baselines -----------------------------------
+def test_gd_fast_parity(problem):
+    clients, x0, xs = problem
+    h_ref = baselines.gd(clients, x0, xs, 25, backend="reference")
+    h_fast = baselines.gd(clients, x0, xs, 25, backend="fast")
+    np.testing.assert_allclose(h_fast.gaps, h_ref.gaps, atol=GAP_TOL)
+    np.testing.assert_allclose(h_fast.up_bits, h_ref.up_bits)
+
+
+def test_newton_fast_parity(problem):
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    for kw in (dict(), dict(bases=bases)):
+        h_ref = baselines.newton(clients, x0, xs, 6, backend="reference", **kw)
+        h_fast = baselines.newton(clients, x0, xs, 6, backend="fast", **kw)
+        np.testing.assert_allclose(h_fast.gaps, h_ref.gaps, atol=GAP_TOL)
+        np.testing.assert_allclose(h_fast.up_bits, h_ref.up_bits, rtol=1e-12)
+
+
+def test_diana_fast_envelope(problem):
+    clients, x0, xs = problem
+    comp = RandomDithering(s=8)
+    h_ref = baselines.diana(clients, x0, xs, 120, comp, comp.omega_for(40),
+                            backend="reference")
+    h_fast = baselines.diana(clients, x0, xs, 120, comp, comp.omega_for(40),
+                             backend="fast")
+    # same deterministic bit schedule, stochastic gaps within the same decade
+    np.testing.assert_allclose(h_fast.up_bits, h_ref.up_bits)
+    assert h_fast.gaps[-1] < h_fast.gaps[0]
+    assert abs(np.log10(h_fast.gaps[-1] + 1e-16) - np.log10(h_ref.gaps[-1] + 1e-16)) < 1.5
+
+
+def test_baselines_invalid_backend_rejected(problem):
+    clients, x0, xs = problem
+    with pytest.raises(ValueError):
+        baselines.gd(clients, x0, xs, 2, backend="warp")
+    with pytest.raises(ValueError):
+        baselines.newton(clients, x0, xs, 2, backend="refrence")

@@ -5,10 +5,16 @@ mesh construction, ShapeDtypeStruct input specs, param/cache shardings and
 the jit lowering path without paying a full compile.
 """
 import json
+import os
 import subprocess
 import sys
 
 import pytest
+
+# Inherit the parent environment (jax/XLA hang during backend init in
+# sandboxed containers when HOME/proxy vars are scrubbed); the test's
+# isolation only needs PYTHONPATH pinned to the repo's src tree.
+_SUBPROC_ENV = {**os.environ, "PYTHONPATH": "src"}
 
 
 @pytest.mark.parametrize("arch,shape", [
@@ -20,7 +26,7 @@ def test_dryrun_lowers_on_production_mesh(arch, shape):
         [sys.executable, "-m", "repro.launch.dryrun",
          "--arch", arch, "--shape", shape, "--no-compile"],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+        env=_SUBPROC_ENV)
     lines = [l for l in r.stdout.splitlines() if l.startswith("{")]
     assert lines, r.stdout + r.stderr[-2000:]
     rec = json.loads(lines[0])
@@ -36,6 +42,6 @@ def test_dryrun_multipod_mesh_shape():
          "m = make_production_mesh(multi_pod=True);"
          "print(dict(m.shape), m.axis_names)"],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+        env=_SUBPROC_ENV)
     assert "{'pod': 2, 'data': 16, 'model': 16}" in r.stdout, r.stdout + r.stderr
     assert "('pod', 'data', 'model')" in r.stdout

@@ -180,3 +180,31 @@ def test_glm_hessian_matches_core_glm():
     got = np.asarray(ops.glm_hessian(jnp.asarray(c.A, jnp.float32),
                                      jnp.asarray(w, jnp.float32), 1e-2))
     np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_basis_project_batched_leading_dim():
+    """Leading-batch-dim path (the batched BL engine's stacked-client layout)
+    must agree per client with the 2-D kernel path and the einsum oracle."""
+    rng = np.random.default_rng(7)
+    V = jnp.asarray(
+        np.stack([np.linalg.qr(rng.standard_normal((96, 24)))[0] for _ in range(4)]),
+        jnp.float32,
+    )
+    A = jnp.asarray(rng.standard_normal((4, 96, 96)), jnp.float32)
+    got = np.asarray(ops.basis_project(V, A, bm=32, bn=32, bk=32))
+    assert got.shape == (4, 24, 24)
+    want = np.asarray(jnp.einsum("ndr,nde,nes->nrs", V, A, V))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    for i in range(4):
+        one = np.asarray(ops.basis_project(V[i], A[i], bm=32, bn=32, bk=32))
+        np.testing.assert_allclose(got[i], one, rtol=1e-5, atol=1e-5)
+
+
+def test_basis_project_batched_shared_basis():
+    """A shared 2-D V broadcasts over the batch of matrices."""
+    rng = np.random.default_rng(8)
+    V = jnp.asarray(np.linalg.qr(rng.standard_normal((64, 16)))[0], jnp.float32)
+    A = jnp.asarray(rng.standard_normal((3, 64, 64)), jnp.float32)
+    got = np.asarray(ops.basis_project(V, A, bm=32, bn=32, bk=32))
+    want = np.asarray(jnp.einsum("dr,nde,es->nrs", V, A, V))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
