@@ -169,6 +169,63 @@ def fig6():
             ("fig6_BL3", 0.0, f"gap@30={h3.gaps[-1]:.2e}")]
 
 
+@bench("engine_sharded")
+def engine_sharded():
+    """Round-engine aggregation backends head-to-head: single-device vmap
+    reductions vs clients sharded over an 8-virtual-CPU-device mesh
+    (subprocess — the device count is locked at first jax init here).
+    On one physical CPU the sharded backend pays collective overhead; the
+    row exists to track that tax and to smoke the backend at bench scale."""
+    import subprocess
+    import sys
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax.numpy as jnp
+from repro.core import bl, glm
+from repro.core.basis import orth_basis_from_data
+from repro.core.compressors import Identity, TopK
+
+clients = glm.make_synthetic(seed=0, n_clients=8, m=60, d=120, r=24, lam=1e-3)
+x0 = jnp.zeros(120, jnp.float64)
+xs = glm.newton_solve(clients, x0, 20)
+bases = [orth_basis_from_data(c.A) for c in clients]
+r = bases[0].r
+STEPS = 6
+
+def run(backend):
+    return bl.bl1(clients, bases, [TopK(k=r)] * 8, Identity(), x0, xs, STEPS,
+                  backend=backend)
+
+for backend in ("fast", "fast+sharded"):
+    h = run(backend)  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        run(backend)
+    us = (time.perf_counter() - t0) / 3 / STEPS * 1e6
+    print(f"RESULT {backend} {us:.1f} {h.gaps[-1]:.3e}")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, timeout=900, env=env)
+    res = {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT"):
+            _, backend, us, gap = line.split()
+            res[backend] = (float(us), gap)
+    if set(res) != {"fast", "fast+sharded"}:
+        raise RuntimeError(proc.stdout + proc.stderr[-2000:])
+    tax = res["fast+sharded"][0] / res["fast"][0]
+    return [
+        ("engine_bl1_fast_8clients", res["fast"][0],
+         f"per_round;gap@6={res['fast'][1]}"),
+        ("engine_bl1_sharded_8dev", res["fast+sharded"][0],
+         f"per_round;overhead_vs_fast={tax:.2f}x;bitwise_equal_histories"),
+    ]
+
+
 # ---------------- kernel micro-benches --------------------------------------
 @bench("kernel_matmul")
 def kmatmul():

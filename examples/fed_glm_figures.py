@@ -19,7 +19,7 @@ import numpy as np
 from repro.core import baselines, bl, glm
 from repro.core.basis import StandardBasis, orth_basis_from_data
 from repro.core.compressors import (
-    Identity, RandK, RandomDithering, RankR, TopK, nrankr, ntopk, rrankr, rtopk,
+    Identity, RandomDithering, RankR, TopK, nrankr, ntopk, rrankr, rtopk,
 )
 
 

@@ -12,3 +12,4 @@ jax.config.update("jax_enable_x64", True)
 
 from . import basis, baselines, bl, compressors, glm  # noqa: E402,F401
 from . import batched, bl_reference, client_batch  # noqa: E402,F401
+from . import rounds, specs  # noqa: E402,F401

@@ -9,15 +9,15 @@ a DORE-style bidirectionally-compressed GD with error feedback.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import glm
-from .basis import DataOuterBasis, MatrixBasis
-from .bl import _BACKENDS, History, _grad_uplink_bits, _client_hcoef, _server_reconstruct, proj_mu
+from .basis import MatrixBasis
+from .bl import _BACKENDS, History, _client_hcoef, _server_reconstruct, proj_mu
 from .compressors import FLOAT_BITS, Compressor, RandK
 
 
@@ -54,9 +54,10 @@ def newton(
         from . import batched
 
         try:
-            return batched.newton_fast(clients, x0, x_star, steps, bases=bases)
+            return batched.newton_fast(clients, x0, x_star, steps, bases=bases,
+                                       sharded=(backend == "fast+sharded"))
         except batched.FastPathUnavailable:
-            if backend == "fast":
+            if backend != "auto":
                 raise
     clients = list(clients)
     n = len(clients)
@@ -84,6 +85,49 @@ def newton(
             up += sum(b.r * b.r + b.r for b in bases) / n * FLOAT_BITS
         x = x - jnp.linalg.solve(H, g)
     return hist
+
+
+def fednl_bag(
+    clients: Sequence[glm.ClientData],
+    bases: Sequence[MatrixBasis],
+    hess_comp: Sequence[Compressor],
+    x0: jax.Array,
+    x_star: jax.Array,
+    steps: int,
+    alpha: float = 1.0,
+    q: float = 0.5,
+    eta: Optional[float] = None,
+    mu: Optional[float] = None,
+    seed: int = 0,
+    init_exact_hessian: bool = True,
+    backend: str = "auto",
+) -> History:
+    """FedNL with Bernoulli-lazy gradient aggregation (BAG — after arXiv
+    2206.03588): the FedNL compressed Hessian-learning recursion plus a
+    gradient uplink where each client reports with probability q and the
+    server lazily reuses the last reported gradient of silent clients.
+
+    Spec-only method (`specs.FedNLBAGSpec` on the unified round engine);
+    there is no op-by-op reference backend — tests pin it against a
+    hand-rolled loop instead.
+    """
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+    if backend == "reference":
+        raise ValueError("fednl_bag is spec-only; no reference backend")
+    from . import batched
+
+    try:
+        return batched.fednl_bag_fast(
+            clients, bases, hess_comp, x0, x_star, steps, alpha=alpha, q=q,
+            eta=eta, mu=mu, seed=seed, init_exact_hessian=init_exact_hessian,
+            sharded=(backend == "fast+sharded"))
+    except batched.FastPathUnavailable as e:
+        # "auto" falls back to the reference loops everywhere else; with no
+        # reference backend to fall back to, surface a clear error instead
+        # of leaking the internal fallback signal
+        raise ValueError(
+            f"fednl_bag requires a stackable homogeneous fleet ({e})") from e
 
 
 def nl1(
@@ -147,9 +191,10 @@ def gd(clients, x0, x_star, steps, lr: Optional[float] = None,
         from . import batched
 
         try:
-            return batched.gd_fast(clients, x0, x_star, steps, lr=lr)
+            return batched.gd_fast(clients, x0, x_star, steps, lr=lr,
+                                   sharded=(backend == "fast+sharded"))
         except batched.FastPathUnavailable:
-            if backend == "fast":
+            if backend != "auto":
                 raise
     clients = list(clients)
     d = x0.shape[0]
@@ -186,9 +231,10 @@ def diana(
 
         try:
             return batched.diana_fast(clients, x0, x_star, steps, comp, omega,
-                                      lr=lr, seed=seed)
+                                      lr=lr, seed=seed,
+                                      sharded=(backend == "fast+sharded"))
         except batched.FastPathUnavailable:
-            if backend == "fast":
+            if backend != "auto":
                 raise
     clients = list(clients)
     n = len(clients)

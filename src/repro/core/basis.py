@@ -24,7 +24,6 @@ the bit accountant only ever "sees" r² potentially-nonzero coefficients.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,13 +5,14 @@ Per-client state lives in leading-axis-`n` stacked arrays (`ClientBatch`,
 vmapped `Compressor.batched` entry points; rounds run under one
 `jax.lax.scan`, so a whole optimization trajectory is a single XLA program
 with zero device→host syncs until the histories come back at the end.
-Partial participation is a Bernoulli mask folded into `jnp.where` updates
-instead of a Python `if part[i]`.
 
-Every runner is a module-level `jax.jit` with the compressors and scalar
-hyperparameters as *static* arguments (compressor dataclasses are hashable),
-so repeated calls with the same configuration — the benchmark and test
-pattern — hit the jit cache instead of retracing.
+The algorithms themselves live in `repro.core.specs` as declarative method
+specs (BL1/BL2/BL3/GD/DIANA/Newton/FedNL-BAG) plugged into the unified round
+engine `repro.core.rounds` — this module is the configuration layer: it
+validates/stacks the client fleet, builds the spec, and dispatches to the
+engine on either aggregation backend (`sharded=False` → single-device
+vmap reductions; `sharded=True` → clients sharded over the mesh `data`
+axis via shard_map, bitwise-identical trajectories by default).
 
 Parity contract (pinned by tests/test_batched_parity.py): with deterministic
 compressors and full participation the fast path reproduces the reference
@@ -26,22 +27,14 @@ back to the reference backend in that case.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import client_batch, glm
+from . import client_batch, rounds, specs
 from .basis import MatrixBasis
-from .bl import (
-    History,
-    _psd_h_tilde,
-    _psd_reconstruct_full,
-    _psd_sum_matrix,
-    proj_mu,
-)
+from .bl import History
 from .compressors import (
     FLOAT_BITS,
     BernoulliLazy,
@@ -114,34 +107,6 @@ def _f_star(batch, x_star) -> jax.Array:
     return client_batch.global_loss(batch, x_star)
 
 
-def _sym_b(H):
-    """(n, d, d) batched symmetrization."""
-    return (H + jnp.transpose(H, (0, 2, 1))) / 2.0
-
-
-def _fro_b(H):
-    """(n, d, d) → (n,) Frobenius norms."""
-    return jnp.sqrt(jnp.sum(H * H, axis=(1, 2)))
-
-
-def _mv(Hb, xb):
-    """(n, d, d) @ (n, d) → (n, d)."""
-    return jnp.einsum("nde,ne->nd", Hb, xb)
-
-
-def _participation(key, n: int, tau: int):
-    """Bernoulli(τ/n) mask with the reference's force-one-client fallback."""
-    part = jax.random.bernoulli(key, tau / n, (n,))
-    idx = jax.random.randint(key, (), 0, n)
-    return part | (~part.any() & (jnp.arange(n) == idx))
-
-
-def _xi_mask(key, n: int, p: float):
-    if p >= 1.0:
-        return jnp.ones((n,), bool)
-    return jax.random.bernoulli(key, p, (n,))
-
-
 def _block_mode(basisb, comp) -> bool:
     """True when coefficient state can live in compact (n, r, r) blocks.
 
@@ -161,343 +126,82 @@ def _block_mode(basisb, comp) -> bool:
     return False
 
 
+def _run(spec, batch, basisb, x0, x_star, steps, seed, *, sharded, exact=True):
+    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
+    gaps, ups, downs = rounds.run_rounds(
+        spec, batch, basisb, x0, _f_star(batch, x_star), keys,
+        sharded=sharded, exact=exact)
+    return _history(gaps, ups, downs)
+
+
 # ==========================================================================
 # BL1 — Algorithm 1 (fast path)
 # ==========================================================================
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "hess_comp", "model_comp", "alpha", "eta", "p", "mu",
-        "init_exact", "grad_bits", "init_up", "block",
-    ),
-)
-def _bl1_run(batch, basisb, x0, f_star, keys, *, hess_comp, model_comp,
-             alpha, eta, p, mu, init_exact, grad_bits, init_up, block):
-    n, d = batch.n, batch.d
-    lam = batch.lam
-
-    if block:
-        # §2.3 block mode: coefficient state stays (n, r, r); the d×d data
-        # Hessian is never materialized (Γ = (AV)ᵀD(AV)/m)
-        AV = client_batch.basis_AV(basisb, batch)
-        rb = basisb.r_max
-        target_at = lambda z: client_batch.hess_coeff_block(basisb, batch, z, AV)
-        recon = lambda S: client_batch.reconstruct_block(basisb, S)
-        L_shape = (n, rb, rb)
-        ridge = lam * jnp.eye(d, dtype=x0.dtype)
-    else:
-        target_at = lambda z: client_batch.hess_coeff_target(basisb, batch, z)
-        recon = basisb.reconstruct
-        L_shape = (n, d, d)
-        ridge = (lam * jnp.eye(d, dtype=x0.dtype)
-                 if basisb.kind == "data_outer" else jnp.zeros((d, d), x0.dtype))
-
-    L0 = target_at(x0) if init_exact else jnp.zeros(L_shape, x0.dtype)
-    H0 = jnp.mean(recon(L0), axis=0) + ridge
-    grad_w0 = client_batch.global_grad(batch, x0)
-
-    def step(carry, key_t):
-        z, w, L, H, grad_w, xi, up, down = carry
-        gap = client_batch.global_loss(batch, z) - f_star
-        ys = (gap, up, down)
-
-        Hmu = proj_mu(H, mu)
-        # gradient leg (both branches evaluated, selected by ξ)
-        grad_z = client_batch.global_grad(batch, z)
-        w_n = jnp.where(xi, z, w)
-        grad_w_n = jnp.where(xi, grad_z, grad_w)
-        g = jnp.where(xi, grad_z, Hmu @ (z - w) + grad_w)
-        up = up + jnp.where(xi, grad_bits, 0.0)
-
-        # Hessian-coefficient learning, all clients at once
-        k_h, k_m, k_xi = jax.random.split(key_t, 3)
-        target = target_at(z)
-        S, bits = hess_comp.batched(jax.random.split(k_h, n), target - L)
-        L_n = L + alpha * S
-        H_delta = jnp.mean(recon(alpha * S), axis=0)
-        up = up + jnp.mean(bits)
-
-        # server model step + compressed broadcast
-        x_next = z - jnp.linalg.solve(Hmu, g)
-        H_n = H + H_delta
-        v, vbits = model_comp(k_m, x_next - z)
-        down = down + vbits
-        z_n = z + eta * v
-        xi_n = _xi_mask(k_xi, 1, p)[0]
-        return (z_n, w_n, L_n, H_n, grad_w_n, xi_n, up, down), ys
-
-    carry0 = (
-        x0, x0, L0, H0, grad_w0, jnp.asarray(True),
-        jnp.asarray(init_up, jnp.float64), jnp.asarray(0.0, jnp.float64),
-    )
-    _, ys = jax.lax.scan(step, carry0, keys)
-    return ys
-
-
 def bl1_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
              alpha=1.0, eta=1.0, p=1.0, mu=None, seed=0,
-             init_exact_hessian=True) -> History:
+             init_exact_hessian=True, sharded=False) -> History:
     batch, basisb = _stack_or_raise(clients, bases)
     hc = _one_of(list(hess_comp), "hessian")
     _check_supported(model_comp)
-    mu = batch.lam if mu is None else mu
-    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
-    gaps, ups, downs = _bl1_run(
-        batch, basisb, x0, _f_star(batch, x_star), keys,
+    spec = specs.BL1Spec(
         hess_comp=hc, model_comp=model_comp, alpha=alpha, eta=eta, p=p,
-        mu=mu, init_exact=init_exact_hessian,
+        mu=batch.lam if mu is None else mu, init_exact=init_exact_hessian,
         grad_bits=basisb.grad_uplink_bits_mean(),
         init_up=basisb.init_bits_mean(init_exact_hessian),
         block=_block_mode(basisb, hc),
     )
-    return _history(gaps, ups, downs)
+    return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded)
 
 
 # ==========================================================================
 # BL2 — Algorithm 2 (fast path)
 # ==========================================================================
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "hess_comp", "model_comp", "alpha", "eta", "p", "tau",
-        "init_exact", "init_up", "block",
-    ),
-)
-def _bl2_run(batch, basisb, x0, f_star, keys, *, hess_comp, model_comp,
-             alpha, eta, p, tau, init_exact, init_up, block):
-    n, d = batch.n, batch.d
-    lam = batch.lam
-    I = jnp.eye(d, dtype=x0.dtype)
-
-    if block:
-        AV = client_batch.basis_AV(basisb, batch)
-        rb = basisb.r_max
-        target_at = lambda z: client_batch.hess_coeff_block(basisb, batch, z, AV)
-        recon = lambda S: client_batch.reconstruct_block(basisb, S)
-        L_shape = (n, rb, rb)
-    else:
-        target_at = lambda z: client_batch.hess_coeff_target(basisb, batch, z)
-        recon = basisb.reconstruct
-        L_shape = (n, d, d)
-    ridge = (lam * jnp.eye(d, dtype=x0.dtype)
-             if basisb.kind == "data_outer" else jnp.zeros((d, d), x0.dtype))
-
-    x0b = jnp.broadcast_to(x0, (n, d))
-    L0 = target_at(x0) if init_exact else jnp.zeros(L_shape, x0.dtype)
-    Hi0 = recon(L0) + ridge
-    li0 = _fro_b(_sym_b(Hi0) - client_batch.hess(batch, x0b))
-    gi0 = _mv(_sym_b(Hi0), x0b) + li0[:, None] * x0b - client_batch.grads(batch, x0b)
-
-    def step(carry, key_t):
-        z, w, L, Hi, li, gi, up, down = carry
-        H = jnp.mean(Hi, axis=0)
-        l_avg = jnp.mean(li)
-        g = jnp.mean(gi, axis=0)
-        x_cur = jnp.linalg.solve((H + H.T) / 2.0 + l_avg * I, g)
-        gap = client_batch.global_loss(batch, x_cur) - f_star
-        ys = (gap, up, down)
-
-        k_part, k_m, k_h, k_xi = jax.random.split(key_t, 4)
-        part = _participation(k_part, n, tau)
-
-        # compressed model broadcast (participants only)
-        v, vbits = model_comp.batched(jax.random.split(k_m, n), x_cur[None, :] - z)
-        z_n = jnp.where(part[:, None], z + eta * v, z)
-        down = down + jnp.sum(jnp.where(part, vbits, 0.0)) / n
-
-        # Hessian-coefficient learning
-        target = target_at(z_n)
-        S, sbits = hess_comp.batched(jax.random.split(k_h, n), target - L)
-        L_n = jnp.where(part[:, None, None], L + alpha * S, L)
-        Hi_n = jnp.where(part[:, None, None], Hi + recon(alpha * S), Hi)
-        Hs_n = _sym_b(Hi_n)
-        li_n = jnp.where(part, _fro_b(Hs_n - client_batch.hess(batch, z_n)), li)
-
-        xi = _xi_mask(k_xi, n, p) & part
-        w_n = jnp.where(xi[:, None], z_n, w)
-        # ξ=1: fresh g_i at the new w; ξ=0: server-reconstructed difference.
-        # Non-participants: Hi_n = Hi and li_n = li exactly, so gi_recon = gi.
-        gi_fresh = _mv(Hs_n, w_n) + li_n[:, None] * w_n - client_batch.grads(batch, w_n)
-        gi_recon = gi + _mv(Hs_n - _sym_b(Hi), w) + (li_n - li)[:, None] * w
-        gi_n = jnp.where(xi[:, None], gi_fresh, gi_recon)
-
-        g_bits = jnp.where(xi, d * FLOAT_BITS, FLOAT_BITS + 1.0)
-        up = up + jnp.sum(jnp.where(part, sbits + g_bits, 0.0)) / n
-        return (z_n, w_n, L_n, Hi_n, li_n, gi_n, up, down), ys
-
-    carry0 = (
-        x0b, x0b, L0, Hi0, li0, gi0,
-        jnp.asarray(init_up, jnp.float64), jnp.asarray(0.0, jnp.float64),
-    )
-    _, ys = jax.lax.scan(step, carry0, keys)
-    return ys
-
-
 def bl2_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
              alpha=1.0, eta=1.0, p=1.0, tau=None, seed=0,
-             init_exact_hessian=True) -> History:
+             init_exact_hessian=True, sharded=False) -> History:
     batch, basisb = _stack_or_raise(clients, bases)
     hc = _one_of(list(hess_comp), "hessian")
     mc = _one_of(list(model_comp), "model")
-    tau = batch.n if tau is None else tau
-    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
-    gaps, ups, downs = _bl2_run(
-        batch, basisb, x0, _f_star(batch, x_star), keys,
-        hess_comp=hc, model_comp=mc, alpha=alpha, eta=eta, p=p, tau=tau,
-        init_exact=init_exact_hessian,
+    spec = specs.BL2Spec(
+        hess_comp=hc, model_comp=mc, alpha=alpha, eta=eta, p=p,
+        tau=batch.n if tau is None else tau, init_exact=init_exact_hessian,
         init_up=basisb.init_bits_mean(init_exact_hessian),
         block=_block_mode(basisb, hc),
     )
-    return _history(gaps, ups, downs)
+    return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded)
 
 
 # ==========================================================================
 # BL3 — Algorithm 3 (fast path, PSD basis of Example 5.1)
 # ==========================================================================
-@functools.partial(
-    jax.jit,
-    static_argnames=("hess_comp", "model_comp", "alpha", "eta", "p", "tau",
-                     "c", "option"),
-)
-def _bl3_run(batch, x0, f_star, keys, *, hess_comp, model_comp, alpha, eta,
-             p, tau, c, option):
-    n, d = batch.n, batch.d
-    Ssum = _psd_sum_matrix(d, x0.dtype)
-    h_tilde = jax.vmap(_psd_h_tilde)
-    recon_full = jax.vmap(_psd_reconstruct_full)
-
-    x0b = jnp.broadcast_to(x0, (n, d))
-    L0 = h_tilde(client_batch.hess(batch, x0b))
-    gam0 = jnp.maximum(c, jnp.max(jnp.abs(L0), axis=(1, 2)))
-    A0 = recon_full(L0) + 2.0 * gam0[:, None, None] * Ssum
-    C0 = 2.0 * gam0[:, None, None] * Ssum
-    beta0 = jnp.max(
-        (L0 + 2.0 * gam0[:, None, None]) / (L0 + 2.0 * gam0[:, None, None]),
-        axis=(1, 2),
-    )  # h̃(∇²f_i(w⁰)) = L⁰ at init, so β_i⁰ = 1 exactly (as the reference)
-    g1_0 = _mv(A0, x0b)
-    g2_0 = _mv(C0, x0b) + client_batch.grads(batch, x0b)
-
-    def step(carry, key_t):
-        z, w, zprev, L, gam, A_i, C_i, g1, g2, beta_i, up, down = carry
-        beta = jnp.max(beta_i)
-        Hk = beta * jnp.mean(A_i, axis=0) - jnp.mean(C_i, axis=0)
-        gk = beta * jnp.mean(g1, axis=0) - jnp.mean(g2, axis=0)
-        x_cur = jnp.linalg.solve(Hk, gk)
-        gap = client_batch.global_loss(batch, x_cur) - f_star
-        ys = (gap, up, down)
-
-        k_part, k_m, k_h, k_xi = jax.random.split(key_t, 4)
-        part = _participation(k_part, n, tau)
-
-        v, vbits = model_comp.batched(jax.random.split(k_m, n), x_cur[None, :] - z)
-        zprev_n = jnp.where(part[:, None], z, zprev)
-        z_n = jnp.where(part[:, None], z + eta * v, z)
-        down = down + jnp.sum(jnp.where(part, vbits, 0.0)) / n
-
-        target = h_tilde(client_batch.hess(batch, z_n))
-        S, sbits = hess_comp.batched(jax.random.split(k_h, n), target - L)
-        L_n = jnp.where(part[:, None, None], L + alpha * S, L)
-        gam_n = jnp.where(part, jnp.maximum(c, jnp.max(jnp.abs(L_n), axis=(1, 2))), gam)
-        if option == 1:
-            num = h_tilde(client_batch.hess(batch, zprev_n))
-        else:
-            num = target
-        beta_cand = jnp.max(
-            (num + 2.0 * gam_n[:, None, None]) / (L_n + 2.0 * gam_n[:, None, None]),
-            axis=(1, 2),
-        )
-        beta_i_n = jnp.where(part, beta_cand, beta_i)
-        dgam = (gam_n - gam)[:, None, None]
-        A_n = jnp.where(part[:, None, None], A_i + recon_full(L_n - L) + 2.0 * dgam * Ssum, A_i)
-        C_n = jnp.where(part[:, None, None], C_i + 2.0 * dgam * Ssum, C_i)
-
-        xi = _xi_mask(k_xi, n, p) & part
-        w_n = jnp.where(xi[:, None], z_n, w)
-        g1_fresh = _mv(A_n, w_n)
-        g2_fresh = _mv(C_n, w_n) + client_batch.grads(batch, w_n)
-        # non-participants: A_n = A_i, C_n = C_i ⇒ recon branch keeps g1/g2
-        g1_recon = g1 + _mv(A_n - A_i, w)
-        g2_recon = g2 + _mv(C_n - C_i, w)
-        g1_n = jnp.where(xi[:, None], g1_fresh, g1_recon)
-        g2_n = jnp.where(xi[:, None], g2_fresh, g2_recon)
-
-        g_bits = jnp.where(xi, 2.0 * d * FLOAT_BITS, 2.0 * FLOAT_BITS + 1.0)
-        up = up + jnp.sum(jnp.where(part, sbits + g_bits + FLOAT_BITS, 0.0)) / n
-        carry_n = (z_n, w_n, zprev_n, L_n, gam_n, A_n, C_n, g1_n, g2_n,
-                   beta_i_n, up, down)
-        return carry_n, ys
-
-    up0 = jnp.asarray((d * (d + 1) // 2) * FLOAT_BITS, jnp.float64)
-    carry0 = (x0b, x0b, x0b, L0, gam0, A0, C0, g1_0, g2_0, beta0, up0,
-              jnp.asarray(0.0, jnp.float64))
-    _, ys = jax.lax.scan(step, carry0, keys)
-    return ys
-
-
 def bl3_fast(clients, hess_comp, model_comp, x0, x_star, steps, alpha=1.0,
-             eta=1.0, p=1.0, tau=None, c=1e-8, option=2, seed=0) -> History:
+             eta=1.0, p=1.0, tau=None, c=1e-8, option=2, seed=0,
+             sharded=False) -> History:
     batch, _ = _stack_or_raise(clients)
     hc = _one_of(list(hess_comp), "hessian")
     mc = _one_of(list(model_comp), "model")
-    tau = batch.n if tau is None else tau
-    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
-    gaps, ups, downs = _bl3_run(
-        batch, x0, _f_star(batch, x_star), keys,
-        hess_comp=hc, model_comp=mc, alpha=alpha, eta=eta, p=p, tau=tau,
-        c=c, option=option,
+    spec = specs.BL3Spec(
+        hess_comp=hc, model_comp=mc, alpha=alpha, eta=eta, p=p,
+        tau=batch.n if tau is None else tau, c=c, option=option,
     )
-    return _history(gaps, ups, downs)
+    return _run(spec, batch, None, x0, x_star, steps, seed, sharded=sharded)
 
 
 # ==========================================================================
-# Baselines (fast paths): GD, DIANA, Newton
+# Baselines (fast paths): GD, DIANA, Newton, FedNL-BAG
 # ==========================================================================
-@functools.partial(jax.jit, static_argnames=("lr",))
-def _gd_run(batch, x0, f_star, steps_arr, *, lr):
-    d = batch.d
-
-    def step(carry, _):
-        x, up = carry
-        gap = client_batch.global_loss(batch, x) - f_star
-        x_n = x - lr * client_batch.global_grad(batch, x)
-        return (x_n, up + d * FLOAT_BITS), (gap, up)
-
-    carry0 = (x0, jnp.asarray(0.0, jnp.float64))
-    _, ys = jax.lax.scan(step, carry0, steps_arr)
-    return ys
-
-
-def gd_fast(clients, x0, x_star, steps, lr: Optional[float] = None) -> History:
+def gd_fast(clients, x0, x_star, steps, lr: Optional[float] = None,
+            sharded=False) -> History:
     from .baselines import smoothness_constant
 
     batch, _ = _stack_or_raise(clients)
-    lr = 1.0 / smoothness_constant(clients) if lr is None else lr
-    gaps, ups = _gd_run(batch, x0, _f_star(batch, x_star), jnp.arange(steps), lr=lr)
-    return _history(gaps, ups, np.zeros(steps))
-
-
-@functools.partial(jax.jit, static_argnames=("comp", "alpha_h", "lr"))
-def _diana_run(batch, x0, f_star, keys, *, comp, alpha_h, lr):
-    n, d = batch.n, batch.d
-
-    def step(carry, key_t):
-        x, h, up = carry
-        gap = client_batch.global_loss(batch, x) - f_star
-        gi = client_batch.grads(batch, x)
-        q, bits = comp.batched(jax.random.split(key_t, n), gi - h)
-        ghat = jnp.mean(h + q, axis=0)
-        h_n = h + alpha_h * q
-        x_n = x - lr * ghat
-        return (x_n, h_n, up + jnp.mean(bits)), (gap, up)
-
-    carry0 = (x0, jnp.zeros((n, d), x0.dtype), jnp.asarray(0.0, jnp.float64))
-    _, ys = jax.lax.scan(step, carry0, keys)
-    return ys
+    spec = specs.GDSpec(lr=1.0 / smoothness_constant(clients) if lr is None else lr)
+    return _run(spec, batch, None, x0, x_star, steps, 0, sharded=sharded)
 
 
 def diana_fast(clients, x0, x_star, steps, comp: Compressor, omega: float,
-               lr: Optional[float] = None, seed: int = 0) -> History:
+               lr: Optional[float] = None, seed: int = 0,
+               sharded=False) -> History:
     from .baselines import smoothness_constant
 
     batch, _ = _stack_or_raise(clients)
@@ -505,38 +209,15 @@ def diana_fast(clients, x0, x_star, steps, comp: Compressor, omega: float,
     L = smoothness_constant(clients)
     mu = batch.lam
     alpha_h = 1.0 / (omega + 1.0)
-    n = batch.n
     if lr is None:
-        lr = min(alpha_h / (2.0 * mu), 1.0 / (L * (1.0 + 6.0 * omega / n)))
-    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
-    gaps, ups = _diana_run(batch, x0, _f_star(batch, x_star), keys,
-                           comp=comp, alpha_h=alpha_h, lr=lr)
-    return _history(gaps, ups, np.zeros(steps))
-
-
-@functools.partial(jax.jit, static_argnames=("per_iter_bits",))
-def _newton_run(batch, basisb, x0, f_star, steps_arr, *, per_iter_bits):
-    lam = batch.lam
-
-    def step(carry, _):
-        x, up = carry
-        gap = client_batch.global_loss(batch, x) - f_star
-        if basisb is None:
-            H = client_batch.global_hess(batch, x)
-        else:
-            coef = client_batch.hess_coeff_target(basisb, batch, x)
-            H = jnp.mean(basisb.server_reconstruct(coef, lam), axis=0)
-        g = client_batch.global_grad(batch, x)
-        x_n = x - jnp.linalg.solve(H, g)
-        return (x_n, up + per_iter_bits), (gap, up)
-
-    carry0 = (x0, jnp.asarray(0.0, jnp.float64))
-    _, ys = jax.lax.scan(step, carry0, steps_arr)
-    return ys
+        lr = min(alpha_h / (2.0 * mu), 1.0 / (L * (1.0 + 6.0 * omega / batch.n)))
+    spec = specs.DianaSpec(comp=comp, alpha_h=alpha_h, lr=lr)
+    return _run(spec, batch, None, x0, x_star, steps, seed, sharded=sharded)
 
 
 def newton_fast(clients, x0, x_star, steps,
-                bases: Optional[Sequence[MatrixBasis]] = None) -> History:
+                bases: Optional[Sequence[MatrixBasis]] = None,
+                sharded=False) -> History:
     batch, basisb = _stack_or_raise(clients, bases)
     d = batch.d
     if basisb is None:
@@ -548,6 +229,24 @@ def newton_fast(clients, x0, x_star, steps,
         rs = basisb.rs
         init_up = sum(d * r * FLOAT_BITS for r in rs) / len(rs)
         per_iter = sum(r * r + r for r in rs) / len(rs) * FLOAT_BITS
-    gaps, ups = _newton_run(batch, basisb, x0, _f_star(batch, x_star),
-                            jnp.arange(steps), per_iter_bits=per_iter)
-    return _history(gaps, np.asarray(ups) + init_up, np.zeros(steps))
+    spec = specs.NewtonSpec(per_iter_bits=per_iter)
+    hist = _run(spec, batch, basisb, x0, x_star, steps, 0, sharded=sharded)
+    hist.up_bits = [u + init_up for u in hist.up_bits]
+    return hist
+
+
+def fednl_bag_fast(clients, bases, hess_comp, x0, x_star, steps, alpha=1.0,
+                   q=0.5, eta=None, mu=None, seed=0, init_exact_hessian=True,
+                   sharded=False) -> History:
+    """FedNL with Bernoulli gradient aggregation — see `specs.FedNLBAGSpec`.
+    eta defaults to q: damping matched to the aggregation probability."""
+    batch, basisb = _stack_or_raise(clients, bases)
+    hc = _one_of(list(hess_comp), "hessian")
+    spec = specs.FedNLBAGSpec(
+        hess_comp=hc, alpha=alpha, q=q, eta=q if eta is None else eta,
+        mu=batch.lam if mu is None else mu,
+        init_exact=init_exact_hessian,
+        init_up=basisb.init_bits_mean(init_exact_hessian),
+        block=_block_mode(basisb, hc),
+    )
+    return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded)

@@ -10,10 +10,13 @@ Two backends implement the same algorithms with the same `History` contract:
   * ``repro.core.bl_reference`` — the original op-by-op Python loops, kept as
     the paper-faithful ground truth the fast path is pinned against.
 
-`bl1/bl2/bl3` below take ``backend="auto"|"fast"|"reference"``: "auto"
-(default) tries the fast path and silently falls back, "fast" raises
-`batched.FastPathUnavailable` instead of falling back, "reference" forces
-the loops.
+`bl1/bl2/bl3` below take
+``backend="auto"|"fast"|"fast+sharded"|"reference"``: "auto" (default) tries
+the fast path and silently falls back, "fast" raises
+`batched.FastPathUnavailable` instead of falling back, "fast+sharded" runs
+the fast path with clients sharded over the mesh `data` axis (shard_map
+aggregation backend — see `repro.core.rounds`), and "reference" forces the
+loops.
 
 Conventions
 -----------
@@ -35,10 +38,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import glm
-from .basis import DataOuterBasis, MatrixBasis, PSDBasis, basis_transmission_bits
+from .basis import DataOuterBasis, MatrixBasis, basis_transmission_bits
 from .compressors import FLOAT_BITS, Compressor
 
-_BACKENDS = ("auto", "fast", "reference")
+_BACKENDS = ("auto", "fast", "fast+sharded", "reference")
 
 
 def proj_mu(A: jax.Array, mu: float) -> jax.Array:
@@ -117,6 +120,7 @@ def _psd_reconstruct_full(M: jax.Array) -> jax.Array:
 # dispatchers
 # --------------------------------------------------------------------------
 def _dispatch(backend: str, fast_fn, ref_fn):
+    """fast_fn takes sharded: bool (the aggregation backend of rounds.py)."""
     from .batched import FastPathUnavailable
 
     if backend not in _BACKENDS:
@@ -124,11 +128,11 @@ def _dispatch(backend: str, fast_fn, ref_fn):
     if backend == "reference":
         return ref_fn()
     try:
-        return fast_fn()
+        return fast_fn(sharded=(backend == "fast+sharded"))
     except FastPathUnavailable:
-        if backend == "fast":
-            raise
-        return ref_fn()
+        if backend == "auto":
+            return ref_fn()
+        raise
 
 
 def bl1(
@@ -159,7 +163,7 @@ def bl1(
               init_exact_hessian=init_exact_hessian)
     return _dispatch(
         backend,
-        lambda: batched.bl1_fast(*args, **kw),
+        lambda sharded: batched.bl1_fast(*args, sharded=sharded, **kw),
         lambda: bl_reference.bl1_reference(*args, **kw),
     )
 
@@ -189,7 +193,7 @@ def bl2(
               init_exact_hessian=init_exact_hessian)
     return _dispatch(
         backend,
-        lambda: batched.bl2_fast(*args, **kw),
+        lambda sharded: batched.bl2_fast(*args, sharded=sharded, **kw),
         lambda: bl_reference.bl2_reference(*args, **kw),
     )
 
@@ -217,6 +221,6 @@ def bl3(
     kw = dict(alpha=alpha, eta=eta, p=p, tau=tau, c=c, option=option, seed=seed)
     return _dispatch(
         backend,
-        lambda: batched.bl3_fast(*args, **kw),
+        lambda sharded: batched.bl3_fast(*args, sharded=sharded, **kw),
         lambda: bl_reference.bl3_reference(*args, **kw),
     )

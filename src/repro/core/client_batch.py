@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -216,6 +216,20 @@ def stack_bases(bases: Sequence[MatrixBasis]) -> Optional[BatchedBasis]:
 # --------------------------------------------------------------------------
 # batched GLM math (mirrors repro.core.glm, vectorized over clients)
 # --------------------------------------------------------------------------
+def bmv(M: jax.Array, v: jax.Array) -> jax.Array:
+    """Per-client matvec (n, k, e) @ (n, e) → (n, k) as multiply+reduce
+    (rank-3 M only — the broadcast inserts exactly one middle axis).
+
+    `jnp.einsum("n...e,ne->n...")` lowers to a batched dot whose accumulation
+    order depends on the leading batch size, so per-client results differ in
+    the last ulp between a 1-client shard and an n-client stack — breaking
+    the sharded aggregation backend's bitwise-parity contract
+    (tests/test_sharding_multidev.py).  The multiply+last-axis-reduce form is
+    batch-size invariant and cheap next to the engine's matrix-matrix
+    contractions (which XLA compiles batch-invariantly already)."""
+    return jnp.sum(M * v[:, None, :], axis=-1)
+
+
 def _per_client_x(batch: ClientBatch, x: jax.Array) -> jax.Array:
     """Broadcast a shared iterate (d,) to (n, d); pass (n, d) through."""
     if x.ndim == 1:
@@ -225,7 +239,7 @@ def _per_client_x(batch: ClientBatch, x: jax.Array) -> jax.Array:
 
 def losses(batch: ClientBatch, x: jax.Array) -> jax.Array:
     xb = _per_client_x(batch, x)
-    z = jnp.einsum("nmd,nd->nm", batch.A, xb) * batch.b
+    z = bmv(batch.A, xb) * batch.b
     data = jnp.mean(jnp.logaddexp(0.0, -z), axis=1)
     return data + 0.5 * batch.lam * jnp.sum(xb * xb, axis=1)
 
@@ -237,7 +251,7 @@ def global_loss(batch: ClientBatch, x: jax.Array) -> jax.Array:
 def grads(batch: ClientBatch, x: jax.Array) -> jax.Array:
     """Per-client gradients (n, d) at a shared or per-client iterate."""
     xb = _per_client_x(batch, x)
-    z = jnp.einsum("nmd,nd->nm", batch.A, xb) * batch.b
+    z = bmv(batch.A, xb) * batch.b
     coef = -batch.b * glm.sigmoid(-z)
     return jnp.einsum("nmd,nm->nd", batch.A, coef) / batch.m + batch.lam * xb
 
@@ -248,7 +262,7 @@ def global_grad(batch: ClientBatch, x: jax.Array) -> jax.Array:
 
 def hess_weights(batch: ClientBatch, x: jax.Array) -> jax.Array:
     xb = _per_client_x(batch, x)
-    z = jnp.einsum("nmd,nd->nm", batch.A, xb) * batch.b
+    z = bmv(batch.A, xb) * batch.b
     s = glm.sigmoid(z)
     return s * (1.0 - s)
 

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -88,8 +87,12 @@ def _topk_keep_mask(v: jax.Array, k: int) -> jax.Array:
     a32 = jnp.abs(v).astype(jnp.float32)
     vals, idx = jax.lax.top_k(a32, k)
     # keep both outputs alive: with the indices dead, XLA rewrites top_k into
-    # a full stable sort (~12× slower on CPU for the d² coefficient arrays)
-    vals, _ = jax.lax.optimization_barrier((vals, idx))
+    # a full stable sort (~12× slower on CPU for the d² coefficient arrays).
+    # Barrier each output separately — a barrier consuming the top_k tuple
+    # itself crashes XLA's TopkDecomposer under multi-device shard_map
+    # (CreateVariadicComparator expects get-tuple-element users).
+    vals = jax.lax.optimization_barrier(vals)
+    _ = jax.lax.optimization_barrier(idx)
     t = vals[..., -1:]
     above = a32 > t
     eq = a32 == t
@@ -291,9 +294,11 @@ class ComposedTopK(Compressor):
         kk = min(self.k, v.size)
         # f32 selection (see _topk_keep_mask) — f64 top_k is the CPU hot
         # spot; the kept *values* stay full precision.  Barrier keeps the
-        # TopK custom call from decomposing into a full sort (vals unused).
+        # TopK custom call from decomposing into a full sort (vals unused);
+        # per-output barriers, not a tuple one (multi-device XLA crash).
         vals, idx = jax.lax.top_k(jnp.abs(v).astype(jnp.float32), kk)
-        _, idx = jax.lax.optimization_barrier((vals, idx))
+        _ = jax.lax.optimization_barrier(vals)
+        idx = jax.lax.optimization_barrier(idx)
         kept = v[idx]
         cv, inner_bits = self.inner(key, kept)
         if self.unbias_correct:
@@ -312,7 +317,8 @@ class ComposedTopK(Compressor):
         v = x.reshape(n, -1)
         kk = min(self.k, v.shape[1])
         vals, idx = jax.lax.top_k(jnp.abs(v).astype(jnp.float32), kk)
-        vals, idx = jax.lax.optimization_barrier((vals, idx))
+        _ = jax.lax.optimization_barrier(vals)
+        idx = jax.lax.optimization_barrier(idx)
         kept = jnp.take_along_axis(v, idx, axis=1)
         if keys is None:
             keys = jax.random.split(jax.random.PRNGKey(0), n)

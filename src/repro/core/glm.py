@@ -12,7 +12,7 @@ intrinsic dimension r ≪ d).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp

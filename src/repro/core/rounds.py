@@ -1,0 +1,338 @@
+"""Unified round engine: combinators + pluggable client-sharded aggregation.
+
+Every method in this repo — BL1/BL2/BL3 (Algorithms 1–3), the FedNL family
+they extend, and the first/second-order baselines — shares one round
+skeleton: local Hessian/gradient compute → compressed-difference uplink →
+server aggregate → (compressed) downlink.  This module factors that skeleton
+into three pieces:
+
+  1. **Combinators** — the shared round steps as small pure functions over
+     client-stacked arrays: the compressed-shift recursion L ← L + αC(·−L)
+     (`shift_update`, also consumed by `repro.fed.bldnn`), Bernoulli
+     participation with the force-one-client fallback (`participation`),
+     the ξ gradient-refresh mask (`xi_mask`), the compressed model-stream
+     downlink (`downlink_broadcast`), and the §2.3 coefficient layouts
+     (`coeff_layout` — compact (n, r, r) blocks vs. full d×d) behind one
+     (target_at, recon, ridge) interface.
+
+  2. **Reducers** — the aggregation-backend axis.  All cross-client
+     reductions (means/sums/maxes of Hessians, gradients, bit counts) go
+     through a `Reducer` so the same method spec runs on two backends:
+
+       * `VmapReducer`      — one device; the client axis is a plain leading
+         array axis and reductions are `jnp.mean/sum/max(axis=0)`.
+       * `ShardMapReducer`  — clients sharded over the mesh `data` axis
+         inside `shard_map`; per-client state carries a leading local axis.
+         `exact=True` (default) reduces by `all_gather` + the *identical*
+         local reduction, which is bitwise-equal to the single-device
+         backend (pinned by tests/test_sharding_multidev.py); `exact=False`
+         uses `lax.psum/pmean/pmax`, which is bandwidth-optimal but can
+         differ in the last ulp (summation order).
+
+  3. **Driver** — one jitted `lax.scan` over rounds (`run_rounds`).  A
+     `MethodSpec` (see `repro.core.specs`) supplies `prepare/init/step`;
+     the driver never knows which algorithm it is running.  The sharded
+     backend wraps the same scan body in a single `shard_map` over the
+     client mesh, so a whole sharded trajectory is still one SPMD program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import CLIENT_AXIS
+
+from . import client_batch
+
+
+# ==========================================================================
+# Reducers — the pluggable aggregation backend
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class Reducer:
+    """Cross-client reduction interface.  `n` is the GLOBAL client count;
+    per-client arrays seen by spec code always carry a leading `n_local`
+    axis (== n on the vmap backend, n/ndev inside each shard otherwise)."""
+
+    n: int
+
+    @property
+    def n_local(self) -> int:
+        raise NotImplementedError
+
+    def mean(self, x: jax.Array) -> jax.Array:
+        """(n_local, ...) → (...): mean over the global client axis."""
+        raise NotImplementedError
+
+    def sum(self, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def max(self, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def shard(self, x: jax.Array) -> jax.Array:
+        """Slice a replicated (n, ...) array down to this shard's clients.
+
+        Fleet-wide randomness (participation masks, per-client PRNG keys)
+        is always drawn for all n clients from the replicated key and then
+        sharded, so every backend sees the same per-client draws."""
+        raise NotImplementedError
+
+    def client_keys(self, key: jax.Array) -> jax.Array:
+        """Per-client PRNG keys for this shard: (n_local, 2)."""
+        return self.shard(jax.random.split(key, self.n))
+
+
+@dataclasses.dataclass(frozen=True)
+class VmapReducer(Reducer):
+    """Single-device backend: the client axis is a plain leading axis."""
+
+    @property
+    def n_local(self) -> int:
+        return self.n
+
+    def mean(self, x):
+        return jnp.mean(x, axis=0)
+
+    def sum(self, x):
+        return jnp.sum(x, axis=0)
+
+    def max(self, x):
+        return jnp.max(x, axis=0)
+
+    def shard(self, x):
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardMapReducer(Reducer):
+    """Mesh backend: clients sharded over `axis` inside `shard_map`.
+
+    exact=True reduces by `all_gather` + the same local reduction as
+    `VmapReducer` — bitwise-identical trajectories to the single-device
+    fast path.  exact=False reduces with `lax.psum/pmean/pmax` (less wire
+    traffic, last-ulp summation-order differences)."""
+
+    ndev: int = 1
+    axis: str = CLIENT_AXIS
+    exact: bool = True
+
+    @property
+    def n_local(self) -> int:
+        return self.n // self.ndev
+
+    def _gather(self, x):
+        return jax.lax.all_gather(x, self.axis, axis=0, tiled=True)
+
+    def mean(self, x):
+        if self.exact:
+            return jnp.mean(self._gather(x), axis=0)
+        return jax.lax.pmean(jnp.sum(x, axis=0), self.axis) / self.n_local
+
+    def sum(self, x):
+        if self.exact:
+            return jnp.sum(self._gather(x), axis=0)
+        return jax.lax.psum(jnp.sum(x, axis=0), self.axis)
+
+    def max(self, x):
+        if self.exact:
+            return jnp.max(self._gather(x), axis=0)
+        return jax.lax.pmax(jnp.max(x, axis=0), self.axis)
+
+    def shard(self, x):
+        i = jax.lax.axis_index(self.axis)
+        return jax.lax.dynamic_slice_in_dim(x, i * self.n_local, self.n_local, 0)
+
+
+# ==========================================================================
+# Round-step combinators
+# ==========================================================================
+def shift_update(compress: Callable, target: jax.Array, shift: jax.Array,
+                 alpha: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One step of the compressed-difference shift recursion (Alg. 1 core):
+
+        S = C(target − L),   L ← L + α·S.
+
+    `compress` maps a delta tensor to (compressed_dense, bits).  Returns
+    (S, new_shift, bits).  Contractive compressors use α = 1, unbiased ones
+    α = 1/(ω+1).  This is the single mechanism shared by the GLM methods
+    (Hessian-coefficient learning) and `repro.fed.bldnn` (gradient and
+    Fisher-diagonal learning)."""
+    S, bits = compress(target - shift)
+    return S, shift + alpha * S, bits
+
+
+def participation(R: Reducer, key: jax.Array, tau: int) -> jax.Array:
+    """Bernoulli(τ/n) participation mask for this shard's clients, with the
+    reference backend's force-one-client fallback (drawn fleet-wide from the
+    replicated key, then sharded)."""
+    part = jax.random.bernoulli(key, tau / R.n, (R.n,))
+    idx = jax.random.randint(key, (), 0, R.n)
+    part = part | (~part.any() & (jnp.arange(R.n) == idx))
+    return R.shard(part)
+
+
+def xi_mask(R: Reducer, key: jax.Array, p: float) -> jax.Array:
+    """Per-client ξ ~ Bernoulli(p) gradient-refresh mask (local slice)."""
+    if p >= 1.0:
+        return jnp.ones((R.n_local,), bool)
+    return R.shard(jax.random.bernoulli(key, p, (R.n,)))
+
+
+def xi_scalar(key: jax.Array, p: float) -> jax.Array:
+    """Fleet-wide scalar ξ (BL1's single gradient-leg switch)."""
+    if p >= 1.0:
+        return jnp.asarray(True)
+    return jax.random.bernoulli(key, p, (1,))[0]
+
+
+def downlink_broadcast(R: Reducer, comp, key: jax.Array, z: jax.Array,
+                       x_target: jax.Array, eta: float, part: jax.Array):
+    """Compressed model-stream downlink to participating clients:
+    z_i ← z_i + η·C_i(x − z_i).  Returns (z_new, down_bits_per_node)."""
+    v, vbits = comp.batched(R.client_keys(key), x_target[None, :] - z)
+    z_n = jnp.where(part[:, None], z + eta * v, z)
+    return z_n, R.sum(jnp.where(part, vbits, 0.0)) / R.n
+
+
+def global_grad(R: Reducer, batch, x: jax.Array) -> jax.Array:
+    return R.mean(client_batch.grads(batch, x))
+
+# NOTE: there is deliberately no in-scan global_loss combinator — specs emit
+# evaluation iterates and the engine computes f(x)−f* outside the scan
+# (`_gap_stream`); an in-scan loss evaluation compiles differently under
+# shard_map and would break the cross-backend bitwise contract.
+
+
+# ==========================================================================
+# Coefficient layouts (§2.3): block (n, r, r) vs full (n, d, d)
+# ==========================================================================
+@dataclasses.dataclass
+class CoeffLayout:
+    """How Hessian-coefficient state is laid out on this run.
+
+    `target_at(z)` gives the per-client coefficient target h^i(∇²f_i(z)),
+    `recon(S)` maps coefficient-space updates back to (n_local, d, d)
+    Hessian space, `shape` is the local coefficient-state shape, and
+    `ridge` is the analytic λI the server adds for data bases."""
+
+    target_at: Callable
+    recon: Callable
+    shape: Tuple[int, ...]
+    ridge: jax.Array
+
+
+def coeff_layout(R: Reducer, batch, basisb, x0: jax.Array,
+                 block: bool) -> CoeffLayout:
+    d = batch.d
+    lam = batch.lam
+    if block:
+        # §2.3 block mode (data basis only): state stays (n, r, r) and the
+        # d×d data Hessian is never materialized (Γ = (AV)ᵀD(AV)/m).
+        AV = client_batch.basis_AV(basisb, batch)
+        rb = basisb.r_max
+        return CoeffLayout(
+            target_at=lambda z: client_batch.hess_coeff_block(basisb, batch, z, AV),
+            recon=lambda S: client_batch.reconstruct_block(basisb, S),
+            shape=(R.n_local, rb, rb),
+            ridge=lam * jnp.eye(d, dtype=x0.dtype),
+        )
+    ridge = (lam * jnp.eye(d, dtype=x0.dtype)
+             if basisb.kind == "data_outer" else jnp.zeros((d, d), x0.dtype))
+    return CoeffLayout(
+        target_at=lambda z: client_batch.hess_coeff_target(basisb, batch, z),
+        recon=basisb.reconstruct,
+        shape=(R.n_local, d, d),
+        ridge=ridge,
+    )
+
+
+# ==========================================================================
+# Driver: one jitted scan over rounds, per (spec, reducer) pair
+# ==========================================================================
+@dataclasses.dataclass
+class Env:
+    """Per-run traced context handed to spec.init/step (not a scan carry)."""
+
+    batch: object
+    basisb: object
+    x0: jax.Array
+    extra: object  # spec-specific precomputation (e.g. a CoeffLayout)
+
+
+def _engine(spec, R: Reducer, batch, basisb, x0, keys):
+    env = Env(batch=batch, basisb=basisb, x0=x0,
+              extra=spec.prepare(R, batch, basisb, x0))
+    carry0 = spec.init(R, env)
+
+    def step(carry, key_t):
+        return spec.step(R, env, carry, key_t)
+
+    _, ys = jax.lax.scan(step, carry0, keys)
+    # ys = (eval_x (steps, d), up_bits (steps,), down_bits (steps,)).  Specs
+    # emit the round's evaluation iterate, not the gap: loss evaluation is
+    # instrumentation, and computing it outside the scan (a) vectorizes it
+    # over all rounds and (b) keeps the gap stream bitwise-identical across
+    # aggregation backends (XLA fuses in-scan loss evaluation differently
+    # inside shard_map, wobbling the reported gap by an ulp even though the
+    # trajectory itself is bitwise-invariant).
+    return ys
+
+
+_engine_jit = functools.partial(jax.jit, static_argnames=("spec", "R"))(_engine)
+
+
+@jax.jit
+def _gap_stream(batch, xs_t, f_star):
+    """f(x_t) − f* for a whole (steps, d) trajectory in one vmapped pass.
+
+    Shared by both aggregation backends — same program + bitwise-identical
+    iterates ⇒ bitwise-identical gap histories."""
+    return jax.vmap(lambda x: jnp.mean(client_batch.losses(batch, x)))(xs_t) - f_star
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_engine(spec, R: ShardMapReducer, mesh):
+    """One jitted shard_map program per (spec, reducer, mesh) config."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.sharding.rules import client_engine_specs
+
+    in_specs, out_specs = client_engine_specs()
+    body = functools.partial(_engine, spec, R)
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False))
+
+
+def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
+               sharded: bool = False, exact: bool = True):
+    """Run `steps = len(keys)` rounds of `spec` and return the history
+    streams (gaps, up_bits, down_bits).
+
+    sharded=False → `VmapReducer` on the default device.
+    sharded=True  → `ShardMapReducer` over a 1-D client mesh spanning the
+    most local devices that evenly divide the client count (a 1-device
+    world still exercises the shard_map code path)."""
+    if not sharded:
+        xs_t, ups, downs = _engine_jit(spec, VmapReducer(n=batch.n), batch,
+                                       basisb, x0, keys)
+    else:
+        from repro.launch.mesh import make_client_mesh
+
+        mesh, ndev = make_client_mesh(batch.n)
+        R = ShardMapReducer(n=batch.n, ndev=ndev, exact=exact)
+        xs_t, ups, downs = _sharded_engine(spec, R, mesh)(
+            batch, basisb, x0, keys)
+        # outputs come back committed to the client mesh; rehome them so the
+        # gap evaluation below is the same default-device program on every
+        # backend (this is what makes the histories bitwise-comparable)
+        import numpy as np
+
+        xs_t, ups, downs = (jnp.asarray(np.asarray(a))
+                            for a in (xs_t, ups, downs))
+    gaps = _gap_stream(batch, xs_t, f_star)
+    return gaps, ups, downs

@@ -1,0 +1,417 @@
+"""Declarative method specs for the unified round engine (`repro.core.rounds`).
+
+Each spec is a small frozen dataclass (hashable → static under jit) holding
+the method's hyperparameters and three hooks consumed by the engine driver:
+
+  * ``prepare(R, batch, basisb, x0)`` — per-run traced precomputation
+    (typically a `CoeffLayout`);
+  * ``init(R, env)``                 — the scan carry at round 0;
+  * ``step(R, env, carry, key)``     — one round, returning
+    ``(carry, (eval_x, up_bits, down_bits))``: the iterate the round is
+    evaluated at plus the cumulative bit counters (the engine turns the
+    eval_x stream into f(x)−f* gaps outside the scan).
+
+All cross-client reductions go through the `Reducer` R, so every spec runs
+unchanged on the single-device backend and on the client-sharded shard_map
+backend.  The specs here are ports of the previously triplicated scan bodies
+in `repro.core.batched` — parity with the op-by-op reference backend is
+pinned by tests/test_batched_parity.py — plus one new method (FedNL with
+Bernoulli aggregation, after "Distributed Newton-Type Methods with
+Communication Compression and Bernoulli Aggregation", arXiv 2206.03588)
+that exists to demonstrate that a new method is a ~50-line spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import client_batch
+from .bl import _psd_h_tilde, _psd_reconstruct_full, _psd_sum_matrix, proj_mu
+from .compressors import FLOAT_BITS, Compressor
+from .rounds import (
+    Reducer,
+    coeff_layout,
+    downlink_broadcast,
+    global_grad,
+    participation,
+    shift_update,
+    xi_mask,
+    xi_scalar,
+)
+
+
+def _sym_b(H):
+    """(n, d, d) batched symmetrization."""
+    return (H + jnp.transpose(H, (0, 2, 1))) / 2.0
+
+
+def _fro_b(H):
+    """(n, d, d) → (n,) Frobenius norms."""
+    return jnp.sqrt(jnp.sum(H * H, axis=(1, 2)))
+
+
+def _mv(Hb, xb):
+    """(n, d, d) @ (n, d) → (n, d), batch-size-invariantly (see bmv)."""
+    return client_batch.bmv(Hb, xb)
+
+
+def _f64(x):
+    return jnp.asarray(x, jnp.float64)
+
+
+class MethodSpec:
+    """Base hooks; subclasses are frozen dataclasses (static under jit)."""
+
+    def prepare(self, R: Reducer, batch, basisb, x0):
+        return None
+
+    def init(self, R: Reducer, env):
+        raise NotImplementedError
+
+    def step(self, R: Reducer, env, carry, key_t):
+        raise NotImplementedError
+
+
+# ==========================================================================
+# BL1 — Algorithm 1
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class BL1Spec(MethodSpec):
+    hess_comp: Compressor
+    model_comp: Compressor
+    alpha: float
+    eta: float
+    p: float
+    mu: float
+    init_exact: bool
+    grad_bits: float
+    init_up: float
+    block: bool
+
+    def prepare(self, R, batch, basisb, x0):
+        return coeff_layout(R, batch, basisb, x0, self.block)
+
+    def init(self, R, env):
+        lay = env.extra
+        x0 = env.x0
+        L0 = lay.target_at(x0) if self.init_exact else jnp.zeros(lay.shape, x0.dtype)
+        H0 = R.mean(lay.recon(L0)) + lay.ridge
+        grad_w0 = global_grad(R, env.batch, x0)
+        return (x0, x0, L0, H0, grad_w0, jnp.asarray(True),
+                _f64(self.init_up), _f64(0.0))
+
+    def step(self, R, env, carry, key_t):
+        z, w, L, H, grad_w, xi, up, down = carry
+        lay = env.extra
+        ys = (z, up, down)  # gap evaluated at z, outside the scan
+
+        Hmu = proj_mu(H, self.mu)
+        # gradient leg (both branches evaluated, selected by ξ)
+        grad_z = global_grad(R, env.batch, z)
+        w_n = jnp.where(xi, z, w)
+        grad_w_n = jnp.where(xi, grad_z, grad_w)
+        g = jnp.where(xi, grad_z, Hmu @ (z - w) + grad_w)
+        up = up + jnp.where(xi, self.grad_bits, 0.0)
+
+        # Hessian-coefficient learning, all clients at once
+        k_h, k_m, k_xi = jax.random.split(key_t, 3)
+        S, L_n, bits = shift_update(
+            lambda delta: self.hess_comp.batched(R.client_keys(k_h), delta),
+            lay.target_at(z), L, self.alpha)
+        H_n = H + R.mean(lay.recon(self.alpha * S))
+        up = up + R.mean(bits)
+
+        # server model step + compressed broadcast
+        x_next = z - jnp.linalg.solve(Hmu, g)
+        v, vbits = self.model_comp(k_m, x_next - z)
+        down = down + vbits
+        z_n = z + self.eta * v
+        xi_n = xi_scalar(k_xi, self.p)
+        return (z_n, w_n, L_n, H_n, grad_w_n, xi_n, up, down), ys
+
+
+# ==========================================================================
+# BL2 — Algorithm 2
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class BL2Spec(MethodSpec):
+    hess_comp: Compressor
+    model_comp: Compressor
+    alpha: float
+    eta: float
+    p: float
+    tau: int
+    init_exact: bool
+    init_up: float
+    block: bool
+
+    def prepare(self, R, batch, basisb, x0):
+        return coeff_layout(R, batch, basisb, x0, self.block)
+
+    def init(self, R, env):
+        lay = env.extra
+        x0 = env.x0
+        x0b = jnp.broadcast_to(x0, (R.n_local, env.batch.d))
+        L0 = lay.target_at(x0) if self.init_exact else jnp.zeros(lay.shape, x0.dtype)
+        Hi0 = lay.recon(L0) + lay.ridge
+        li0 = _fro_b(_sym_b(Hi0) - client_batch.hess(env.batch, x0b))
+        gi0 = (_mv(_sym_b(Hi0), x0b) + li0[:, None] * x0b
+               - client_batch.grads(env.batch, x0b))
+        return (x0b, x0b, L0, Hi0, li0, gi0, _f64(self.init_up), _f64(0.0))
+
+    def step(self, R, env, carry, key_t):
+        z, w, L, Hi, li, gi, up, down = carry
+        batch = env.batch
+        d = batch.d
+        lay = env.extra
+        I = jnp.eye(d, dtype=env.x0.dtype)
+
+        H = R.mean(Hi)
+        l_avg = R.mean(li)
+        g = R.mean(gi)
+        x_cur = jnp.linalg.solve((H + H.T) / 2.0 + l_avg * I, g)
+        ys = (x_cur, up, down)  # gap evaluated at x_cur, outside the scan
+
+        k_part, k_m, k_h, k_xi = jax.random.split(key_t, 4)
+        part = participation(R, k_part, self.tau)
+
+        # compressed model broadcast (participants only)
+        z_n, dbits = downlink_broadcast(R, self.model_comp, k_m, z, x_cur,
+                                        self.eta, part)
+        down = down + dbits
+
+        # Hessian-coefficient learning
+        S, L_plus, sbits = shift_update(
+            lambda delta: self.hess_comp.batched(R.client_keys(k_h), delta),
+            lay.target_at(z_n), L, self.alpha)
+        L_n = jnp.where(part[:, None, None], L_plus, L)
+        Hi_n = jnp.where(part[:, None, None], Hi + lay.recon(self.alpha * S), Hi)
+        Hs_n = _sym_b(Hi_n)
+        li_n = jnp.where(part, _fro_b(Hs_n - client_batch.hess(batch, z_n)), li)
+
+        xi = xi_mask(R, k_xi, self.p) & part
+        w_n = jnp.where(xi[:, None], z_n, w)
+        # ξ=1: fresh g_i at the new w; ξ=0: server-reconstructed difference.
+        # Non-participants: Hi_n = Hi and li_n = li exactly, so gi_recon = gi.
+        gi_fresh = (_mv(Hs_n, w_n) + li_n[:, None] * w_n
+                    - client_batch.grads(batch, w_n))
+        gi_recon = gi + _mv(Hs_n - _sym_b(Hi), w) + (li_n - li)[:, None] * w
+        gi_n = jnp.where(xi[:, None], gi_fresh, gi_recon)
+
+        g_bits = jnp.where(xi, d * FLOAT_BITS, FLOAT_BITS + 1.0)
+        up = up + R.sum(jnp.where(part, sbits + g_bits, 0.0)) / R.n
+        return (z_n, w_n, L_n, Hi_n, li_n, gi_n, up, down), ys
+
+
+# ==========================================================================
+# BL3 — Algorithm 3 (PSD basis of Example 5.1)
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class BL3Spec(MethodSpec):
+    hess_comp: Compressor
+    model_comp: Compressor
+    alpha: float
+    eta: float
+    p: float
+    tau: int
+    c: float
+    option: int
+
+    def prepare(self, R, batch, basisb, x0):
+        return _psd_sum_matrix(batch.d, x0.dtype)
+
+    def init(self, R, env):
+        Ssum = env.extra
+        x0b = jnp.broadcast_to(env.x0, (R.n_local, env.batch.d))
+        L0 = jax.vmap(_psd_h_tilde)(client_batch.hess(env.batch, x0b))
+        gam0 = jnp.maximum(self.c, jnp.max(jnp.abs(L0), axis=(1, 2)))
+        A0 = jax.vmap(_psd_reconstruct_full)(L0) + 2.0 * gam0[:, None, None] * Ssum
+        C0 = 2.0 * gam0[:, None, None] * Ssum
+        # h̃(∇²f_i(w⁰)) = L⁰ at init, so β_i⁰ = 1 exactly (as the reference
+        # backend's max over a ratio of identical matrices evaluates to)
+        beta0 = jnp.ones((R.n_local,), env.x0.dtype)
+        g1_0 = _mv(A0, x0b)
+        g2_0 = _mv(C0, x0b) + client_batch.grads(env.batch, x0b)
+        up0 = _f64((env.batch.d * (env.batch.d + 1) // 2) * FLOAT_BITS)
+        return (x0b, x0b, x0b, L0, gam0, A0, C0, g1_0, g2_0, beta0, up0,
+                _f64(0.0))
+
+    def step(self, R, env, carry, key_t):
+        z, w, zprev, L, gam, A_i, C_i, g1, g2, beta_i, up, down = carry
+        batch = env.batch
+        d = batch.d
+        Ssum = env.extra
+        h_tilde = jax.vmap(_psd_h_tilde)
+        recon_full = jax.vmap(_psd_reconstruct_full)
+
+        beta = R.max(beta_i)
+        Hk = beta * R.mean(A_i) - R.mean(C_i)
+        gk = beta * R.mean(g1) - R.mean(g2)
+        x_cur = jnp.linalg.solve(Hk, gk)
+        ys = (x_cur, up, down)  # gap evaluated at x_cur, outside the scan
+
+        k_part, k_m, k_h, k_xi = jax.random.split(key_t, 4)
+        part = participation(R, k_part, self.tau)
+
+        zprev_n = jnp.where(part[:, None], z, zprev)
+        z_n, dbits = downlink_broadcast(R, self.model_comp, k_m, z, x_cur,
+                                        self.eta, part)
+        down = down + dbits
+
+        target = h_tilde(client_batch.hess(batch, z_n))
+        S, L_plus, sbits = shift_update(
+            lambda delta: self.hess_comp.batched(R.client_keys(k_h), delta),
+            target, L, self.alpha)
+        L_n = jnp.where(part[:, None, None], L_plus, L)
+        gam_n = jnp.where(part,
+                          jnp.maximum(self.c, jnp.max(jnp.abs(L_n), axis=(1, 2))),
+                          gam)
+        if self.option == 1:
+            num = h_tilde(client_batch.hess(batch, zprev_n))
+        else:
+            num = target
+        beta_cand = jnp.max(
+            (num + 2.0 * gam_n[:, None, None]) / (L_n + 2.0 * gam_n[:, None, None]),
+            axis=(1, 2),
+        )
+        beta_i_n = jnp.where(part, beta_cand, beta_i)
+        dgam = (gam_n - gam)[:, None, None]
+        A_n = jnp.where(part[:, None, None],
+                        A_i + recon_full(L_n - L) + 2.0 * dgam * Ssum, A_i)
+        C_n = jnp.where(part[:, None, None], C_i + 2.0 * dgam * Ssum, C_i)
+
+        xi = xi_mask(R, k_xi, self.p) & part
+        w_n = jnp.where(xi[:, None], z_n, w)
+        g1_fresh = _mv(A_n, w_n)
+        g2_fresh = _mv(C_n, w_n) + client_batch.grads(batch, w_n)
+        # non-participants: A_n = A_i, C_n = C_i ⇒ recon branch keeps g1/g2
+        g1_recon = g1 + _mv(A_n - A_i, w)
+        g2_recon = g2 + _mv(C_n - C_i, w)
+        g1_n = jnp.where(xi[:, None], g1_fresh, g1_recon)
+        g2_n = jnp.where(xi[:, None], g2_fresh, g2_recon)
+
+        g_bits = jnp.where(xi, 2.0 * d * FLOAT_BITS, 2.0 * FLOAT_BITS + 1.0)
+        up = up + R.sum(jnp.where(part, sbits + g_bits + FLOAT_BITS, 0.0)) / R.n
+        carry_n = (z_n, w_n, zprev_n, L_n, gam_n, A_n, C_n, g1_n, g2_n,
+                   beta_i_n, up, down)
+        return carry_n, ys
+
+
+# ==========================================================================
+# Baselines: GD, DIANA, Newton
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class GDSpec(MethodSpec):
+    lr: float
+
+    def init(self, R, env):
+        return (env.x0, _f64(0.0))
+
+    def step(self, R, env, carry, key_t):
+        x, up = carry
+        x_n = x - self.lr * global_grad(R, env.batch, x)
+        return (x_n, up + env.batch.d * FLOAT_BITS), (x, up, _f64(0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class DianaSpec(MethodSpec):
+    comp: Compressor
+    alpha_h: float
+    lr: float
+
+    def init(self, R, env):
+        h0 = jnp.zeros((R.n_local, env.batch.d), env.x0.dtype)
+        return (env.x0, h0, _f64(0.0))
+
+    def step(self, R, env, carry, key_t):
+        x, h, up = carry
+        gi = client_batch.grads(env.batch, x)
+        q, bits = self.comp.batched(R.client_keys(key_t), gi - h)
+        ghat = R.mean(h + q)
+        h_n = h + self.alpha_h * q
+        x_n = x - self.lr * ghat
+        return (x_n, h_n, up + R.mean(bits)), (x, up, _f64(0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class NewtonSpec(MethodSpec):
+    per_iter_bits: float
+
+    def init(self, R, env):
+        return (env.x0, _f64(0.0))
+
+    def step(self, R, env, carry, key_t):
+        x, up = carry
+        batch = env.batch
+        if env.basisb is None:
+            H = R.mean(client_batch.hess(batch, x))
+        else:
+            coef = client_batch.hess_coeff_target(env.basisb, batch, x)
+            H = R.mean(env.basisb.server_reconstruct(coef, batch.lam))
+        g = global_grad(R, batch, x)
+        x_n = x - jnp.linalg.solve(H, g)
+        return (x_n, up + self.per_iter_bits), (x, up, _f64(0.0))
+
+
+# ==========================================================================
+# FedNL-BAG — FedNL Hessian learning + Bernoulli gradient aggregation
+# (the new-method-as-a-spec demonstration; arXiv 2206.03588's BAG mechanism)
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class FedNLBAGSpec(MethodSpec):
+    """Newton-type method with compressed Hessian learning and a
+    Bernoulli-lazy gradient uplink: each round every client independently
+    reports its exact local gradient with probability q; the server keeps
+    the latest gradient per client (lazy aggregation — stale entries of
+    silent clients are reused, which is the BAG mechanism's point) and
+    takes the projected-Newton step with ĝ = mean of the gradient table.
+    Staleness vanishes as the iterates converge, so the local Newton-type
+    rate survives q < 1."""
+
+    hess_comp: Compressor
+    alpha: float
+    q: float
+    eta: float
+    mu: float
+    init_exact: bool
+    init_up: float
+    block: bool
+
+    def prepare(self, R, batch, basisb, x0):
+        return coeff_layout(R, batch, basisb, x0, self.block)
+
+    def init(self, R, env):
+        lay = env.extra
+        x0 = env.x0
+        L0 = lay.target_at(x0) if self.init_exact else jnp.zeros(lay.shape, x0.dtype)
+        H0 = R.mean(lay.recon(L0)) + lay.ridge
+        gtab0 = client_batch.grads(env.batch, x0)  # exact init gradients
+        return (x0, L0, H0, gtab0, _f64(self.init_up + env.batch.d * FLOAT_BITS),
+                _f64(0.0))
+
+    def step(self, R, env, carry, key_t):
+        z, L, H, gtab, up, down = carry
+        batch = env.batch
+        lay = env.extra
+        ys = (z, up, down)  # gap evaluated at z, outside the scan
+
+        k_h, k_b = jax.random.split(key_t, 2)
+        # Bernoulli-lazy aggregation: reporters refresh their table row
+        send = R.shard(jax.random.bernoulli(k_b, self.q, (R.n,)))
+        gtab_n = jnp.where(send[:, None], client_batch.grads(batch, z), gtab)
+        ghat = R.mean(gtab_n)
+        up = up + R.sum(jnp.where(send, batch.d * FLOAT_BITS, 0.0)) / R.n
+
+        # FedNL Hessian-coefficient learning (same shift recursion as BL1)
+        S, L_n, bits = shift_update(
+            lambda delta: self.hess_comp.batched(R.client_keys(k_h), delta),
+            lay.target_at(z), L, self.alpha)
+        H_n = H + R.mean(lay.recon(self.alpha * S))
+        up = up + R.mean(bits)
+
+        # damped Newton step: η < 1 tempers the staleness feedback loop an
+        # aggressive q would otherwise excite (η = 1 recovers FedNL when q = 1)
+        z_n = z - self.eta * jnp.linalg.solve(proj_mu(H_n, self.mu), ghat)
+        return (z_n, L_n, H_n, gtab_n, up, down), ys

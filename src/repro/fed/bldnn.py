@@ -13,7 +13,9 @@ transfer is the communication mechanism, applied per layer:
   2. **Compressed-difference learning with shifts** (the L_i^k recursion of
      Alg. 1 applied to gradients): client i sends C(γ_i − L_i); both sides
      update L_i ← L_i + αC(·).  Contractive compressors use α = 1
-     (Assumption 4.6), unbiased ones α = 1/(ω+1) (Assumption 4.5).
+     (Assumption 4.6), unbiased ones α = 1/(ω+1) (Assumption 4.5).  The
+     recursion itself is the shared `repro.core.rounds.shift_update`
+     combinator — the same code the GLM round engine runs.
   3. **Curvature learning** (the second-order part): clients learn a
      per-parameter Fisher-diagonal estimate through the same compressed
      recursion; the server preconditions the aggregated update — the FedNL
@@ -26,12 +28,16 @@ state (shifts) carries a leading n_clients axis sharded over `data`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+
+from repro.core.compressors import _topk_keep_mask
+from repro.core.rounds import shift_update
+from repro.sharding.rules import CLIENT_AXIS
 
 Params = Dict[str, Any]
 
@@ -103,11 +109,15 @@ def _coeff_shape(p, basis):
 
 
 def _topk_dense(x, frac: float):
+    """Keep exactly the k = ⌈frac·numel⌉ largest-|·| entries; ties broken by
+    index via the core `_topk_keep_mask` machinery (the old ≥-threshold mask
+    kept extra entries on ties while billing only k).  Returns the compressed
+    tensor and the ACTUAL number of nonzeros on the wire — exactly k unless
+    some selected entries are themselves zero."""
     k = max(1, int(x.size * frac))
     v = x.reshape(-1)
-    thresh = jax.lax.top_k(jnp.abs(v), k)[0][-1]
-    out = jnp.where(jnp.abs(v) >= thresh, v, 0.0).reshape(x.shape)
-    return out, k
+    out = jnp.where(_topk_keep_mask(v, k), v, 0.0).reshape(x.shape)
+    return out, jnp.sum(out != 0).astype(jnp.float32)
 
 
 def init_fed_state(params: Params, bases, n_clients: int) -> Dict[str, Any]:
@@ -127,8 +137,9 @@ def make_fed_train_step(loss_fn, mesh, cfg: BLDNNConfig, bases, params_tree):
     batch leaves sharded over `data`; params replicated; per-client shifts
     sharded on their leading axis.
     """
-    data_axis = "data"
+    data_axis = CLIENT_AXIS
     treedef = jax.tree_util.tree_structure(params_tree)
+    compress = lambda t: _topk_dense(t, cfg.top_k_frac)
 
     def body(params, shift, fshift, server_f, batch):
         # each shard: params replicated; shift (1, ...) per client; batch local
@@ -136,15 +147,14 @@ def make_fed_train_step(loss_fn, mesh, cfg: BLDNNConfig, bases, params_tree):
         g = jax.grad(loss_fn)(params, batch)
         gl = _leaves(g)
 
-        comp, new_shift, sent = [], [], 0.0
+        new_shift, sent = [], 0.0
         for gi, si, b in zip(gl, shift, bases):
             coeff = _rotate(gi, b)
-            delta = coeff - si[0]
-            c, k = _topk_dense(delta, cfg.top_k_frac)
-            comp.append(c)
-            new_shift.append((si[0] + cfg.alpha * c)[None])
+            # shared Alg. 1 recursion: c = C(γ − L), L ← L + αc; the server
+            # aggregation below tracks the pmean of the updated shifts
+            _, s_new, k = shift_update(compress, coeff, si[0], cfg.alpha)
+            new_shift.append(s_new[None])
             sent += k
-        comp_mean = [jax.lax.pmean(c, data_axis) for c in comp]
         shift_mean = [jax.lax.pmean(s[0], data_axis) for s in new_shift]
         g_hat = [_unrotate(sm, b) for sm, b in zip(shift_mean, bases)]
 
@@ -152,8 +162,10 @@ def make_fed_train_step(loss_fn, mesh, cfg: BLDNNConfig, bases, params_tree):
             new_fshift, f_server_new, update = [], [], []
             for gi, fsi, sfi, gh in zip(gl, fshift, server_f, g_hat):
                 fl = gi.astype(jnp.float32) ** 2
-                fc, _ = _topk_dense(fl - fsi[0], cfg.top_k_frac)
-                new_fshift.append((fsi[0] + cfg.fisher_alpha * fc)[None])
+                # same recursion learning the Fisher diagonal
+                fc, fs_new, _ = shift_update(compress, fl, fsi[0],
+                                             cfg.fisher_alpha)
+                new_fshift.append(fs_new[None])
                 sf = sfi + cfg.fisher_alpha * jax.lax.pmean(fc, data_axis)
                 f_server_new.append(sf)
                 update.append(gh / (jnp.sqrt(jnp.maximum(sf, 0.0)) + cfg.eps))
@@ -168,8 +180,12 @@ def make_fed_train_step(loss_fn, mesh, cfg: BLDNNConfig, bases, params_tree):
         ]
         new_params = _unflatten_like(params, new_pl)
         loss = jax.lax.pmean(loss_fn(params, batch), data_axis)
+        # sent is now the ACTUAL per-client nonzero count (data-dependent,
+        # differs per shard) — reduce to the fleet mean so the replicated
+        # out_spec P() is genuinely replicated on multi-device meshes
+        sent = jax.lax.pmean(jnp.asarray(sent, jnp.float32), data_axis)
         return (new_params, new_shift, new_fshift, f_server_new,
-                {"loss": loss, "floats_sent": jnp.asarray(sent, jnp.float32)})
+                {"loss": loss, "floats_sent": sent})
 
     prepl = jax.tree.map(lambda _: P(), params_tree)
 

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ARCH_IDS, ALIASES, get_config
+from repro.configs import ARCH_IDS, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch import shapes as SH
 from repro.models import model as M

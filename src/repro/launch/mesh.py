@@ -20,3 +20,22 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_client_mesh(n_clients: int):
+    """1-D client mesh (axis = sharding.rules.CLIENT_AXIS) for the round
+    engine (`repro.core.rounds`).
+
+    Spans the most local devices that evenly divide the client count, so
+    every shard holds the same number of clients (the engine's bitwise
+    parity contract needs equal shards).  Returns (mesh, n_devices); a
+    1-device world yields a trivial mesh that still exercises shard_map.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.sharding.rules import CLIENT_AXIS
+
+    devs = jax.devices()
+    ndev = max(k for k in range(1, len(devs) + 1) if n_clients % k == 0)
+    return Mesh(np.asarray(devs[:ndev]), (CLIENT_AXIS,)), ndev

@@ -26,7 +26,7 @@ from repro.data import make_batch_iterator
 from repro.launch import shapes as SH
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import model as M
-from repro.models.steps import make_train_step, stub_inputs
+from repro.models.steps import make_train_step
 from repro.optim import adamw_init
 from repro.sharding.rules import make_rules, param_specs, wants_seq_parallel
 

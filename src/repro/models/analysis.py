@@ -1,7 +1,6 @@
 """Parameter / FLOP accounting for the roofline analysis."""
 from __future__ import annotations
 
-from typing import Dict
 
 import jax
 import jax.numpy as jnp

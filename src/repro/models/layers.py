@@ -13,14 +13,13 @@ O(block · seq) instead of O(seq²) — required for prefill_32k to fit HBM.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .config import ModelConfig, MoEConfig, SSMConfig
+from .config import ModelConfig
 
 Params = Dict[str, Any]
 

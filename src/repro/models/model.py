@@ -12,7 +12,6 @@ the token embeddings and M-RoPE positions are used.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -7,7 +7,7 @@ f32 update path, matching common large-scale TPU practice.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+
 
 import jax
 import jax.numpy as jnp

@@ -21,6 +21,25 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+# Mesh axis that client-stacked federated state shards over (the round
+# engine in repro.core.rounds and the BL-DNN layer in repro.fed.bldnn both
+# map their leading n_clients axis onto it).
+CLIENT_AXIS = "data"
+
+
+def client_engine_specs():
+    """shard_map specs for the unified round engine's scan body.
+
+    Positional layout is (batch, basisb, x0, keys): the client-stacked
+    pytrees (`ClientBatch`, `BatchedBasis`) shard their leading client
+    axis over CLIENT_AXIS; the server iterate and per-round PRNG keys are
+    replicated; the three history streams (eval iterates, up_bits,
+    down_bits) come back replicated.
+    """
+    sharded = P(CLIENT_AXIS)
+    return (sharded, sharded, P(), P()), (P(), P(), P())
+
+
 @dataclasses.dataclass
 class Rules:
     mesh: Mesh

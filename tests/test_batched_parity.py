@@ -166,6 +166,102 @@ def test_bl3_topk_envelope(problem):
     np.testing.assert_allclose(h_fast.up_bits, h_ref.up_bits, rtol=1e-12)
 
 
+# ------------------------------ shard_map reducer ---------------------------
+def test_sharded_reducer_parity_all_methods(problem):
+    """backend="fast+sharded" routes all cross-client reductions through the
+    shard_map `Reducer` (a trivial 1-device client mesh in this process).
+    It must (a) stay within the reference-parity envelope and (b) reproduce
+    the vmap backend's histories bitwise — the engine emits evaluation
+    iterates from the scan and computes gaps in one shared program, so any
+    trajectory divergence between the aggregation backends shows up here."""
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    r = bases[0].r
+    runs = {
+        "bl1": lambda b: bl.bl1(clients, bases, [TopK(k=r) for _ in clients],
+                                Identity(), x0, xs, 12, backend=b),
+        "bl2": lambda b: bl.bl2(clients, bases, [TopK(k=4 * r) for _ in clients],
+                                [Identity() for _ in clients], x0, xs, 12,
+                                backend=b),
+        "bl3": lambda b: bl.bl3(clients, [Identity() for _ in clients],
+                                [Identity() for _ in clients], x0, xs, 10,
+                                backend=b),
+    }
+    for name, run in runs.items():
+        h_ref, h_fast, h_sh = run("reference"), run("fast"), run("fast+sharded")
+        _assert_parity(h_ref, h_sh)
+        assert h_sh.gaps == h_fast.gaps, name
+        assert h_sh.up_bits == h_fast.up_bits, name
+        assert h_sh.down_bits == h_fast.down_bits, name
+
+
+# ------------------------------ FedNL-BAG spec ------------------------------
+def _bag_hand_rolled(clients, bases, comp, x0, x_star, steps, alpha, q, seed):
+    """Op-by-op loop mirroring specs.FedNLBAGSpec's PRNG layout exactly."""
+    from repro.core.bl import (_client_hcoef, _init_bits, _server_reconstruct,
+                               proj_mu)
+
+    n = len(clients)
+    d = x0.shape[0]
+    lam = clients[0].lam
+    f_star = float(glm.global_loss(clients, x_star))
+    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
+    z = x0
+    L = [_client_hcoef(bases[i], clients[i], x0) for i in range(n)]
+    H = sum(_server_reconstruct(bases[i], L[i], lam) for i in range(n)) / n
+    gtab = [glm.grad(clients[i], x0) for i in range(n)]  # lazy gradient table
+    up = sum(_init_bits(b, True) for b in bases) / n + d * C.FLOAT_BITS
+    gaps, ups = [], []
+    for t in range(steps):
+        gaps.append(max(float(glm.global_loss(clients, z)) - f_star, 0.0))
+        ups.append(up)
+        k_h, k_b = jax.random.split(keys[t], 2)
+        send = np.asarray(jax.random.bernoulli(k_b, q, (n,)))
+        for i in range(n):
+            if send[i]:
+                gtab[i] = glm.grad(clients[i], z)
+        ghat = sum(gtab) / n
+        up += send.sum() * d * C.FLOAT_BITS / n
+        cks = jax.random.split(k_h, n)
+        H_delta = jnp.zeros((d, d), x0.dtype)
+        bits = 0.0
+        for i in range(n):
+            target = _client_hcoef(bases[i], clients[i], z)
+            S, b_ = comp(cks[i], target - L[i])
+            L[i] = L[i] + alpha * S
+            H_delta = H_delta + bases[i].reconstruct(alpha * S)
+            bits += float(b_)
+        H = H + H_delta / n
+        up += bits / n
+        # η = q damping (the public wrapper's default)
+        z = z - q * jnp.linalg.solve(proj_mu(H, clients[0].lam), ghat)
+    return gaps, ups
+
+
+@pytest.mark.parametrize("q", [1.0, 0.5])
+def test_fednl_bag_matches_hand_rolled_reference(problem, q):
+    """The new Bernoulli-aggregation spec (the 'methods are cheap specs'
+    demonstration) against an independent op-by-op loop drawing from the
+    same PRNG stream: deterministic Top-K ⇒ strict parity."""
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    r = bases[0].r
+    h = baselines.fednl_bag(clients, bases, [TopK(k=2 * r) for _ in clients],
+                            x0, xs, 25, q=q, seed=3, backend="fast")
+    gaps, ups = _bag_hand_rolled(clients, bases, TopK(k=2 * r), x0, xs, 25,
+                                 alpha=1.0, q=q, seed=3)
+    np.testing.assert_allclose(h.gaps, gaps, rtol=1e-9, atol=GAP_TOL)
+    np.testing.assert_allclose(h.up_bits, ups, rtol=1e-12)
+    assert h.gaps[-1] < 1e-6  # Newton-type convergence survives q<1
+
+
+def test_fednl_bag_rejects_reference_backend(problem):
+    clients, x0, xs = problem
+    with pytest.raises(ValueError):
+        baselines.fednl_bag(clients, [StandardBasis(40)] * 6, [Identity()] * 6,
+                            x0, xs, 2, backend="reference")
+
+
 # ------------------------------ dispatch ------------------------------------
 def test_fast_backend_raises_on_heterogeneous_compressors(problem):
     clients, x0, xs = problem

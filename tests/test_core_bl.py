@@ -1,7 +1,6 @@
 """System behaviour tests for BL1/BL2/BL3 and baselines against the paper's
 claims: basis exactness, FedNL equivalence, superlinear local rates, and the
 communication-cost ordering of Table 1 / Figures 1–2."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -9,13 +8,12 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import baselines, bl, glm
 from repro.core.basis import (
-    DataOuterBasis,
     PSDBasis,
     StandardBasis,
     SymmetricBasis,
     orth_basis_from_data,
 )
-from repro.core.compressors import FLOAT_BITS, Identity, RandK, RankR, TopK
+from repro.core.compressors import Identity, RankR, TopK
 
 
 @pytest.fixture(scope="module")

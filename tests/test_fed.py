@@ -6,7 +6,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.fed.bldnn import (
     BLDNNConfig,
@@ -37,10 +36,23 @@ def _loss(params, batch):
 
 def test_topk_dense_contract():
     x = jnp.asarray(np.random.default_rng(0).standard_normal((40, 40)), jnp.float32)
-    out, k = _topk_dense(x, 0.1)
-    assert int(jnp.sum(out != 0)) >= k  # ties may add a few
+    out, sent = _topk_dense(x, 0.1)
+    k = max(1, int(x.size * 0.1))
+    assert int(jnp.sum(out != 0)) == k  # exactly k kept — no tie overshoot
+    assert int(sent) == k               # billed floats == actual nonzeros
     lhs = float(jnp.sum((x - out) ** 2))
     assert lhs <= (1 - k / x.size) * float(jnp.sum(x**2)) + 1e-5
+
+
+def test_topk_dense_ties_and_zeros():
+    """Ties must not inflate the kept set beyond k, and the transmitted-float
+    count is the ACTUAL nonzero count (a zero tensor sends nothing)."""
+    tied = jnp.ones((10, 10), jnp.float32)
+    out, sent = _topk_dense(tied, 0.07)
+    assert int(jnp.sum(out != 0)) == 7
+    assert int(sent) == 7
+    out0, sent0 = _topk_dense(jnp.zeros((10, 10), jnp.float32), 0.07)
+    assert int(sent0) == 0 and float(jnp.sum(jnp.abs(out0))) == 0.0
 
 
 def test_rotation_roundtrip():

@@ -1,6 +1,5 @@
 """Per-kernel allclose tests against the ref.py oracles, swept over shapes
 and dtypes (interpret=True on CPU — deliverable c)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -93,7 +93,6 @@ def test_mrope_components_differ():
 
 def test_windowed_kv_slicing_matches_full_masking():
     """_blocked_attn with window slicing == full-sequence masked reference."""
-    from repro.kernels import ref
     rng = np.random.default_rng(5)
     B, S, KVH, rep, hd, W = 2, 64, 2, 2, 16, 8
     q = jnp.asarray(rng.standard_normal((B, S, KVH, rep, hd)), jnp.float32)

@@ -1,7 +1,5 @@
 """System-level tests: data pipeline determinism, sharding rules, dry-run
 collective parser, config registry, analysis accounting."""
-import json
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -144,7 +142,6 @@ def test_shape_applicability():
 
 def test_sharding_rules_divisibility():
     """Every spec'd dim must divide by its mesh axes for every arch."""
-    from repro.launch.mesh import make_debug_mesh
     from repro.models import model as M
     from repro.sharding.rules import make_rules, param_specs
     mesh = jax.make_mesh((1, 1), ("data", "model"))
