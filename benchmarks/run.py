@@ -169,6 +169,37 @@ def fig6():
             ("fig6_BL3", 0.0, f"gap@30={h3.gaps[-1]:.2e}")]
 
 
+@bench("basis_matrix")
+def basis_matrix():
+    """The paper's thesis as one grid: bits-to-ε for every REGISTERED basis
+    × {Top-K, Rank-R} on BL1, one-time basis shipment included (the ledger's
+    basis_ship leg is broken out in `derived`).  Every basis gets the SAME
+    coefficient budget (K = r² — the data basis's full coefficient count),
+    so differences are purely where the basis concentrates energy."""
+    from repro.core import bl
+    from repro.core.basis import available_bases, make_bases
+    from repro.core.compressors import Identity, RankR, TopK
+
+    clients, x0, xs = _problem()
+    r = 24
+    STEPS = 16
+    comps = {"topk": TopK(k=r * r), "rankr": RankR(r=2)}
+    rows = []
+    for bname in available_bases():
+        if bname == "psd":
+            continue  # BL3's basis (Example 5.1); BL1/BL2 grid runs the rest
+        bases = make_bases(bname, clients, x0=x0)
+        for cname, comp in comps.items():
+            h = bl.bl1(clients, bases, [comp for _ in clients], Identity(),
+                       x0, xs, STEPS, backend="fast")
+            ship = h.legs["basis_ship"][-1] / 1e6
+            rows.append((
+                f"basis_matrix_{bname}_{cname}", 0.0,
+                f"Mbits_to_1e-6={_bits_to(h):.3f};gap@{STEPS}={h.gaps[-1]:.2e}"
+                f";basis_ship_Mbits={ship:.3f}"))
+    return rows
+
+
 @bench("engine_sharded")
 def engine_sharded():
     """Round-engine aggregation backends head-to-head: single-device vmap
@@ -208,6 +239,9 @@ for backend in ("fast", "fast+sharded"):
     print(f"RESULT {backend} {us:.1f} {h.gaps[-1]:.3e}")
 """
     env = dict(os.environ, PYTHONPATH="src")
+    # pin the child to CPU when the parent doesn't say otherwise — on images
+    # with a TPU plugin an unpinned child burns minutes probing for hardware
+    env.setdefault("JAX_PLATFORMS", "cpu")
     proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
                           text=True, timeout=900, env=env)
     res = {}

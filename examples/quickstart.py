@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines, bl, glm
-from repro.core.basis import StandardBasis, orth_basis_from_data
+from repro.core.basis import StandardBasis, make_bases, orth_basis_from_data
 from repro.core.compressors import Identity, RankR, TopK
 
 def main():
@@ -26,9 +26,14 @@ def main():
     data_bases = [orth_basis_from_data(c.A) for c in clients]
     std_bases = [StandardBasis(d) for _ in clients]
 
+    eigen_bases = make_bases("eigen", clients, x0=x0)  # registry lookup
+
     runs = {
         "BL1 (data basis, Top-r)": lambda: bl.bl1(
             clients, data_bases, [TopK(k=b.r) for b in data_bases],
+            Identity(), x0, x_star, steps=20),
+        "BL1 (eigen basis, Top-r²)": lambda: bl.bl1(
+            clients, eigen_bases, [TopK(k=r * r) for _ in clients],
             Identity(), x0, x_star, steps=20),
         "FedNL (std basis, Rank-1)": lambda: bl.bl1(
             clients, std_bases, [RankR(r=1) for _ in clients],
@@ -39,12 +44,20 @@ def main():
         "GD (1/L)": lambda: baselines.gd(clients, x0, x_star, 200),
     }
     print(f"{'method':28s} {'gap@end':>10s} {'Mbits/node to 1e-6':>20s}")
+    last = None
     for name, fn in runs.items():
         h = fn()
         g = np.asarray(h.gaps)
         reached = g < 1e-6
         bits = h.up_bits[int(np.argmax(reached))] if reached.any() else float("inf")
         print(f"{name:28s} {g[-1]:10.2e} {bits/1e6:20.3f}")
+        if name.startswith("BL1 (data"):
+            last = h
+
+    # the comm ledger breaks the uplink into legs (per node, cumulative)
+    print("\nBL1 (data basis) per-leg bits at the last round:")
+    for leg, stream in last.legs.items():
+        print(f"  {leg:12s} {stream[-1]/1e6:8.3f} Mbits")
 
 if __name__ == "__main__":
     main()

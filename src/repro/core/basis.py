@@ -5,29 +5,48 @@ reconstruction A = Σ_{jl} h_{jl} B^{jl} (backward).  All transforms are exact
 (lossless); lossy compression is applied to the *coefficient matrix* by the
 algorithms.
 
-Implemented bases:
+The module doubles as a **basis registry** — "which basis" is the system's
+primary configuration axis (the paper's thesis is that the basis, not the
+compressor, is the big lever on communication), so bases are registered
+under string names and built per-fleet with `make_bases(name, clients,
+...)`:
 
-  * StandardBasis       — Example 4.1 (h(A) = A); N_B orthogonal.
-  * SymmetricBasis      — Example 4.2 (triangular coefficients for S^d).
-  * PSDBasis            — Example 5.1 (B^{jl} ⪰ 0, for BL3).
-  * DataOuterBasis      — §2.3: client data spans G_i = span{v_1..v_r}; the
-                          coefficient matrix of any A = Σ γ_tl v_t v_l^T is the
-                          r×r matrix Γ.  h(A) is computed in the r-dim
-                          coordinate space (Γ = pinv-projection), NEVER via the
-                          d²×d² inverse — same math as Eq. 9 restricted to the
-                          r²-dim subspace actually used.
+  * ``standard``    — Example 4.1 (h(A) = A); N_B orthogonal.
+  * ``symmetric``   — Example 4.2 (triangular coefficients for S^d).
+  * ``psd``         — Example 5.1 (B^{jl} ⪰ 0, for BL3).
+  * ``data_outer``  — §2.3: client data spans G_i = span{v_1..v_r}; the
+                      coefficient matrix of any A = Σ γ_tl v_t v_l^T is the
+                      r×r matrix Γ.  h(A) is computed in the r-dim
+                      coordinate space (Γ = pinv-projection), NEVER via the
+                      d²×d² inverse.
+  * ``eigen``       — eigenbasis of the initial averaged Hessian ∇²f(x⁰):
+                      B^{jl} = q_j q_lᵀ for Q the orthonormal eigenvectors.
+                      Concentrates coefficient energy on the leading
+                      curvature directions; shipped once (d² floats, billed
+                      on the ledger's basis leg).
+  * ``dct``         — fixed orthogonal DCT-II basis: same rotation machinery
+                      as ``eigen`` but *conventional* — both sides generate
+                      it, zero shipment cost.
 
-For DataOuterBasis, coefficient matrices are r×r embedded in the top-left of a
-d×d array padded with exact zeros, so the same compressor machinery applies and
-the bit accountant only ever "sees" r² potentially-nonzero coefficients.
+For DataOuterBasis, coefficient matrices are r×r embedded in the top-left of
+a d×d array padded with exact zeros, so the same compressor machinery
+applies and the bit accountant only ever "sees" r² potentially-nonzero
+coefficients.
+
+New bases register with `@register_basis("name")` and are automatically
+picked up by the benchmark grid (`benchmarks/run.py::basis_matrix`) and the
+round-trip contract tests (tests/test_basis_registry.py).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .comm import FLOAT_BITS
 
 
 class MatrixBasis:
@@ -156,6 +175,50 @@ class DataOuterBasis(MatrixBasis):
         return self.V @ gamma @ self.V.T
 
 
+@dataclasses.dataclass
+class RotationBasis(MatrixBasis):
+    """B^{jl} = q_j q_lᵀ for one orthogonal Q ∈ R^{d×d}: a complete
+    orthonormal basis of R^{d×d}, so h(A) = QᵀAQ and A = Q h Qᵀ exactly for
+    EVERY matrix (no data-span assumption, no analytic ridge)."""
+    Q: jax.Array  # (d, d), orthogonal
+
+    def __post_init__(self):
+        self.d = int(self.Q.shape[0])
+        self.n_coeff = self.d * self.d
+        self.orthogonal = True
+        self.R = 1.0
+
+    def h(self, A):
+        return self.Q.T @ A @ self.Q
+
+    def reconstruct(self, H):
+        return self.Q @ H @ self.Q.T
+
+
+@dataclasses.dataclass
+class EigenBasis(RotationBasis):
+    """Eigenbasis of the initial averaged Hessian ∇²f(x⁰) (the "basis
+    matters" demonstration basis): curvature concentrates coefficient energy
+    in the leading eigendirections, so Top-K in this basis keeps more signal
+    per bit than the standard basis.  Q is NOT a convention — it depends on
+    the fleet's data — so it ships once (d² floats, `basis_transmission_bits`)
+    and the comm ledger bills it on the ``basis_ship`` leg."""
+
+
+class DCTBasis(RotationBasis):
+    """Fixed orthonormal DCT-II rotation: the same machinery as `EigenBasis`
+    but data-independent — server and clients both generate it, so shipment
+    is free.  A useful control in the basis×compressor grid: it shows how
+    much of the eigenbasis win is *data adaptivity* vs mere decorrelation."""
+
+    def __init__(self, d: int):
+        j = np.arange(d)[:, None]      # frequency index
+        t = np.arange(d)[None, :]      # position index
+        C = np.sqrt(2.0 / d) * np.cos(np.pi * (t + 0.5) * j / d)
+        C[0] *= np.sqrt(0.5)           # orthonormalize the DC row
+        super().__init__(Q=jnp.asarray(C.T))  # columns = DCT basis vectors
+
+
 def orth_basis_from_data(A_data: jax.Array, rcond: float = 1e-10) -> DataOuterBasis:
     """Orthonormal basis of the row space of the client's data matrix (m, d).
 
@@ -170,11 +233,98 @@ def orth_basis_from_data(A_data: jax.Array, rcond: float = 1e-10) -> DataOuterBa
     return DataOuterBasis(V=V)
 
 
-def basis_transmission_bits(basis: MatrixBasis, float_bits: int = 64) -> float:
-    """One-time cost of shipping the basis to the server (Table 1: rd floats).
+def eigen_basis_from_clients(clients, x0: Optional[jax.Array] = None) -> List[EigenBasis]:
+    """One shared `EigenBasis` per client: eigenvectors of the fleet's
+    averaged initial Hessian ∇²f(x⁰) (x⁰ = 0 by default, as the experiments
+    initialize).  Returns the SAME basis object for every client — the
+    batched engine exploits that (one (d, d) Q, not n copies)."""
+    from . import glm  # local import: glm is a sibling leaf module
 
-    Standard/symmetric/PSD bases are conventions — zero marginal cost.
+    clients = list(clients)
+    d = int(clients[0].A.shape[1])
+    if x0 is None:
+        x0 = jnp.zeros(d, clients[0].A.dtype)
+    H0 = glm.global_hess(clients, x0)
+    _, Q = jnp.linalg.eigh((H0 + H0.T) / 2.0)
+    basis = EigenBasis(Q=Q)
+    return [basis for _ in clients]
+
+
+def basis_transmission_bits(basis: MatrixBasis, float_bits: int = FLOAT_BITS) -> float:
+    """One-time cost of shipping the basis to the server (Table 1: rd floats
+    for the data basis, d² for an eigenbasis).
+
+    Standard/symmetric/PSD/DCT bases are conventions — zero marginal cost.
     """
     if isinstance(basis, DataOuterBasis):
         return float(basis.d * basis.r * float_bits)
+    if isinstance(basis, EigenBasis):
+        return float(basis.d * basis.d * float_bits)
     return 0.0
+
+
+# --------------------------------------------------------------------------
+# registry: "which basis" as a first-class configuration axis
+# --------------------------------------------------------------------------
+BasisFactory = Callable[..., List[MatrixBasis]]
+BASIS_REGISTRY: Dict[str, BasisFactory] = {}
+
+
+def register_basis(name: str):
+    """Register a fleet-level basis factory ``factory(clients, x0=None,
+    **kw) -> List[MatrixBasis]`` under `name`."""
+    def deco(factory: BasisFactory) -> BasisFactory:
+        BASIS_REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available_bases() -> List[str]:
+    return sorted(BASIS_REGISTRY)
+
+
+def make_bases(name: str, clients: Sequence, x0: Optional[jax.Array] = None,
+               **kw) -> List[MatrixBasis]:
+    """Build the per-client basis list for a registered basis name."""
+    if name not in BASIS_REGISTRY:
+        raise KeyError(
+            f"unknown basis {name!r}; registered: {available_bases()}")
+    return BASIS_REGISTRY[name](list(clients), x0=x0, **kw)
+
+
+def _fleet_d(clients) -> int:
+    return int(clients[0].A.shape[1])
+
+
+@register_basis("standard")
+def _standard_bases(clients, x0=None):
+    d = _fleet_d(clients)
+    return [StandardBasis(d) for _ in clients]
+
+
+@register_basis("symmetric")
+def _symmetric_bases(clients, x0=None):
+    d = _fleet_d(clients)
+    return [SymmetricBasis(d) for _ in clients]
+
+
+@register_basis("psd")
+def _psd_bases(clients, x0=None):
+    d = _fleet_d(clients)
+    return [PSDBasis(d) for _ in clients]
+
+
+@register_basis("data_outer")
+def _data_outer_bases(clients, x0=None, rcond: float = 1e-10):
+    return [orth_basis_from_data(c.A, rcond=rcond) for c in clients]
+
+
+@register_basis("eigen")
+def _eigen_bases(clients, x0=None):
+    return eigen_basis_from_clients(clients, x0=x0)
+
+
+@register_basis("dct")
+def _dct_bases(clients, x0=None):
+    basis = DCTBasis(_fleet_d(clients))
+    return [basis for _ in clients]

@@ -2,9 +2,11 @@
 
 Per-client state lives in leading-axis-`n` stacked arrays (`ClientBatch`,
 `BatchedBasis` — see `client_batch.py`); compressors run through their
-vmapped `Compressor.batched` entry points; rounds run under one
+natively-batched `Compressor.compress` contract; rounds run under one
 `jax.lax.scan`, so a whole optimization trajectory is a single XLA program
 with zero device→host syncs until the histories come back at the end.
+Communication is accounted per leg by a `comm.CommLedger` in the scan carry
+(`History.legs` exposes the hess/grad/model/basis-shipment streams).
 
 The algorithms themselves live in `repro.core.specs` as declarative method
 specs (BL1/BL2/BL3/GD/DIANA/Newton/FedNL-BAG) plugged into the unified round
@@ -32,11 +34,11 @@ from typing import Optional, Sequence
 import jax
 import numpy as np
 
-from . import client_batch, rounds, specs
+from . import client_batch, comm, rounds, specs
 from .basis import MatrixBasis
 from .bl import History
+from .comm import FLOAT_BITS
 from .compressors import (
-    FLOAT_BITS,
     BernoulliLazy,
     ComposedRankR,
     ComposedTopK,
@@ -97,10 +99,18 @@ def _stack_or_raise(clients, bases=None):
     return batch, basisb
 
 
-def _history(gaps, ups, downs) -> History:
+def _history(gaps, leds: comm.CommLedger) -> History:
+    """History from the engine's (gaps, per-leg ledger streams): `up_bits`
+    is the ledger's uplink total (hess + grad + basis shipment) so the
+    paper's x-axis is unchanged, and every leg stays inspectable in
+    `History.legs`."""
     g = np.maximum(np.asarray(gaps), 0.0)
-    return History(list(map(float, g)), list(map(float, np.asarray(ups))),
-                   list(map(float, np.asarray(downs))))
+    legs = {name: list(map(float, np.asarray(getattr(leds, name))))
+            for name in comm.CommLedger.LEGS}
+    return History(list(map(float, g)),
+                   list(map(float, np.asarray(leds.uplink))),
+                   list(map(float, np.asarray(leds.model_down))),
+                   legs=legs)
 
 
 def _f_star(batch, x_star) -> jax.Array:
@@ -128,10 +138,10 @@ def _block_mode(basisb, comp) -> bool:
 
 def _run(spec, batch, basisb, x0, x_star, steps, seed, *, sharded, exact=True):
     keys = jax.random.split(jax.random.PRNGKey(seed), steps)
-    gaps, ups, downs = rounds.run_rounds(
+    gaps, leds = rounds.run_rounds(
         spec, batch, basisb, x0, _f_star(batch, x_star), keys,
         sharded=sharded, exact=exact)
-    return _history(gaps, ups, downs)
+    return _history(gaps, leds)
 
 
 # ==========================================================================
@@ -147,7 +157,8 @@ def bl1_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
         hess_comp=hc, model_comp=model_comp, alpha=alpha, eta=eta, p=p,
         mu=batch.lam if mu is None else mu, init_exact=init_exact_hessian,
         grad_bits=basisb.grad_uplink_bits_mean(),
-        init_up=basisb.init_bits_mean(init_exact_hessian),
+        init_hess_bits=basisb.init_coeff_bits_mean(init_exact_hessian),
+        basis_bits=basisb.transmission_bits_mean(),
         block=_block_mode(basisb, hc),
     )
     return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded)
@@ -165,7 +176,8 @@ def bl2_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
     spec = specs.BL2Spec(
         hess_comp=hc, model_comp=mc, alpha=alpha, eta=eta, p=p,
         tau=batch.n if tau is None else tau, init_exact=init_exact_hessian,
-        init_up=basisb.init_bits_mean(init_exact_hessian),
+        init_hess_bits=basisb.init_coeff_bits_mean(init_exact_hessian),
+        basis_bits=basisb.transmission_bits_mean(),
         block=_block_mode(basisb, hc),
     )
     return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded)
@@ -221,18 +233,19 @@ def newton_fast(clients, x0, x_star, steps,
     batch, basisb = _stack_or_raise(clients, bases)
     d = batch.d
     if basisb is None:
-        init_up = 0.0
-        per_iter = (d * d + d) * FLOAT_BITS
+        basis_bits = 0.0
+        hess_bits = d * d * FLOAT_BITS
+        grad_bits = d * FLOAT_BITS
     else:
         if basisb.kind != "data_outer":
             raise FastPathUnavailable("newton basis path expects DataOuterBasis")
         rs = basisb.rs
-        init_up = sum(d * r * FLOAT_BITS for r in rs) / len(rs)
-        per_iter = sum(r * r + r for r in rs) / len(rs) * FLOAT_BITS
-    spec = specs.NewtonSpec(per_iter_bits=per_iter)
-    hist = _run(spec, batch, basisb, x0, x_star, steps, 0, sharded=sharded)
-    hist.up_bits = [u + init_up for u in hist.up_bits]
-    return hist
+        basis_bits = sum(d * r * FLOAT_BITS for r in rs) / len(rs)
+        hess_bits = sum(r * r for r in rs) / len(rs) * FLOAT_BITS
+        grad_bits = sum(float(r) for r in rs) / len(rs) * FLOAT_BITS
+    spec = specs.NewtonSpec(hess_bits=hess_bits, grad_bits=grad_bits,
+                            basis_bits=basis_bits)
+    return _run(spec, batch, basisb, x0, x_star, steps, 0, sharded=sharded)
 
 
 def fednl_bag_fast(clients, bases, hess_comp, x0, x_star, steps, alpha=1.0,
@@ -246,7 +259,8 @@ def fednl_bag_fast(clients, bases, hess_comp, x0, x_star, steps, alpha=1.0,
         hess_comp=hc, alpha=alpha, q=q, eta=q if eta is None else eta,
         mu=batch.lam if mu is None else mu,
         init_exact=init_exact_hessian,
-        init_up=basisb.init_bits_mean(init_exact_hessian),
+        init_hess_bits=basisb.init_coeff_bits_mean(init_exact_hessian),
+        basis_bits=basisb.transmission_bits_mean(),
         block=_block_mode(basisb, hc),
     )
     return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded)

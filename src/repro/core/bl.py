@@ -31,7 +31,7 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +60,10 @@ class History:
     gaps: List[float]
     up_bits: List[float]
     down_bits: List[float]
+    #: optional per-leg cumulative bit streams keyed by `comm.CommLedger`
+    #: leg name (hess_up / grad_up / model_down / basis_ship) — populated by
+    #: the batched engine's ledger; the reference loops leave it None.
+    legs: Optional[Dict[str, List[float]]] = None
 
     def append(self, gap, up, down):
         self.gaps.append(float(max(gap, 0.0)))

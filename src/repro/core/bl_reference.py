@@ -173,9 +173,12 @@ def bl2_reference(
         hist.append(float(glm.global_loss(clients, x_cur)) - f_star, up, down)
 
         key, sk = jax.random.split(key)
-        part = np.array(jax.random.bernoulli(sk, tau / n, (n,)))
+        # mirror rounds.participation: mask and fallback index from SPLIT
+        # keys (one key for both correlates the forced client with the mask)
+        sk_mask, sk_idx = jax.random.split(sk)
+        part = np.array(jax.random.bernoulli(sk_mask, tau / n, (n,)))
         if not part.any():
-            idx = int(jax.random.randint(sk, (), 0, n))
+            idx = int(jax.random.randint(sk_idx, (), 0, n))
             part[idx] = True
 
         step_up = 0.0
@@ -274,9 +277,11 @@ def bl3_reference(
         hist.append(float(glm.global_loss(clients, x_cur)) - f_star, up, down)
 
         key, sk = jax.random.split(key)
-        part = np.array(jax.random.bernoulli(sk, tau / n, (n,)))
+        # mirror rounds.participation's split-key draw (see bl2 above)
+        sk_mask, sk_idx = jax.random.split(sk)
+        part = np.array(jax.random.bernoulli(sk_mask, tau / n, (n,)))
         if not part.any():
-            idx = int(jax.random.randint(sk, (), 0, n))
+            idx = int(jax.random.randint(sk_idx, (), 0, n))
             part[idx] = True
 
         step_up = 0.0

@@ -33,8 +33,16 @@ import jax
 import jax.numpy as jnp
 
 from . import glm
-from .basis import DataOuterBasis, MatrixBasis, StandardBasis, SymmetricBasis
-from .compressors import FLOAT_BITS
+from .basis import (
+    DataOuterBasis,
+    DCTBasis,
+    EigenBasis,
+    MatrixBasis,
+    PSDBasis,
+    StandardBasis,
+    SymmetricBasis,
+)
+from .comm import FLOAT_BITS
 
 
 # --------------------------------------------------------------------------
@@ -74,27 +82,34 @@ class ClientBatch:
 class BatchedBasis:
     """A fleet-wide basis: one basis *kind*, per-client parameters stacked.
 
-    kind ∈ {"standard", "symmetric", "data_outer"}.  For "data_outer", `V` is
-    (n, d, r_max) with orthonormal columns up to each client's true rank and
-    exact-zero padding beyond; `rs` keeps the true per-client ranks for bit
-    accounting (the wire cost depends on r_i, not r_max).
+    kind ∈ {"standard", "symmetric", "psd", "data_outer", "eigen", "dct"}.
+    For "data_outer", `V` is (n, d, r_max) with orthonormal columns up to
+    each client's true rank and exact-zero padding beyond; `rs` keeps the
+    true per-client ranks for bit accounting (the wire cost depends on r_i,
+    not r_max).  For the rotation kinds ("eigen", "dct") every client uses
+    the SAME orthogonal rotation (the eigenbasis of ∇²f(x⁰) is global by
+    construction, the DCT is a convention) — `Q` is stored client-stacked
+    (n, d, d) anyway so it shards over the client mesh exactly like `V`
+    (the engine's shard_map in_specs are a per-leaf P(CLIENT_AXIS) prefix).
     """
 
     kind: str                   # static
     d: int                      # static
     rs: Tuple[int, ...]         # static: per-client ranks (d for non-data bases)
     V: Optional[jax.Array] = None  # (n, d, r_max) for kind == "data_outer"
+    Q: Optional[jax.Array] = None  # (n, d, d) stacked rotation for eigen/dct
 
     @property
     def r_max(self) -> int:
         return max(self.rs)
 
     def tree_flatten(self):
-        return (self.V,), (self.kind, self.d, self.rs)
+        return (self.V, self.Q), (self.kind, self.d, self.rs)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(kind=aux[0], d=aux[1], rs=aux[2], V=children[0])
+        return cls(kind=aux[0], d=aux[1], rs=aux[2], V=children[0],
+                   Q=children[1])
 
     # ---- bit accounting (host-side floats, no device sync) ----------------
     def grad_uplink_bits_mean(self) -> float:
@@ -105,23 +120,26 @@ class BatchedBasis:
         return self.d * FLOAT_BITS
 
     def transmission_bits_mean(self) -> float:
-        """One-time basis shipping cost averaged over clients (Table 1)."""
+        """One-time basis shipping cost averaged over clients (Table 1:
+        rd floats for the data basis, d² for the learned eigenbasis; the
+        convention bases — standard/symmetric/psd/dct — are free)."""
         if self.kind == "data_outer":
             return sum(self.d * r * FLOAT_BITS for r in self.rs) / len(self.rs)
+        if self.kind == "eigen":
+            return float(self.d * self.d * FLOAT_BITS)
         return 0.0
 
     def coeff_count_mean(self) -> float:
         if self.kind == "data_outer":
             return sum(r * r for r in self.rs) / len(self.rs)
-        if self.kind == "symmetric":
+        if self.kind in ("symmetric", "psd"):
             return self.d * (self.d + 1) / 2
         return self.d * self.d
 
-    def init_bits_mean(self, init_exact: bool) -> float:
-        bits = self.transmission_bits_mean()
-        if init_exact:
-            bits += self.coeff_count_mean() * FLOAT_BITS
-        return bits
+    def init_coeff_bits_mean(self, init_exact: bool) -> float:
+        """Bits for shipping the exact initial coefficients (hess-up leg);
+        the one-time basis shipment is billed separately by the ledger."""
+        return self.coeff_count_mean() * FLOAT_BITS if init_exact else 0.0
 
     # ---- coefficient transforms (batched h / reconstruct) -----------------
     def h(self, A: jax.Array) -> jax.Array:
@@ -130,6 +148,14 @@ class BatchedBasis:
             return A
         if self.kind == "symmetric":
             return jnp.tril(A)
+        if self.kind == "psd":
+            off = jnp.tril(A, -1)
+            diag_v = jnp.diagonal(A, axis1=-2, axis2=-1)
+            rowsum = jnp.sum(A, axis=-1) - diag_v
+            eye = jnp.eye(self.d, dtype=A.dtype)
+            return off + eye * (diag_v - rowsum)[..., :, None]
+        if self.kind in ("eigen", "dct"):
+            return jnp.einsum("ndr,nde,nes->nrs", self.Q, A, self.Q)
         gamma = _basis_project(self.V, A)            # (n, r_max, r_max)
         out = jnp.zeros(A.shape, A.dtype)
         return out.at[:, : self.r_max, : self.r_max].set(gamma)
@@ -140,11 +166,21 @@ class BatchedBasis:
             return H
         if self.kind == "symmetric":
             return jnp.tril(H) + jnp.transpose(jnp.tril(H, -1), (0, 2, 1))
+        if self.kind == "psd":
+            off = jnp.tril(H, -1)
+            sym_off = off + jnp.transpose(off, (0, 2, 1))
+            contrib = jnp.sum(sym_off, axis=-1)
+            diag_v = jnp.diagonal(H, axis1=-2, axis2=-1) + contrib
+            eye = jnp.eye(self.d, dtype=H.dtype)
+            return sym_off + eye * diag_v[..., :, None]
+        if self.kind in ("eigen", "dct"):
+            return jnp.einsum("ndr,nrs,nes->nde", self.Q, H, self.Q)
         gamma = H[:, : self.r_max, : self.r_max]
         return jnp.einsum("ndr,nrs,nes->nde", self.V, gamma, self.V)
 
     def server_reconstruct(self, H: jax.Array, lam: float) -> jax.Array:
-        """Reconstruct + analytic λI ridge for data bases (as the server does)."""
+        """Reconstruct + analytic λI ridge for data bases (as the server does).
+        Rotation/convention bases encode the FULL Hessian — no ridge."""
         out = self.reconstruct(H)
         if self.kind == "data_outer":
             out = out + lam * jnp.eye(self.d, dtype=out.dtype)
@@ -186,18 +222,33 @@ def from_clients(clients: Sequence[glm.ClientData]) -> Optional[ClientBatch]:
 
 def stack_bases(bases: Sequence[MatrixBasis]) -> Optional[BatchedBasis]:
     """Stack a homogeneous-kind basis list; None if mixed kinds (fall back)."""
+    import numpy as np
+
     bases = list(bases)
     if not bases:
         return None
     b0 = bases[0]
-    if all(type(b) is StandardBasis for b in bases):
+    for cls, kind in ((StandardBasis, "standard"), (SymmetricBasis, "symmetric"),
+                      (PSDBasis, "psd")):
+        if all(type(b) is cls for b in bases):
+            if any(b.d != b0.d for b in bases):
+                return None
+            return BatchedBasis(kind=kind, d=b0.d, rs=tuple(b.d for b in bases))
+    if all(type(b) is DCTBasis for b in bases):
         if any(b.d != b0.d for b in bases):
             return None
-        return BatchedBasis(kind="standard", d=b0.d, rs=tuple(b.d for b in bases))
-    if all(type(b) is SymmetricBasis for b in bases):
-        if any(b.d != b0.d for b in bases):
+        return BatchedBasis(kind="dct", d=b0.d, rs=tuple(b.d for b in bases),
+                            Q=jnp.stack([b.Q for b in bases]))
+    if all(type(b) is EigenBasis for b in bases):
+        # the eigenbasis is global by construction — require one shared Q
+        # (heterogeneous rotations fall back to the reference loops)
+        same = all(b.Q is b0.Q or np.array_equal(np.asarray(b.Q),
+                                                 np.asarray(b0.Q))
+                   for b in bases[1:])
+        if any(b.d != b0.d for b in bases) or not same:
             return None
-        return BatchedBasis(kind="symmetric", d=b0.d, rs=tuple(b.d for b in bases))
+        return BatchedBasis(kind="eigen", d=b0.d, rs=tuple(b.d for b in bases),
+                            Q=jnp.stack([b.Q for b in bases]))
     if all(type(b) is DataOuterBasis for b in bases):
         if any(b.d != b0.d for b in bases):
             return None

@@ -1,0 +1,132 @@
+"""Communication layer: wire formats, message counts, and the per-leg ledger.
+
+The paper's headline axis is *communicated bits per node*, split across four
+distinct legs (Table 1 / §2.3):
+
+  * ``hess_up``    — compressed Hessian-coefficient uplink (the S_i stream);
+  * ``grad_up``    — gradient-leg uplink (fresh g_i, Δl floats, ξ bits, β);
+  * ``model_down`` — compressed model broadcast server → clients;
+  * ``basis_ship`` — the one-time basis shipment (rd floats for the data
+    basis, d² for an eigenbasis, zero for convention bases).
+
+This module owns all of that accounting.  Compressors never compute bits:
+they return *message counts* (`Counts` — how many floats / indices / packed
+entries actually hit the wire) and declare a `WireFormat` describing how to
+price one unit of each.  ``price(wire, counts)`` turns counts into bits, and
+the `CommLedger` — a registered pytree threaded through the round engine's
+scan carry — accumulates bits per leg.  The `History` contract's ``up_bits``
+is the ledger's ``uplink`` total (hess + grad + basis), so the paper plots
+are unchanged while every leg stays separately inspectable.
+
+Composed compressors (Top-K ∘ dithering, Rank-R with compressed singular
+vectors) have *structured* wire formats: a tuple of formats matching a tuple
+of counts, priced leg-by-leg by recursion — pricing policy stays here even
+for nested codecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+FLOAT_BITS = 64  # the paper's experiments (NumPy) use float64 coefficients
+INDEX_BITS = 32
+
+
+class Counts(NamedTuple):
+    """What one compressed message physically carries, per client.
+
+    Leaves are per-client ``(n,)`` float64 arrays (or scalars when the count
+    is configuration-static and unused legs are 0).  `floats` are full-width
+    values (thresholds, norms, singular values, dense payloads), `indices`
+    are transmitted positions, `entries` are packed per-entry payloads whose
+    width the `WireFormat` declares (dither sign+level, natural-compression
+    sign+exponent).
+    """
+
+    floats: Union[jax.Array, float] = 0.0
+    indices: Union[jax.Array, float] = 0.0
+    entries: Union[jax.Array, float] = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """Declarative per-unit pricing of a message's counts."""
+
+    float_bits: int = FLOAT_BITS
+    index_bits: int = INDEX_BITS
+    #: bits per packed entry (e.g. 1 sign + ⌈log₂(s+1)⌉ dither levels)
+    entry_bits: float = 0.0
+
+
+#: a wire format, or a tuple of wire trees for composed compressors
+WireTree = Union[WireFormat, tuple]
+
+
+def price(wire: WireTree, counts) -> jax.Array:
+    """Bits on the wire for `counts` under `wire` — recursing through
+    composed (tuple) formats so nested codecs price leg-by-leg."""
+    if isinstance(wire, tuple):
+        if not isinstance(counts, tuple) or len(wire) != len(counts):
+            raise ValueError(
+                f"composed wire has {len(wire)} legs but counts is "
+                f"{type(counts).__name__}"
+                f"{' of ' + str(len(counts)) + ' legs' if isinstance(counts, tuple) else ''}"
+                " — every wire leg must be priced")
+        return sum(price(w, c) for w, c in zip(wire, counts))
+    return (
+        jnp.asarray(counts.floats, jnp.float64) * wire.float_bits
+        + jnp.asarray(counts.indices, jnp.float64) * wire.index_bits
+        + jnp.asarray(counts.entries, jnp.float64) * wire.entry_bits
+    )
+
+
+def _f64(x):
+    return jnp.asarray(x, jnp.float64)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CommLedger:
+    """Cumulative per-leg bit counters (per-node averages), a pytree so it
+    rides the round engine's scan carry and comes back as one stream per
+    leg.  All arithmetic is functional (`add` returns a new ledger)."""
+
+    hess_up: jax.Array
+    grad_up: jax.Array
+    model_down: jax.Array
+    basis_ship: jax.Array
+
+    LEGS = ("hess_up", "grad_up", "model_down", "basis_ship")
+
+    @classmethod
+    def create(cls, hess_up=0.0, grad_up=0.0, model_down=0.0, basis_ship=0.0):
+        return cls(_f64(hess_up), _f64(grad_up), _f64(model_down),
+                   _f64(basis_ship))
+
+    def add(self, hess_up=0.0, grad_up=0.0, model_down=0.0, basis_ship=0.0):
+        return CommLedger(
+            hess_up=self.hess_up + hess_up,
+            grad_up=self.grad_up + grad_up,
+            model_down=self.model_down + model_down,
+            basis_ship=self.basis_ship + basis_ship,
+        )
+
+    @property
+    def uplink(self) -> jax.Array:
+        """Total client→server bits (what the paper's x-axis plots)."""
+        return self.hess_up + self.grad_up + self.basis_ship
+
+    @property
+    def downlink(self) -> jax.Array:
+        return self.model_down
+
+    def tree_flatten(self):
+        return (self.hess_up, self.grad_up, self.model_down,
+                self.basis_ship), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)

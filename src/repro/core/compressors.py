@@ -1,30 +1,61 @@
 """Matrix/vector compression operators (paper §3, §A.2, §A.3).
 
-Every compressor maps a tensor to a *compressed-dense* tensor of the same shape
-(the zeros are what got dropped) plus an exact bit count for the wire format it
-models.  Two contract classes:
+One natively-batched contract: ``compress(keys, x)`` takes a stack of n
+inputs (leading client axis) plus per-client PRNG keys ``(n, 2)`` and
+returns ``(compressed_dense, counts)`` — the compressed tensors (zeros are
+what got dropped) and a `repro.core.comm.Counts` record of what actually
+hit the wire.  Compressors never compute bits: each declares a
+`WireFormat` (`.wire`) and the comm layer prices counts
+(``comm.price(comp.wire, counts)``).  Two contract classes:
 
   * contraction (Eq. 6):  E‖A − C(A)‖_F² ≤ (1−δ)‖A‖_F²
   * unbiased   (Eq. 7):  E[C(A)] = A,  E‖C(A)‖_F² ≤ (ω+1)‖A‖_F²
 
-All operators work on arbitrary-shape arrays (treated as flattened vectors in
-R^{numel}); matrix-specific ones (Rank-R) require 2-D input.
+``keys=None`` is accepted only by deterministic compressors — stochastic
+ones raise instead of silently substituting a fixed key (which would make
+every "random" draw identical).
 
-Bit accounting uses FLOAT_BITS per float and INDEX_BITS per transmitted index
-(the paper counts floats; we count bits so dithering/natural compression are
-comparable, matching the plots' "communicated bits per node" axis).
+The single-client convenience ``comp(key, x)`` is a thin adapter over the
+same batched implementation (n = 1) that additionally prices the message —
+it exists for the op-by-op reference backend and tests; there is exactly
+one selection/quantization implementation per operator.
+
+|·|-Top-K selection (the batched engine's hot spot) is one shared routine,
+`_topk_keep_mask`, consumed by both `TopK` and `ComposedTopK`.  Its
+threshold search runs on an f32 copy (XLA's CPU sort/top_k on f64 is ~75×
+slower) through one of two parity-pinned backends:
+
+  * default: barrier'd ``lax.top_k`` (the barriers stop XLA rewriting a
+    partially-dead top_k into a full stable sort);
+  * ``REPRO_BL_PALLAS=1``: the exact bitwise-binary-search Pallas kernel
+    (`repro.kernels.topk_threshold`) — same threshold bitwise, so the
+    shared tie-break mask selects identical entries and trajectories are
+    unchanged (tests/test_pallas_parity.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-FLOAT_BITS = 64  # the paper's experiments (NumPy) use float64 coefficients
-INDEX_BITS = 32
+from . import comm
+from .comm import FLOAT_BITS, INDEX_BITS  # noqa: F401  (historical re-export)
+
+
+def _numel(x: jax.Array) -> int:
+    """Per-client element count of a client-stacked (n, ...) array."""
+    n = 1
+    for s in x.shape[1:]:
+        n *= s
+    return n
+
+
+def _full(n: int, value) -> jax.Array:
+    return jnp.full((n,), value, jnp.float64)
 
 
 class Compressor:
@@ -38,22 +69,37 @@ class Compressor:
     #: True if C(A) is deterministic given A (Asm. 4.4(ii)/4.6(ii))
     deterministic: bool = False
 
-    def __call__(self, key: Optional[jax.Array], x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-        """Returns (compressed_dense, bits_transmitted)."""
+    @property
+    def stochastic(self) -> bool:
+        return not self.deterministic
+
+    @property
+    def wire(self):
+        """`comm.WireFormat` (or tuple tree, for composed codecs) pricing
+        this operator's `Counts`."""
+        return comm.WireFormat()
+
+    def compress(self, keys: Optional[jax.Array], x: jax.Array) -> Tuple[jax.Array, comm.Counts]:
+        """Compress a client-stacked (n, ...) array; returns
+        (compressed (n, ...), counts with (n,) leaves)."""
         raise NotImplementedError
 
-    def batched(self, keys: Optional[jax.Array], x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-        """Vectorized entry point: compress a stack of n inputs at once.
-
-        `x` carries a leading client axis (n, ...); `keys` is (n, 2) PRNG keys
-        (ignored by deterministic compressors — pass None to get dummies).
-        Returns (compressed (n, ...), bits (n,)).  Every compressor here is
-        jit/vmap-traceable, so this is the building block of the batched BL
-        engine (`repro.core.batched`).
-        """
+    def _require_keys(self, keys: Optional[jax.Array], n: int) -> Optional[jax.Array]:
         if keys is None:
-            keys = jax.random.split(jax.random.PRNGKey(0), x.shape[0])
-        return jax.vmap(self.__call__)(keys, x)
+            if self.stochastic:
+                raise ValueError(
+                    f"{type(self).__name__} is stochastic: compress() needs "
+                    "per-client PRNG keys (n, 2), got None — a substituted "
+                    "fixed key would repeat the same draw every call")
+            return None
+        return keys
+
+    def __call__(self, key: Optional[jax.Array], x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Single-client adapter: compress one tensor and price it.
+        Returns (compressed_dense, bits_transmitted)."""
+        keys = None if key is None else jnp.asarray(key)[None]
+        dense, counts = self.compress(keys, x[None])
+        return dense[0], comm.price(self.wire, counts)[0]
 
     # default recommended step size for Hessian learning
     def alpha(self) -> float:
@@ -70,21 +116,24 @@ class Identity(Compressor):
     delta = 1.0
     deterministic = True
 
-    def __call__(self, key, x):
-        return x, jnp.asarray(x.size * FLOAT_BITS, jnp.float64)
+    def compress(self, keys, x):
+        return x, comm.Counts(floats=_full(x.shape[0], _numel(x)))
 
 
-def _topk_keep_mask(v: jax.Array, k: int) -> jax.Array:
-    """Boolean mask of the K largest-|v| entries along the last axis.
+# --------------------------------------------------------------------------
+# shared |·|-Top-K selection (one implementation, two backends)
+# --------------------------------------------------------------------------
+def _selection_threshold(a32: jax.Array, k: int) -> jax.Array:
+    """k-th largest per row of non-negative f32 `a32` (..., T) → (..., 1).
 
-    The threshold search runs on an f32 copy — XLA's CPU sort/top_k on f64 is
-    ~75× slower, and this selection is the batched BL engine's hot spot.
-    Exactly K entries are kept per row: entries strictly above the f32
-    threshold, then earliest-index entries inside the threshold tie group
-    (sub-f32-ulp value differences inside the group are broken by index).
-    Scatter-free on purpose: mask + `where` instead of `.at[idx].set`.
-    """
-    a32 = jnp.abs(v).astype(jnp.float32)
+    Backends return bitwise-identical thresholds; see module docstring."""
+    if os.environ.get("REPRO_BL_PALLAS", "0") == "1":
+        from repro.kernels import ops
+        from repro.kernels.topk_threshold import topk_row_threshold
+
+        t = topk_row_threshold(a32.reshape((-1,) + a32.shape[-1:]), k,
+                               interpret=ops.INTERPRET)
+        return t.reshape(a32.shape[:-1] + (1,))
     vals, idx = jax.lax.top_k(a32, k)
     # keep both outputs alive: with the indices dead, XLA rewrites top_k into
     # a full stable sort (~12× slower on CPU for the d² coefficient arrays).
@@ -93,12 +142,21 @@ def _topk_keep_mask(v: jax.Array, k: int) -> jax.Array:
     # (CreateVariadicComparator expects get-tuple-element users).
     vals = jax.lax.optimization_barrier(vals)
     _ = jax.lax.optimization_barrier(idx)
-    t = vals[..., -1:]
-    above = a32 > t
-    eq = a32 == t
-    n_above = jnp.sum(above, axis=-1, keepdims=True)
-    cum = jnp.cumsum(eq, axis=-1)
-    return above | (eq & (cum <= k - n_above))
+    return vals[..., -1:]
+
+
+def _topk_keep_mask(v: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the K largest-|v| entries along the last axis.
+
+    Exactly K entries are kept per row: entries strictly above the f32
+    threshold, then earliest-index entries inside the threshold tie group
+    (sub-f32-ulp value differences inside the group are broken by index).
+    Scatter-free on purpose: mask + `where` instead of `.at[idx].set`.
+    """
+    from repro.kernels.topk_threshold import keep_mask
+
+    a32 = jnp.abs(v).astype(jnp.float32)
+    return keep_mask(a32, _selection_threshold(a32, k), k)
 
 
 @dataclasses.dataclass(unsafe_hash=True)
@@ -113,31 +171,7 @@ class TopK(Compressor):
     def __post_init__(self):
         self.deterministic = True
 
-    def __call__(self, key, x):
-        shape = x.shape
-        if self.symmetrize and x.ndim == 2 and shape[0] == shape[1]:
-            d = shape[0]
-            iu = jnp.triu_indices(d)
-            v = x[iu]
-            kk = min(self.k, v.size)
-            keep_tri = _topk_keep_mask(v, kk)
-            # gather the triangular mask back to the dense upper half
-            # (static index map — no scatter)
-            pos = jnp.zeros((d, d), jnp.int32).at[iu].set(jnp.arange(v.size, dtype=jnp.int32))
-            upper = jnp.triu(jnp.ones((d, d), bool))
-            keep_full = keep_tri[pos] & upper
-            out = jnp.where(keep_full, x, 0.0)
-            out = out + jnp.triu(out, 1).T
-            bits = kk * (FLOAT_BITS + INDEX_BITS)
-            return out, jnp.asarray(bits, jnp.float64)
-        v = x.reshape(-1)
-        kk = min(self.k, v.size)
-        out = jnp.where(_topk_keep_mask(v, kk), v, 0.0).reshape(shape)
-        return out, jnp.asarray(kk * (FLOAT_BITS + INDEX_BITS), jnp.float64)
-
-    def batched(self, keys, x):
-        """Natively batched (no vmap — optimization_barrier has no batching
-        rule, and `top_k`/the mask algebra batch over the last axis anyway)."""
+    def compress(self, keys, x):
         n = x.shape[0]
         if self.symmetrize and x.ndim == 3 and x.shape[1] == x.shape[2]:
             d = x.shape[1]
@@ -145,19 +179,21 @@ class TopK(Compressor):
             v = x[:, iu[0], iu[1]]                      # (n, T)
             kk = min(self.k, v.shape[1])
             keep_tri = _topk_keep_mask(v, kk)
+            # gather the triangular mask back to the dense upper half
+            # (static index map — no scatter)
             pos = jnp.zeros((d, d), jnp.int32).at[iu].set(
                 jnp.arange(v.shape[1], dtype=jnp.int32))
             upper = jnp.triu(jnp.ones((d, d), bool))
             keep_full = keep_tri[:, pos] & upper
             out = jnp.where(keep_full, x, 0.0)
             out = out + jnp.transpose(jnp.triu(out, 1), (0, 2, 1))
-            bits = jnp.full((n,), kk * (FLOAT_BITS + INDEX_BITS), jnp.float64)
-            return out, bits
+            c = _full(n, kk)
+            return out, comm.Counts(floats=c, indices=c)
         v = x.reshape(n, -1)
         kk = min(self.k, v.shape[1])
         out = jnp.where(_topk_keep_mask(v, kk), v, 0.0).reshape(x.shape)
-        bits = jnp.full((n,), kk * (FLOAT_BITS + INDEX_BITS), jnp.float64)
-        return out, bits
+        c = _full(n, kk)
+        return out, comm.Counts(floats=c, indices=c)
 
     @property
     def _delta_for(self):
@@ -175,14 +211,20 @@ class RandK(Compressor):
     def __post_init__(self):
         self.is_unbiased = True
 
-    def __call__(self, key, x):
-        v = x.reshape(-1)
-        n = v.size
-        kk = min(self.k, n)
-        idx = jax.random.choice(key, n, shape=(kk,), replace=False)
-        scale = n / kk
-        out = jnp.zeros_like(v).at[idx].set(v[idx] * scale).reshape(x.shape)
-        return out, jnp.asarray(kk * (FLOAT_BITS + INDEX_BITS), jnp.float64)
+    def compress(self, keys, x):
+        n = x.shape[0]
+        keys = self._require_keys(keys, n)
+        numel = _numel(x)
+        kk = min(self.k, numel)
+        scale = numel / kk
+
+        def one(key, xi):
+            v = xi.reshape(-1)
+            idx = jax.random.choice(key, numel, shape=(kk,), replace=False)
+            return jnp.zeros_like(v).at[idx].set(v[idx] * scale).reshape(xi.shape)
+
+        c = _full(n, kk)
+        return jax.vmap(one)(keys, x), comm.Counts(floats=c, indices=c)
 
     def omega_for(self, numel: int) -> float:
         return numel / min(self.k, numel) - 1.0
@@ -203,21 +245,22 @@ class RankR(Compressor):
     def __post_init__(self):
         self.deterministic = True
 
-    def __call__(self, key, x):
-        assert x.ndim == 2, "Rank-R needs a matrix"
+    def compress(self, keys, x):
+        assert x.ndim == 3, "Rank-R needs a stack of matrices"
+        n = x.shape[0]
         u, s, vt = jnp.linalg.svd(x, full_matrices=False)
-        rr = min(self.r, s.size)
-        out = (u[:, :rr] * s[:rr]) @ vt[:rr, :]
+        rr = min(self.r, s.shape[-1])
+        out = jnp.matmul(u[:, :, :rr] * s[:, None, :rr], vt[:, :rr, :])
         # wire format: R singular triples (u_i, σ_i, v_i)
-        bits = rr * (x.shape[0] + x.shape[1] + 1) * FLOAT_BITS
-        return out, jnp.asarray(bits, jnp.float64)
+        c = _full(n, rr * (x.shape[1] + x.shape[2] + 1))
+        return out, comm.Counts(floats=c)
 
     def delta_for(self, d: int) -> float:
         return min(self.r, d) / d
 
 
-def _dither(key, x, s, q=2):
-    """Random dithering (Eq. 17–18) with s levels, q-norm."""
+def _dither_vals(key, x, s, q=2):
+    """Random dithering values (Eq. 17–18) with s levels, q-norm."""
     v = x.reshape(-1)
     raw_norm = jnp.linalg.norm(v, ord=q)
     norm = jnp.where(raw_norm == 0, 1.0, raw_norm)
@@ -228,24 +271,33 @@ def _dither(key, x, s, q=2):
     lev = low + up
     out = jnp.sign(v) * norm * lev / s
     out = jnp.where(raw_norm == 0, 0.0, out)
-    # wire: 1 norm float + per-entry (sign + level) ~ (1 + ceil(log2(s+1))) bits
-    # (s is a Python int — keep the bit count on the host, no device sync)
-    lev_bits = math.ceil(math.log2(s + 1))
-    bits = FLOAT_BITS + v.size * (1 + lev_bits)
-    return out.reshape(x.shape), jnp.asarray(bits, jnp.float64)
+    return out.reshape(x.shape)
+
+
+def _dither_level_bits(s: int) -> int:
+    return math.ceil(math.log2(s + 1))
 
 
 @dataclasses.dataclass(unsafe_hash=True)
 class RandomDithering(Compressor):
-    """Unbiased; ω ≤ min(d/s², √d/s) for q=2 [Alistarh et al. 2017]."""
+    """Unbiased; ω ≤ min(d/s², √d/s) for q=2 [Alistarh et al. 2017].
+
+    Wire: 1 norm float + per-entry (sign + ⌈log₂(s+1)⌉ level) bits."""
     s: int
     q: int = 2
 
     def __post_init__(self):
         self.is_unbiased = True
 
-    def __call__(self, key, x):
-        return _dither(key, x, self.s, self.q)
+    @property
+    def wire(self):
+        return comm.WireFormat(entry_bits=1 + _dither_level_bits(self.s))
+
+    def compress(self, keys, x):
+        n = x.shape[0]
+        keys = self._require_keys(keys, n)
+        out = jax.vmap(lambda k, xi: _dither_vals(k, xi, self.s, self.q))(keys, x)
+        return out, comm.Counts(floats=_full(n, 1), entries=_full(n, _numel(x)))
 
     def omega_for(self, numel: int) -> float:
         return min(numel / self.s**2, numel**0.5 / self.s)
@@ -261,17 +313,27 @@ class NaturalCompression(Compressor):
         self.is_unbiased = True
         self.omega = 1.0 / 8.0
 
-    def __call__(self, key, x):
-        v = x.reshape(-1)
-        nz = v != 0
-        absv = jnp.where(nz, jnp.abs(v), 1.0)
-        e = jnp.floor(jnp.log2(absv))
-        low = jnp.exp2(e)
-        pup = (absv - low) / low        # ∈ [0,1): P[round to 2^{e+1}]
-        up = jax.random.bernoulli(key, pup.astype(jnp.float32))
-        out = jnp.sign(v) * low * jnp.where(up, 2.0, 1.0)
-        out = jnp.where(nz, out, 0.0).reshape(x.shape)
-        return out, jnp.asarray(v.size * 9, jnp.float64)
+    @property
+    def wire(self):
+        return comm.WireFormat(entry_bits=9)
+
+    def compress(self, keys, x):
+        n = x.shape[0]
+        keys = self._require_keys(keys, n)
+
+        def one(key, xi):
+            v = xi.reshape(-1)
+            nz = v != 0
+            absv = jnp.where(nz, jnp.abs(v), 1.0)
+            e = jnp.floor(jnp.log2(absv))
+            low = jnp.exp2(e)
+            pup = (absv - low) / low        # ∈ [0,1): P[round to 2^{e+1}]
+            up = jax.random.bernoulli(key, pup.astype(jnp.float32))
+            out = jnp.sign(v) * low * jnp.where(up, 2.0, 1.0)
+            return jnp.where(nz, out, 0.0).reshape(xi.shape)
+
+        out = jax.vmap(one)(keys, x)
+        return out, comm.Counts(entries=_full(n, _numel(x)))
 
 
 @dataclasses.dataclass(unsafe_hash=True)
@@ -281,57 +343,44 @@ class ComposedTopK(Compressor):
     RTop-K: inner = RandomDithering(s=√K);  NTop-K: inner = NaturalCompression.
     Contractive (composition of a contraction with an unbiased op, scaled by
     1/(ω+1), remains a contraction — Qian et al. 2021).
+
+    Selection is the shared `_topk_keep_mask`; the kept values are compacted
+    to (n, K) slots by a cumsum scatter (index order), run through the inner
+    compressor's own batched contract, and gathered back — no second Top-K
+    implementation.
     """
     k: int
     inner: Compressor
     unbias_correct: bool = True
 
     def __post_init__(self):
-        self.deterministic = False
+        self.deterministic = self.inner.deterministic
 
-    def __call__(self, key, x):
-        v = x.reshape(-1)
-        kk = min(self.k, v.size)
-        # f32 selection (see _topk_keep_mask) — f64 top_k is the CPU hot
-        # spot; the kept *values* stay full precision.  Barrier keeps the
-        # TopK custom call from decomposing into a full sort (vals unused);
-        # per-output barriers, not a tuple one (multi-device XLA crash).
-        vals, idx = jax.lax.top_k(jnp.abs(v).astype(jnp.float32), kk)
-        _ = jax.lax.optimization_barrier(vals)
-        idx = jax.lax.optimization_barrier(idx)
-        kept = v[idx]
-        cv, inner_bits = self.inner(key, kept)
-        if self.unbias_correct:
-            om = getattr(self.inner, "omega", None)
-            if om is None:
-                om = self.inner.omega_for(kk)
-            cv = cv / (om + 1.0)
-        out = jnp.zeros_like(v).at[idx].set(cv).reshape(x.shape)
-        bits = inner_bits + kk * INDEX_BITS
-        return out, bits
+    @property
+    def wire(self):
+        return (comm.WireFormat(), self.inner.wire)
 
-    def batched(self, keys, x):
-        """Natively batched — same selection/scatter as `__call__` per row
-        (vmap would trip on optimization_barrier's missing batching rule)."""
+    def compress(self, keys, x):
         n = x.shape[0]
         v = x.reshape(n, -1)
         kk = min(self.k, v.shape[1])
-        vals, idx = jax.lax.top_k(jnp.abs(v).astype(jnp.float32), kk)
-        _ = jax.lax.optimization_barrier(vals)
-        idx = jax.lax.optimization_barrier(idx)
-        kept = jnp.take_along_axis(v, idx, axis=1)
-        if keys is None:
-            keys = jax.random.split(jax.random.PRNGKey(0), n)
-        cv, inner_bits = jax.vmap(self.inner)(keys, kept)
+        keys = self._require_keys(keys, n)
+        mask = _topk_keep_mask(v, kk)
+        slot = jnp.cumsum(mask, axis=-1) - 1            # target slot per kept
+        slot = jnp.where(mask, slot, kk)                # park dropped at k
+        rows = jnp.arange(n)[:, None]
+        kept = jnp.zeros((n, kk + 1), v.dtype).at[rows, slot].add(
+            jnp.where(mask, v, 0.0))[:, :kk]
+        cv, inner_counts = self.inner.compress(keys, kept)
         if self.unbias_correct:
             om = getattr(self.inner, "omega", None)
             if om is None:
                 om = self.inner.omega_for(kk)
             cv = cv / (om + 1.0)
-        out = jnp.zeros_like(v)
-        out = jax.vmap(lambda o, i, c: o.at[i].set(c))(out, idx, cv)
-        bits = inner_bits + kk * INDEX_BITS
-        return out.reshape(x.shape), bits
+        cvp = jnp.concatenate([cv, jnp.zeros((n, 1), cv.dtype)], axis=1)
+        out = jnp.where(mask, jnp.take_along_axis(cvp, slot, axis=1), 0.0)
+        counts = (comm.Counts(indices=_full(n, kk)), inner_counts)
+        return out.reshape(x.shape), counts
 
 
 @dataclasses.dataclass(unsafe_hash=True)
@@ -346,22 +395,44 @@ class ComposedRankR(Compressor):
     inner_v: Compressor
     symmetrize: bool = True
 
-    def __call__(self, key, x):
-        assert x.ndim == 2
+    def __post_init__(self):
+        self.deterministic = (self.inner_u.deterministic
+                              and self.inner_v.deterministic)
+
+    @property
+    def wire(self):
+        return (comm.WireFormat(), self.inner_u.wire, self.inner_v.wire)
+
+    def compress(self, keys, x):
+        assert x.ndim == 3
+        n = x.shape[0]
+        keys = self._require_keys(keys, n)
+        if keys is None:  # fully deterministic inners (degenerate but legal)
+            keys = jnp.zeros((n, 2), jnp.uint32)
         u, s, vt = jnp.linalg.svd(x, full_matrices=False)
-        rr = min(self.r, s.size)
-        keys = jax.random.split(key, 2 * rr)
-        om1 = self.inner_u.omega if self.inner_u.omega is not None else self.inner_u.omega_for(x.shape[0])
-        om2 = self.inner_v.omega if self.inner_v.omega is not None else self.inner_v.omega_for(x.shape[1])
-        # vectorized over the rr singular triples (keys laid out exactly as the
-        # historical op-by-op loop: even → u-vector, odd → v-vector)
-        qu, bu = jax.vmap(self.inner_u)(keys[0::2], u[:, :rr].T)   # (rr, m)
-        qv, bv = jax.vmap(self.inner_v)(keys[1::2], vt[:rr, :])    # (rr, n)
-        out = jnp.einsum("r,rm,rn->mn", s[:rr], qu, qv) / ((om1 + 1.0) * (om2 + 1.0))
-        bits = jnp.asarray(rr * FLOAT_BITS, jnp.float64) + jnp.sum(bu) + jnp.sum(bv)
-        if self.symmetrize:
-            out = jnp.where(jnp.allclose(x, x.T), (out + out.T) / 2.0, out)
-        return out, bits
+        rr = min(self.r, s.shape[-1])
+        om1 = (self.inner_u.omega if self.inner_u.omega is not None
+               else self.inner_u.omega_for(x.shape[1]))
+        om2 = (self.inner_v.omega if self.inner_v.omega is not None
+               else self.inner_v.omega_for(x.shape[2]))
+
+        def one(key, ui, si, vti, xi):
+            # keys laid out exactly as the historical op-by-op loop:
+            # even → u-vector, odd → v-vector
+            ks = jax.random.split(key, 2 * rr)
+            qu, cu = self.inner_u.compress(ks[0::2], ui[:, :rr].T)   # (rr, m)
+            qv, cvn = self.inner_v.compress(ks[1::2], vti[:rr, :])   # (rr, p)
+            out = jnp.einsum("r,rm,rn->mn", si[:rr], qu, qv) / ((om1 + 1.0) * (om2 + 1.0))
+            if self.symmetrize:
+                out = jnp.where(jnp.allclose(xi, xi.T), (out + out.T) / 2.0, out)
+            # fold the rr per-triple counts into one per-client record
+            total = jax.tree.map(lambda a: jnp.sum(jnp.asarray(a, jnp.float64)),
+                                 (cu, cvn))
+            return out, total
+
+        out, (cu, cvn) = jax.vmap(one)(keys, u, s, vt, x)
+        counts = (comm.Counts(floats=_full(n, rr)), cu, cvn)
+        return out, counts
 
 
 @dataclasses.dataclass(unsafe_hash=True)
@@ -376,11 +447,14 @@ class BernoulliLazy(Compressor):
         self.is_unbiased = True
         self.omega = 1.0 / self.p - 1.0
 
-    def __call__(self, key, x):
-        send = jax.random.bernoulli(key, self.p)
-        out = jnp.where(send, x / self.p, jnp.zeros_like(x))
-        bits = jnp.where(send, x.size * FLOAT_BITS, 0).astype(jnp.float64)
-        return out, bits
+    def compress(self, keys, x):
+        n = x.shape[0]
+        keys = self._require_keys(keys, n)
+        send = jax.vmap(lambda k: jax.random.bernoulli(k, self.p))(keys)
+        bshape = (n,) + (1,) * (x.ndim - 1)
+        out = jnp.where(send.reshape(bshape), x / self.p, jnp.zeros_like(x))
+        floats = jnp.where(send, _numel(x), 0).astype(jnp.float64)
+        return out, comm.Counts(floats=floats)
 
 
 def rtopk(k: int) -> ComposedTopK:

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 
 from repro.sharding.rules import CLIENT_AXIS
 
-from . import client_batch
+from . import client_batch, comm
 
 
 # ==========================================================================
@@ -157,21 +157,28 @@ def shift_update(compress: Callable, target: jax.Array, shift: jax.Array,
 
         S = C(target − L),   L ← L + α·S.
 
-    `compress` maps a delta tensor to (compressed_dense, bits).  Returns
-    (S, new_shift, bits).  Contractive compressors use α = 1, unbiased ones
-    α = 1/(ω+1).  This is the single mechanism shared by the GLM methods
-    (Hessian-coefficient learning) and `repro.fed.bldnn` (gradient and
-    Fisher-diagonal learning)."""
-    S, bits = compress(target - shift)
-    return S, shift + alpha * S, bits
+    `compress` maps a delta tensor to (compressed_dense, aux) where aux is
+    whatever the codec reports (message `Counts` for core compressors; the
+    caller prices them via `comm.price`).  Returns (S, new_shift, aux).
+    Contractive compressors use α = 1, unbiased ones α = 1/(ω+1).  This is
+    the single mechanism shared by the GLM methods (Hessian-coefficient
+    learning) and `repro.fed.bldnn` (gradient and Fisher-diagonal
+    learning)."""
+    S, aux = compress(target - shift)
+    return S, shift + alpha * S, aux
 
 
 def participation(R: Reducer, key: jax.Array, tau: int) -> jax.Array:
     """Bernoulli(τ/n) participation mask for this shard's clients, with the
     reference backend's force-one-client fallback (drawn fleet-wide from the
-    replicated key, then sharded)."""
-    part = jax.random.bernoulli(key, tau / R.n, (R.n,))
-    idx = jax.random.randint(key, (), 0, R.n)
+    replicated key, then sharded).
+
+    The mask and the fallback index come from SPLIT keys: reusing one key
+    for both correlates the forced client with the mask draw (the reference
+    backend mirrors this split, so parity stays bitwise)."""
+    k_mask, k_idx = jax.random.split(key)
+    part = jax.random.bernoulli(k_mask, tau / R.n, (R.n,))
+    idx = jax.random.randint(k_idx, (), 0, R.n)
     part = part | (~part.any() & (jnp.arange(R.n) == idx))
     return R.shard(part)
 
@@ -194,7 +201,8 @@ def downlink_broadcast(R: Reducer, comp, key: jax.Array, z: jax.Array,
                        x_target: jax.Array, eta: float, part: jax.Array):
     """Compressed model-stream downlink to participating clients:
     z_i ← z_i + η·C_i(x − z_i).  Returns (z_new, down_bits_per_node)."""
-    v, vbits = comp.batched(R.client_keys(key), x_target[None, :] - z)
+    v, counts = comp.compress(R.client_keys(key), x_target[None, :] - z)
+    vbits = comm.price(comp.wire, counts)
     z_n = jnp.where(part[:, None], z + eta * v, z)
     return z_n, R.sum(jnp.where(part, vbits, 0.0)) / R.n
 
@@ -273,13 +281,13 @@ def _engine(spec, R: Reducer, batch, basisb, x0, keys):
         return spec.step(R, env, carry, key_t)
 
     _, ys = jax.lax.scan(step, carry0, keys)
-    # ys = (eval_x (steps, d), up_bits (steps,), down_bits (steps,)).  Specs
-    # emit the round's evaluation iterate, not the gap: loss evaluation is
-    # instrumentation, and computing it outside the scan (a) vectorizes it
-    # over all rounds and (b) keeps the gap stream bitwise-identical across
-    # aggregation backends (XLA fuses in-scan loss evaluation differently
-    # inside shard_map, wobbling the reported gap by an ulp even though the
-    # trajectory itself is bitwise-invariant).
+    # ys = (eval_x (steps, d), CommLedger of (steps,) per-leg streams).
+    # Specs emit the round's evaluation iterate, not the gap: loss
+    # evaluation is instrumentation, and computing it outside the scan
+    # (a) vectorizes it over all rounds and (b) keeps the gap stream
+    # bitwise-identical across aggregation backends (XLA fuses in-scan loss
+    # evaluation differently inside shard_map, wobbling the reported gap by
+    # an ulp even though the trajectory itself is bitwise-invariant).
     return ys
 
 
@@ -311,28 +319,28 @@ def _sharded_engine(spec, R: ShardMapReducer, mesh):
 def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
                sharded: bool = False, exact: bool = True):
     """Run `steps = len(keys)` rounds of `spec` and return the history
-    streams (gaps, up_bits, down_bits).
+    streams ``(gaps, CommLedger-of-streams)`` — one per-leg bit stream per
+    `comm.CommLedger` leg.
 
     sharded=False → `VmapReducer` on the default device.
     sharded=True  → `ShardMapReducer` over a 1-D client mesh spanning the
     most local devices that evenly divide the client count (a 1-device
     world still exercises the shard_map code path)."""
     if not sharded:
-        xs_t, ups, downs = _engine_jit(spec, VmapReducer(n=batch.n), batch,
-                                       basisb, x0, keys)
+        xs_t, leds = _engine_jit(spec, VmapReducer(n=batch.n), batch,
+                                 basisb, x0, keys)
     else:
         from repro.launch.mesh import make_client_mesh
 
         mesh, ndev = make_client_mesh(batch.n)
         R = ShardMapReducer(n=batch.n, ndev=ndev, exact=exact)
-        xs_t, ups, downs = _sharded_engine(spec, R, mesh)(
-            batch, basisb, x0, keys)
+        xs_t, leds = _sharded_engine(spec, R, mesh)(batch, basisb, x0, keys)
         # outputs come back committed to the client mesh; rehome them so the
         # gap evaluation below is the same default-device program on every
         # backend (this is what makes the histories bitwise-comparable)
         import numpy as np
 
-        xs_t, ups, downs = (jnp.asarray(np.asarray(a))
-                            for a in (xs_t, ups, downs))
+        xs_t, leds = jax.tree.map(lambda a: jnp.asarray(np.asarray(a)),
+                                  (xs_t, leds))
     gaps = _gap_stream(batch, xs_t, f_star)
-    return gaps, ups, downs
+    return gaps, leds

@@ -7,9 +7,16 @@ the method's hyperparameters and three hooks consumed by the engine driver:
     (typically a `CoeffLayout`);
   * ``init(R, env)``                 — the scan carry at round 0;
   * ``step(R, env, carry, key)``     — one round, returning
-    ``(carry, (eval_x, up_bits, down_bits))``: the iterate the round is
-    evaluated at plus the cumulative bit counters (the engine turns the
-    eval_x stream into f(x)−f* gaps outside the scan).
+    ``(carry, (eval_x, ledger))``: the iterate the round is evaluated at
+    plus the cumulative `comm.CommLedger` (the engine turns the eval_x
+    stream into f(x)−f* gaps outside the scan, and the ledger stream into
+    per-leg bit histories).
+
+Communication accounting is per-leg and declarative: compressors return
+message `Counts`, specs price them with ``comm.price(comp.wire, counts)``
+and charge the right ledger leg (`hess_up` / `grad_up` / `model_down`; the
+one-time basis shipment sits on `basis_ship` from round 0).  No spec keeps
+hand-maintained ``up = up + ...`` scalars.
 
 All cross-client reductions go through the `Reducer` R, so every spec runs
 unchanged on the single-device backend and on the client-sharded shard_map
@@ -27,9 +34,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from . import client_batch
+from . import client_batch, comm
 from .bl import _psd_h_tilde, _psd_reconstruct_full, _psd_sum_matrix, proj_mu
-from .compressors import FLOAT_BITS, Compressor
+from .comm import FLOAT_BITS, CommLedger
+from .compressors import Compressor
 from .rounds import (
     Reducer,
     coeff_layout,
@@ -55,10 +63,6 @@ def _fro_b(H):
 def _mv(Hb, xb):
     """(n, d, d) @ (n, d) → (n, d), batch-size-invariantly (see bmv)."""
     return client_batch.bmv(Hb, xb)
-
-
-def _f64(x):
-    return jnp.asarray(x, jnp.float64)
 
 
 class MethodSpec:
@@ -87,7 +91,8 @@ class BL1Spec(MethodSpec):
     mu: float
     init_exact: bool
     grad_bits: float
-    init_up: float
+    init_hess_bits: float
+    basis_bits: float
     block: bool
 
     def prepare(self, R, batch, basisb, x0):
@@ -99,13 +104,14 @@ class BL1Spec(MethodSpec):
         L0 = lay.target_at(x0) if self.init_exact else jnp.zeros(lay.shape, x0.dtype)
         H0 = R.mean(lay.recon(L0)) + lay.ridge
         grad_w0 = global_grad(R, env.batch, x0)
-        return (x0, x0, L0, H0, grad_w0, jnp.asarray(True),
-                _f64(self.init_up), _f64(0.0))
+        led0 = CommLedger.create(hess_up=self.init_hess_bits,
+                                 basis_ship=self.basis_bits)
+        return (x0, x0, L0, H0, grad_w0, jnp.asarray(True), led0)
 
     def step(self, R, env, carry, key_t):
-        z, w, L, H, grad_w, xi, up, down = carry
+        z, w, L, H, grad_w, xi, led = carry
         lay = env.extra
-        ys = (z, up, down)  # gap evaluated at z, outside the scan
+        ys = (z, led)  # gap evaluated at z, outside the scan
 
         Hmu = proj_mu(H, self.mu)
         # gradient leg (both branches evaluated, selected by ξ)
@@ -113,23 +119,23 @@ class BL1Spec(MethodSpec):
         w_n = jnp.where(xi, z, w)
         grad_w_n = jnp.where(xi, grad_z, grad_w)
         g = jnp.where(xi, grad_z, Hmu @ (z - w) + grad_w)
-        up = up + jnp.where(xi, self.grad_bits, 0.0)
+        led = led.add(grad_up=jnp.where(xi, self.grad_bits, 0.0))
 
         # Hessian-coefficient learning, all clients at once
         k_h, k_m, k_xi = jax.random.split(key_t, 3)
-        S, L_n, bits = shift_update(
-            lambda delta: self.hess_comp.batched(R.client_keys(k_h), delta),
+        S, L_n, counts = shift_update(
+            lambda delta: self.hess_comp.compress(R.client_keys(k_h), delta),
             lay.target_at(z), L, self.alpha)
         H_n = H + R.mean(lay.recon(self.alpha * S))
-        up = up + R.mean(bits)
+        led = led.add(hess_up=R.mean(comm.price(self.hess_comp.wire, counts)))
 
         # server model step + compressed broadcast
         x_next = z - jnp.linalg.solve(Hmu, g)
         v, vbits = self.model_comp(k_m, x_next - z)
-        down = down + vbits
+        led = led.add(model_down=vbits)
         z_n = z + self.eta * v
         xi_n = xi_scalar(k_xi, self.p)
-        return (z_n, w_n, L_n, H_n, grad_w_n, xi_n, up, down), ys
+        return (z_n, w_n, L_n, H_n, grad_w_n, xi_n, led), ys
 
 
 # ==========================================================================
@@ -144,7 +150,8 @@ class BL2Spec(MethodSpec):
     p: float
     tau: int
     init_exact: bool
-    init_up: float
+    init_hess_bits: float
+    basis_bits: float
     block: bool
 
     def prepare(self, R, batch, basisb, x0):
@@ -159,10 +166,12 @@ class BL2Spec(MethodSpec):
         li0 = _fro_b(_sym_b(Hi0) - client_batch.hess(env.batch, x0b))
         gi0 = (_mv(_sym_b(Hi0), x0b) + li0[:, None] * x0b
                - client_batch.grads(env.batch, x0b))
-        return (x0b, x0b, L0, Hi0, li0, gi0, _f64(self.init_up), _f64(0.0))
+        led0 = CommLedger.create(hess_up=self.init_hess_bits,
+                                 basis_ship=self.basis_bits)
+        return (x0b, x0b, L0, Hi0, li0, gi0, led0)
 
     def step(self, R, env, carry, key_t):
-        z, w, L, Hi, li, gi, up, down = carry
+        z, w, L, Hi, li, gi, led = carry
         batch = env.batch
         d = batch.d
         lay = env.extra
@@ -172,7 +181,7 @@ class BL2Spec(MethodSpec):
         l_avg = R.mean(li)
         g = R.mean(gi)
         x_cur = jnp.linalg.solve((H + H.T) / 2.0 + l_avg * I, g)
-        ys = (x_cur, up, down)  # gap evaluated at x_cur, outside the scan
+        ys = (x_cur, led)  # gap evaluated at x_cur, outside the scan
 
         k_part, k_m, k_h, k_xi = jax.random.split(key_t, 4)
         part = participation(R, k_part, self.tau)
@@ -180,12 +189,13 @@ class BL2Spec(MethodSpec):
         # compressed model broadcast (participants only)
         z_n, dbits = downlink_broadcast(R, self.model_comp, k_m, z, x_cur,
                                         self.eta, part)
-        down = down + dbits
+        led = led.add(model_down=dbits)
 
         # Hessian-coefficient learning
-        S, L_plus, sbits = shift_update(
-            lambda delta: self.hess_comp.batched(R.client_keys(k_h), delta),
+        S, L_plus, counts = shift_update(
+            lambda delta: self.hess_comp.compress(R.client_keys(k_h), delta),
             lay.target_at(z_n), L, self.alpha)
+        sbits = comm.price(self.hess_comp.wire, counts)
         L_n = jnp.where(part[:, None, None], L_plus, L)
         Hi_n = jnp.where(part[:, None, None], Hi + lay.recon(self.alpha * S), Hi)
         Hs_n = _sym_b(Hi_n)
@@ -201,8 +211,9 @@ class BL2Spec(MethodSpec):
         gi_n = jnp.where(xi[:, None], gi_fresh, gi_recon)
 
         g_bits = jnp.where(xi, d * FLOAT_BITS, FLOAT_BITS + 1.0)
-        up = up + R.sum(jnp.where(part, sbits + g_bits, 0.0)) / R.n
-        return (z_n, w_n, L_n, Hi_n, li_n, gi_n, up, down), ys
+        led = led.add(hess_up=R.sum(jnp.where(part, sbits, 0.0)) / R.n,
+                      grad_up=R.sum(jnp.where(part, g_bits, 0.0)) / R.n)
+        return (z_n, w_n, L_n, Hi_n, li_n, gi_n, led), ys
 
 
 # ==========================================================================
@@ -234,12 +245,12 @@ class BL3Spec(MethodSpec):
         beta0 = jnp.ones((R.n_local,), env.x0.dtype)
         g1_0 = _mv(A0, x0b)
         g2_0 = _mv(C0, x0b) + client_batch.grads(env.batch, x0b)
-        up0 = _f64((env.batch.d * (env.batch.d + 1) // 2) * FLOAT_BITS)
-        return (x0b, x0b, x0b, L0, gam0, A0, C0, g1_0, g2_0, beta0, up0,
-                _f64(0.0))
+        led0 = CommLedger.create(
+            hess_up=(env.batch.d * (env.batch.d + 1) // 2) * FLOAT_BITS)
+        return (x0b, x0b, x0b, L0, gam0, A0, C0, g1_0, g2_0, beta0, led0)
 
     def step(self, R, env, carry, key_t):
-        z, w, zprev, L, gam, A_i, C_i, g1, g2, beta_i, up, down = carry
+        z, w, zprev, L, gam, A_i, C_i, g1, g2, beta_i, led = carry
         batch = env.batch
         d = batch.d
         Ssum = env.extra
@@ -250,7 +261,7 @@ class BL3Spec(MethodSpec):
         Hk = beta * R.mean(A_i) - R.mean(C_i)
         gk = beta * R.mean(g1) - R.mean(g2)
         x_cur = jnp.linalg.solve(Hk, gk)
-        ys = (x_cur, up, down)  # gap evaluated at x_cur, outside the scan
+        ys = (x_cur, led)  # gap evaluated at x_cur, outside the scan
 
         k_part, k_m, k_h, k_xi = jax.random.split(key_t, 4)
         part = participation(R, k_part, self.tau)
@@ -258,12 +269,13 @@ class BL3Spec(MethodSpec):
         zprev_n = jnp.where(part[:, None], z, zprev)
         z_n, dbits = downlink_broadcast(R, self.model_comp, k_m, z, x_cur,
                                         self.eta, part)
-        down = down + dbits
+        led = led.add(model_down=dbits)
 
         target = h_tilde(client_batch.hess(batch, z_n))
-        S, L_plus, sbits = shift_update(
-            lambda delta: self.hess_comp.batched(R.client_keys(k_h), delta),
+        S, L_plus, counts = shift_update(
+            lambda delta: self.hess_comp.compress(R.client_keys(k_h), delta),
             target, L, self.alpha)
+        sbits = comm.price(self.hess_comp.wire, counts)
         L_n = jnp.where(part[:, None, None], L_plus, L)
         gam_n = jnp.where(part,
                           jnp.maximum(self.c, jnp.max(jnp.abs(L_n), axis=(1, 2))),
@@ -292,10 +304,14 @@ class BL3Spec(MethodSpec):
         g1_n = jnp.where(xi[:, None], g1_fresh, g1_recon)
         g2_n = jnp.where(xi[:, None], g2_fresh, g2_recon)
 
+        # every PARTICIPANT's β_i^{k+1} reaches the server (one float,
+        # billed with the Hessian leg; silent clients send nothing)
         g_bits = jnp.where(xi, 2.0 * d * FLOAT_BITS, 2.0 * FLOAT_BITS + 1.0)
-        up = up + R.sum(jnp.where(part, sbits + g_bits + FLOAT_BITS, 0.0)) / R.n
+        led = led.add(
+            hess_up=R.sum(jnp.where(part, sbits + FLOAT_BITS, 0.0)) / R.n,
+            grad_up=R.sum(jnp.where(part, g_bits, 0.0)) / R.n)
         carry_n = (z_n, w_n, zprev_n, L_n, gam_n, A_n, C_n, g1_n, g2_n,
-                   beta_i_n, up, down)
+                   beta_i_n, led)
         return carry_n, ys
 
 
@@ -307,12 +323,12 @@ class GDSpec(MethodSpec):
     lr: float
 
     def init(self, R, env):
-        return (env.x0, _f64(0.0))
+        return (env.x0, CommLedger.create())
 
     def step(self, R, env, carry, key_t):
-        x, up = carry
+        x, led = carry
         x_n = x - self.lr * global_grad(R, env.batch, x)
-        return (x_n, up + env.batch.d * FLOAT_BITS), (x, up, _f64(0.0))
+        return (x_n, led.add(grad_up=env.batch.d * FLOAT_BITS)), (x, led)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -323,27 +339,30 @@ class DianaSpec(MethodSpec):
 
     def init(self, R, env):
         h0 = jnp.zeros((R.n_local, env.batch.d), env.x0.dtype)
-        return (env.x0, h0, _f64(0.0))
+        return (env.x0, h0, CommLedger.create())
 
     def step(self, R, env, carry, key_t):
-        x, h, up = carry
+        x, h, led = carry
         gi = client_batch.grads(env.batch, x)
-        q, bits = self.comp.batched(R.client_keys(key_t), gi - h)
+        q, counts = self.comp.compress(R.client_keys(key_t), gi - h)
+        bits = comm.price(self.comp.wire, counts)
         ghat = R.mean(h + q)
         h_n = h + self.alpha_h * q
         x_n = x - self.lr * ghat
-        return (x_n, h_n, up + R.mean(bits)), (x, up, _f64(0.0))
+        return (x_n, h_n, led.add(grad_up=R.mean(bits))), (x, led)
 
 
 @dataclasses.dataclass(frozen=True)
 class NewtonSpec(MethodSpec):
-    per_iter_bits: float
+    hess_bits: float
+    grad_bits: float
+    basis_bits: float
 
     def init(self, R, env):
-        return (env.x0, _f64(0.0))
+        return (env.x0, CommLedger.create(basis_ship=self.basis_bits))
 
     def step(self, R, env, carry, key_t):
-        x, up = carry
+        x, led = carry
         batch = env.batch
         if env.basisb is None:
             H = R.mean(client_batch.hess(batch, x))
@@ -352,7 +371,8 @@ class NewtonSpec(MethodSpec):
             H = R.mean(env.basisb.server_reconstruct(coef, batch.lam))
         g = global_grad(R, batch, x)
         x_n = x - jnp.linalg.solve(H, g)
-        return (x_n, up + self.per_iter_bits), (x, up, _f64(0.0))
+        return (x_n, led.add(hess_up=self.hess_bits,
+                             grad_up=self.grad_bits)), (x, led)
 
 
 # ==========================================================================
@@ -376,7 +396,8 @@ class FedNLBAGSpec(MethodSpec):
     eta: float
     mu: float
     init_exact: bool
-    init_up: float
+    init_hess_bits: float
+    basis_bits: float
     block: bool
 
     def prepare(self, R, batch, basisb, x0):
@@ -388,30 +409,33 @@ class FedNLBAGSpec(MethodSpec):
         L0 = lay.target_at(x0) if self.init_exact else jnp.zeros(lay.shape, x0.dtype)
         H0 = R.mean(lay.recon(L0)) + lay.ridge
         gtab0 = client_batch.grads(env.batch, x0)  # exact init gradients
-        return (x0, L0, H0, gtab0, _f64(self.init_up + env.batch.d * FLOAT_BITS),
-                _f64(0.0))
+        led0 = CommLedger.create(hess_up=self.init_hess_bits,
+                                 grad_up=env.batch.d * FLOAT_BITS,
+                                 basis_ship=self.basis_bits)
+        return (x0, L0, H0, gtab0, led0)
 
     def step(self, R, env, carry, key_t):
-        z, L, H, gtab, up, down = carry
+        z, L, H, gtab, led = carry
         batch = env.batch
         lay = env.extra
-        ys = (z, up, down)  # gap evaluated at z, outside the scan
+        ys = (z, led)  # gap evaluated at z, outside the scan
 
         k_h, k_b = jax.random.split(key_t, 2)
         # Bernoulli-lazy aggregation: reporters refresh their table row
         send = R.shard(jax.random.bernoulli(k_b, self.q, (R.n,)))
         gtab_n = jnp.where(send[:, None], client_batch.grads(batch, z), gtab)
         ghat = R.mean(gtab_n)
-        up = up + R.sum(jnp.where(send, batch.d * FLOAT_BITS, 0.0)) / R.n
+        led = led.add(grad_up=R.sum(
+            jnp.where(send, batch.d * FLOAT_BITS, 0.0)) / R.n)
 
         # FedNL Hessian-coefficient learning (same shift recursion as BL1)
-        S, L_n, bits = shift_update(
-            lambda delta: self.hess_comp.batched(R.client_keys(k_h), delta),
+        S, L_n, counts = shift_update(
+            lambda delta: self.hess_comp.compress(R.client_keys(k_h), delta),
             lay.target_at(z), L, self.alpha)
         H_n = H + R.mean(lay.recon(self.alpha * S))
-        up = up + R.mean(bits)
+        led = led.add(hess_up=R.mean(comm.price(self.hess_comp.wire, counts)))
 
         # damped Newton step: η < 1 tempers the staleness feedback loop an
         # aggressive q would otherwise excite (η = 1 recovers FedNL when q = 1)
         z_n = z - self.eta * jnp.linalg.solve(proj_mu(H_n, self.mu), ghat)
-        return (z_n, L_n, H_n, gtab_n, up, down), ys
+        return (z_n, L_n, H_n, gtab_n, led), ys

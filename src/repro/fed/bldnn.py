@@ -35,11 +35,16 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core import comm
 from repro.core.compressors import _topk_keep_mask
 from repro.core.rounds import shift_update
 from repro.sharding.rules import CLIENT_AXIS
 
 Params = Dict[str, Any]
+
+#: BL-DNN communicates f32 tensors — one wire format, priced by the shared
+#: comm layer (no hand-kept bit math in the training step).
+WIRE_F32 = comm.WireFormat(float_bits=32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +92,22 @@ def basis_bits(bases) -> float:
         if b is not None:
             total += b[0].size + b[1].size
     return total
+
+
+def init_comm_ledger(bases) -> comm.CommLedger:
+    """Fresh per-leg ledger with the one-time (U_ℓ, V_ℓ) shipment billed —
+    the same `CommLedger` the GLM round engine threads through its scan, so
+    BL-DNN runs report bits on the same axes (no separate billing scheme)."""
+    ship = comm.price(WIRE_F32, comm.Counts(floats=basis_bits(bases)))
+    return comm.CommLedger.create(basis_ship=ship)
+
+
+def accumulate_comm(ledger: comm.CommLedger, metrics) -> comm.CommLedger:
+    """Fold one fed_step's metrics into the ledger: basis-coefficient
+    gradients on the grad leg, the Fisher-diagonal (curvature) stream on the
+    hess leg."""
+    return ledger.add(grad_up=metrics["grad_up_bits"],
+                      hess_up=metrics["hess_up_bits"])
 
 
 def _rotate(g, basis):
@@ -147,14 +168,14 @@ def make_fed_train_step(loss_fn, mesh, cfg: BLDNNConfig, bases, params_tree):
         g = jax.grad(loss_fn)(params, batch)
         gl = _leaves(g)
 
-        new_shift, sent = [], 0.0
+        new_shift, sent_g, sent_f = [], 0.0, 0.0
         for gi, si, b in zip(gl, shift, bases):
             coeff = _rotate(gi, b)
             # shared Alg. 1 recursion: c = C(γ − L), L ← L + αc; the server
             # aggregation below tracks the pmean of the updated shifts
             _, s_new, k = shift_update(compress, coeff, si[0], cfg.alpha)
             new_shift.append(s_new[None])
-            sent += k
+            sent_g += k
         shift_mean = [jax.lax.pmean(s[0], data_axis) for s in new_shift]
         g_hat = [_unrotate(sm, b) for sm, b in zip(shift_mean, bases)]
 
@@ -163,9 +184,10 @@ def make_fed_train_step(loss_fn, mesh, cfg: BLDNNConfig, bases, params_tree):
             for gi, fsi, sfi, gh in zip(gl, fshift, server_f, g_hat):
                 fl = gi.astype(jnp.float32) ** 2
                 # same recursion learning the Fisher diagonal
-                fc, fs_new, _ = shift_update(compress, fl, fsi[0],
-                                             cfg.fisher_alpha)
+                fc, fs_new, kf = shift_update(compress, fl, fsi[0],
+                                              cfg.fisher_alpha)
                 new_fshift.append(fs_new[None])
+                sent_f += kf
                 sf = sfi + cfg.fisher_alpha * jax.lax.pmean(fc, data_axis)
                 f_server_new.append(sf)
                 update.append(gh / (jnp.sqrt(jnp.maximum(sf, 0.0)) + cfg.eps))
@@ -180,12 +202,21 @@ def make_fed_train_step(loss_fn, mesh, cfg: BLDNNConfig, bases, params_tree):
         ]
         new_params = _unflatten_like(params, new_pl)
         loss = jax.lax.pmean(loss_fn(params, batch), data_axis)
-        # sent is now the ACTUAL per-client nonzero count (data-dependent,
-        # differs per shard) — reduce to the fleet mean so the replicated
+        # counts are the ACTUAL per-client nonzero totals (data-dependent,
+        # differ per shard) — reduce to the fleet mean so the replicated
         # out_spec P() is genuinely replicated on multi-device meshes
-        sent = jax.lax.pmean(jnp.asarray(sent, jnp.float32), data_axis)
-        return (new_params, new_shift, new_fshift, f_server_new,
-                {"loss": loss, "floats_sent": sent})
+        sent_g = jax.lax.pmean(jnp.asarray(sent_g, jnp.float32), data_axis)
+        sent_f = jax.lax.pmean(jnp.asarray(sent_f, jnp.float32), data_axis)
+        metrics = {
+            "loss": loss,
+            "floats_sent": sent_g + sent_f,
+            # per-leg bits priced by the shared comm layer (ledger legs:
+            # rotated-gradient coefficients → grad_up, Fisher diagonal →
+            # hess_up; fold into a CommLedger via `accumulate_comm`)
+            "grad_up_bits": comm.price(WIRE_F32, comm.Counts(floats=sent_g)),
+            "hess_up_bits": comm.price(WIRE_F32, comm.Counts(floats=sent_f)),
+        }
+        return (new_params, new_shift, new_fshift, f_server_new, metrics)
 
     prepl = jax.tree.map(lambda _: P(), params_tree)
 
@@ -201,7 +232,8 @@ def make_fed_train_step(loss_fn, mesh, cfg: BLDNNConfig, bases, params_tree):
                        [P(data_axis)] * len(state["shift"]),
                        [P(data_axis)] * len(state["fisher_shift"]),
                        [P()] * len(state["server_fisher"]),
-                       {"loss": P(), "floats_sent": P()}),
+                       {"loss": P(), "floats_sent": P(),
+                        "grad_up_bits": P(), "hess_up_bits": P()}),
             check_rep=False,
         )
         new_params, shift, fshift, server_f, metrics = f(

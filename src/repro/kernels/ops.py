@@ -56,8 +56,9 @@ def glm_hessian(A, w, lam, **tiles):
 
 
 def topk_compress(x, k: int):
-    """Histogram-threshold Top-K (see topk_threshold.py).  Returns
-    (compressed_dense, kept_count)."""
+    """Exact Top-K via the bitwise-binary-search threshold kernel (see
+    topk_threshold.py) — keeps exactly min(k, numel) entries, ties broken
+    by earliest index.  Returns (compressed_dense, kept_count)."""
     out, _, kept = _topk(x, k, interpret=INTERPRET)
     return out, kept
 

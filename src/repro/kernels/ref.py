@@ -26,7 +26,8 @@ def glm_hessian_ref(A, w, lam):
 
 
 def topk_threshold_ref(x, t):
-    """Everything with |x| ≥ t (the kernel's pass-2 semantics)."""
+    """Everything with |x| ≥ t — the kernel's kept set BEFORE the exact-k
+    tie-break (a superset of the output support when |x| ties at t)."""
     return jnp.where(jnp.abs(x.astype(jnp.float32)) >= t, x, jnp.zeros_like(x))
 
 

@@ -1,19 +1,27 @@
-"""Top-K compression as a sort-free two-pass histogram → threshold → mask
-pipeline (TPU adaptation of the paper's Top-K compressor — DESIGN.md §HW).
+"""Exact |·|-Top-K threshold selection as a Pallas kernel (the compression
+engine's measured hot spot).
 
-GPU implementations of Top-K sort (or radix-select) the |values|; TPU kernels
-have no efficient global sort, so we:
+GPU Top-K implementations sort (or radix-select) the |values|; TPUs have no
+efficient global sort, and XLA's CPU fallback decomposes a partially-dead
+``top_k`` into a full stable sort (~75× slower on the engine's d²
+coefficient arrays — the reason the XLA selection path needs
+``optimization_barrier``s, see `repro.core.compressors._topk_keep_mask`).
+This kernel instead finds, per row, the EXACT k-th largest |value| by a
+bitwise binary search over f32 bit patterns:
 
-  pass 1 (`histogram`): per-tile NBUCKET-bin histogram of |x| / max|x|,
-         accumulated across the sequential grid into one output;
-  host:  exclusive cumsum of the (tiny) histogram picks the bucket whose
-         cumulative count crosses K → magnitude threshold t;
-  pass 2 (`sparsify`): out = where(|x| ≥ t, x, 0), tiled elementwise.
+  * |x| ≥ 0, and the IEEE-754 bit pattern of a non-negative float is
+    monotone in its value, so selection runs on int32 keys (sign bit 0);
+  * 31 count-passes (one per non-sign bit, high → low) greedily build the
+    largest threshold t with count(|x| ≥ t) ≥ k — which is exactly the
+    k-th largest magnitude, ties included;
+  * each pass is a vectorized compare+reduce over the VMEM-resident row —
+    no sort, no scatter, O(31·T) work per row, trivially batched over the
+    engine's client axis by the grid.
 
-The result keeps between K and K + (bucket collisions) entries — the paper's
-contraction property (Eq. 6) holds for ANY superset of the top-K support, so
-correctness is preserved; the wire-format bit count uses the actual kept
-count.  Buckets are spaced on |x|^(1/2) to resolve the heavy tail better.
+The returned threshold equals ``lax.top_k(|x|, k)[0][..., -1]`` bitwise, so
+the shared tie-break algebra (`keep_mask`) selects the SAME entries as the
+barrier'd XLA path — that is what lets ``REPRO_BL_PALLAS=1`` swap selection
+backends without perturbing trajectories (tests/test_pallas_parity.py).
 """
 from __future__ import annotations
 
@@ -23,85 +31,69 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NBUCKETS = 512
+
+def keep_mask(a32: jax.Array, t: jax.Array, k: int) -> jax.Array:
+    """Exactly-k selection mask from a per-row threshold, along the last axis.
+
+    `a32` are non-negative f32 magnitudes, `t` the k-th largest per row
+    (shape ``a32.shape[:-1] + (1,)``).  Entries strictly above t are kept;
+    the tie group at t is broken by earliest index.  This is the ONE
+    tie-break rule both selection backends (Pallas kernel / barrier'd XLA
+    ``top_k``) feed — identical thresholds ⇒ identical masks.
+    """
+    above = a32 > t
+    eq = a32 == t
+    n_above = jnp.sum(above, axis=-1, keepdims=True)
+    cum = jnp.cumsum(eq, axis=-1)
+    return above | (eq & (cum <= k - n_above))
 
 
-def _hist_kernel(x_ref, maxv_ref, hist_ref, *, nbuckets: int):
-    i = pl.program_id(0)
+def _threshold_kernel(a_ref, t_ref, *, k: int):
+    a = a_ref[...]                                     # (1, T) f32, |values|
+    keys = jax.lax.bitcast_convert_type(a, jnp.int32)  # monotone for a ≥ 0
 
-    @pl.when(i == 0)
-    def _init():
-        hist_ref[...] = jnp.zeros_like(hist_ref)
+    def body(i, t):
+        cand = t | (jnp.int32(1) << (jnp.int32(30) - i))
+        cnt = jnp.sum((keys >= cand).astype(jnp.int32), axis=1, keepdims=True)
+        return jnp.where(cnt >= k, cand, t)
 
-    x = x_ref[...].astype(jnp.float32)
-    mx = maxv_ref[0]
-    a = jnp.abs(x) / jnp.maximum(mx, 1e-30)
-    a = jnp.sqrt(a)                       # heavy-tail resolving spacing
-    b = jnp.clip((a * nbuckets).astype(jnp.int32), 0, nbuckets - 1)
-    onehot = (b[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, nbuckets), 2))
-    hist_ref[...] += jnp.sum(onehot, axis=(0, 1)).astype(jnp.float32)
+    t = jax.lax.fori_loop(0, 31, body, jnp.zeros((a.shape[0], 1), jnp.int32))
+    t_ref[...] = jax.lax.bitcast_convert_type(t, jnp.float32)
 
 
-def _mask_kernel(x_ref, t_ref, o_ref):
-    x = x_ref[...]
-    t = t_ref[0]
-    o_ref[...] = jnp.where(jnp.abs(x.astype(jnp.float32)) >= t, x, jnp.zeros_like(x))
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_row_threshold(a32: jax.Array, k: int, *,
+                       interpret: bool = True) -> jax.Array:
+    """Per-row exact k-th largest of non-negative f32 `a32` (rows, T) →
+    (rows, 1).  k is clamped to [1, T] — a threshold is undefined for an
+    empty kept set; callers wanting k = 0 handle it before selection (see
+    `topk_threshold`)."""
+    rows, T = a32.shape
+    kk = max(1, min(k, T))
+    return pl.pallas_call(
+        functools.partial(_threshold_kernel, k=kk),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, T), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        interpret=interpret,
+    )(a32)
 
 
-def _tile(n, want):
-    t = min(want, n)
-    while n % t:
-        t -= 1
-    return t
-
-
-@functools.partial(jax.jit, static_argnames=("k", "interpret", "nbuckets"))
-def topk_threshold(x: jax.Array, k: int, *, interpret: bool = True,
-                   nbuckets: int = NBUCKETS):
-    """Returns (compressed_dense, threshold, kept_count)."""
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_threshold(x: jax.Array, k: int, *, interpret: bool = True):
+    """Global exact Top-K over a whole tensor (flattened): returns
+    ``(compressed_dense, threshold, kept_count)`` with kept_count == min(k,
+    numel) exactly (tie group broken by earliest index).  k ≤ 0 keeps
+    nothing (threshold +inf)."""
     shape = x.shape
-    flat = x.reshape(-1)
-    n = flat.size
-    cols = _tile(n, 4096)
-    rows = n // cols
-    x2 = flat.reshape(rows, cols)
-    br = _tile(rows, 8)
-    bc = _tile(cols, 1024)
-    grid_r, grid_c = rows // br, cols // bc
-
-    maxv = jnp.max(jnp.abs(flat)).astype(jnp.float32).reshape(1)
-
-    hist = pl.pallas_call(
-        functools.partial(_hist_kernel, nbuckets=nbuckets),
-        grid=(grid_r * grid_c,),
-        in_specs=[
-            pl.BlockSpec((br, bc), lambda i: (i // (cols // bc), i % (cols // bc))),
-            pl.BlockSpec((1,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((nbuckets,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((nbuckets,), jnp.float32),
-        interpret=interpret,
-    )(x2, maxv)
-
-    # host-side (tiny): find the magnitude threshold whose tail count ≥ k
-    tail = jnp.cumsum(hist[::-1])[::-1]            # count of |x| in bucket ≥ b
-    kk = min(k, n)
-    bucket = jnp.argmax(tail <= kk)                 # first bucket from below w/ tail ≤ k
-    bucket = jnp.where(tail[bucket] < kk, jnp.maximum(bucket - 1, 0), bucket)
-    frac = bucket.astype(jnp.float32) / nbuckets
-    t = (frac ** 2) * maxv[0]                       # invert sqrt spacing
-
-    out = pl.pallas_call(
-        _mask_kernel,
-        grid=(grid_r * grid_c,),
-        in_specs=[
-            pl.BlockSpec((br, bc), lambda i: (i // (cols // bc), i % (cols // bc))),
-            pl.BlockSpec((1,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((br, bc), lambda i: (i // (cols // bc), i % (cols // bc))),
-        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
-        interpret=interpret,
-    )(x2, t.reshape(1))
-
-    kept = jnp.sum(out != 0)
-    return out.reshape(shape), t, kept
+    flat = x.reshape(1, -1)
+    if k <= 0:
+        return (jnp.zeros_like(x), jnp.asarray(jnp.inf, jnp.float32),
+                jnp.asarray(0, jnp.int32))
+    kk = min(k, flat.shape[1])
+    a32 = jnp.abs(flat).astype(jnp.float32)
+    t = topk_row_threshold(a32, kk, interpret=interpret)
+    mask = keep_mask(a32, t, kk)
+    out = jnp.where(mask, flat, jnp.zeros_like(flat))
+    return out.reshape(shape), t[0, 0], jnp.sum(mask)

@@ -33,11 +33,12 @@ def client_engine_specs():
     Positional layout is (batch, basisb, x0, keys): the client-stacked
     pytrees (`ClientBatch`, `BatchedBasis`) shard their leading client
     axis over CLIENT_AXIS; the server iterate and per-round PRNG keys are
-    replicated; the three history streams (eval iterates, up_bits,
-    down_bits) come back replicated.
+    replicated; the history streams — eval iterates plus the `CommLedger`
+    pytree of per-leg bit streams — come back replicated (the second P()
+    is a pytree prefix covering every ledger leg).
     """
     sharded = P(CLIENT_AXIS)
-    return (sharded, sharded, P(), P()), (P(), P(), P())
+    return (sharded, sharded, P(), P()), (P(), P())
 
 
 @dataclasses.dataclass

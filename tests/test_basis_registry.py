@@ -1,0 +1,125 @@
+"""Basis-registry contracts: exact h/reconstruct round-trips for EVERY
+registered basis (including the new eigen/DCT rotations), registry lookup,
+batched-kind agreement, shipment billing, and the two new bases running
+end-to-end through BL1/BL2 with per-leg ledger output."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bl, client_batch, glm
+from repro.core.basis import (
+    DCTBasis,
+    EigenBasis,
+    available_bases,
+    basis_transmission_bits,
+    make_bases,
+)
+from repro.core.compressors import Identity, TopK
+
+EXPECTED = {"standard", "symmetric", "psd", "data_outer", "eigen", "dct"}
+
+
+@pytest.fixture(scope="module")
+def problem():
+    clients = glm.make_synthetic(seed=0, n_clients=5, m=30, d=30, r=10, lam=1e-3)
+    x0 = jnp.zeros(30, jnp.float64)
+    xs = glm.newton_solve(clients, x0, 20)
+    return clients, x0, xs
+
+
+def test_registry_contents():
+    assert EXPECTED <= set(available_bases())
+    with pytest.raises(KeyError, match="unknown basis"):
+        make_bases("warp", [])
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 200))
+def test_roundtrip_every_registered_basis(problem, seed):
+    """reconstruct(h(A)) == A exactly (to fp) for every registered basis on
+    symmetric matrices — data bases on matrices in their span."""
+    clients, x0, _ = problem
+    rng = np.random.default_rng(seed)
+    d = 30
+    S = rng.standard_normal((d, d))
+    S = jnp.asarray((S + S.T) / 2)
+    for name in available_bases():
+        bases = make_bases(name, clients, x0=x0)
+        b = bases[0]
+        if name == "data_outer":
+            # a matrix in the client's span: V M Vᵀ
+            M = rng.standard_normal((b.r, b.r))
+            M = jnp.asarray((M + M.T) / 2)
+            target = b.V @ M @ b.V.T
+        else:
+            target = S
+        back = b.reconstruct(b.h(target))
+        np.testing.assert_allclose(np.asarray(back), np.asarray(target),
+                                   atol=1e-9, err_msg=name)
+
+
+def test_rotation_bases_are_orthogonal():
+    clients = glm.make_synthetic(seed=1, n_clients=3, m=20, d=16, r=6, lam=1e-3)
+    for name in ("eigen", "dct"):
+        b = make_bases(name, clients, x0=jnp.zeros(16, jnp.float64))[0]
+        QtQ = np.asarray(b.Q.T @ b.Q)
+        np.testing.assert_allclose(QtQ, np.eye(16), atol=1e-9)
+
+
+def test_batched_kind_matches_per_client_ops(problem):
+    """BatchedBasis.h/reconstruct == the per-client MatrixBasis ops for every
+    stackable registered basis (the fast path's wire == the reference's)."""
+    clients, x0, _ = problem
+    rng = np.random.default_rng(7)
+    A = rng.standard_normal((5, 30, 30))
+    A = jnp.asarray((A + A.transpose(0, 2, 1)) / 2)
+    for name in available_bases():
+        bases = make_bases(name, clients, x0=x0)
+        bb = client_batch.stack_bases(bases)
+        assert bb is not None, name
+        hb = np.asarray(bb.h(A))
+        rb = np.asarray(bb.reconstruct(bb.h(A)))
+        for i, b in enumerate(bases):
+            np.testing.assert_allclose(hb[i], np.asarray(b.h(A[i])),
+                                       atol=1e-10, err_msg=name)
+            np.testing.assert_allclose(
+                rb[i], np.asarray(b.reconstruct(b.h(A[i]))), atol=1e-10,
+                err_msg=name)
+
+
+def test_shipment_billing():
+    clients = glm.make_synthetic(seed=2, n_clients=3, m=20, d=12, r=5, lam=1e-3)
+    x0 = jnp.zeros(12, jnp.float64)
+    eig = make_bases("eigen", clients, x0=x0)[0]
+    dct = make_bases("dct", clients)[0]
+    std = make_bases("standard", clients)[0]
+    dat = make_bases("data_outer", clients)[0]
+    assert basis_transmission_bits(eig) == 12 * 12 * 64   # learned: Q ships
+    assert basis_transmission_bits(dct) == 0.0            # convention: free
+    assert basis_transmission_bits(std) == 0.0
+    assert basis_transmission_bits(dat) == dat.d * dat.r * 64
+    assert isinstance(eig, EigenBasis) and isinstance(dct, DCTBasis)
+
+
+@pytest.mark.parametrize("name", ["eigen", "dct"])
+def test_new_bases_end_to_end_bl1_bl2(problem, name):
+    """Acceptance: EigenBasis and DCTBasis run through BL1 AND BL2 on the
+    fast path, converge, agree with the reference loops, and report per-leg
+    ledger output (eigen pays a d² basis shipment, dct ships free)."""
+    clients, x0, xs = problem
+    bases = make_bases(name, clients, x0=x0)
+    comp = [TopK(k=200) for _ in clients]
+    h1r = bl.bl1(clients, bases, comp, Identity(), x0, xs, 12,
+                 backend="reference")
+    h1 = bl.bl1(clients, bases, comp, Identity(), x0, xs, 12, backend="fast")
+    np.testing.assert_allclose(h1.gaps, h1r.gaps, rtol=1e-9, atol=1e-8)
+    np.testing.assert_allclose(h1.up_bits, h1r.up_bits, rtol=1e-12)
+    assert h1.gaps[-1] < 1e-8
+    h2 = bl.bl2(clients, bases, comp, [Identity()] * 5, x0, xs, 12,
+                backend="fast")
+    assert h2.gaps[-1] < 1e-6
+    for h in (h1, h2):
+        ship = 30 * 30 * 64 if name == "eigen" else 0.0
+        assert h.legs["basis_ship"] == [ship] * 12
+        assert h.legs["hess_up"][-1] > 0

@@ -307,14 +307,19 @@ def test_invalid_backend_rejected(problem):
     ],
 )
 def test_batched_compressor_matches_loop(mk):
-    """`Compressor.batched` must agree bitwise with the per-client loop —
-    this is what makes the fast path's wire identical to the reference's."""
+    """`Compressor.compress` (the one natively-batched contract) must agree
+    bitwise with the per-client adapter loop — this is what makes the fast
+    path's wire identical to the reference's."""
+    from repro.core import comm
+
     comp = mk()
     X = jnp.asarray(np.random.default_rng(1).standard_normal((5, 12, 12)))
     if getattr(comp, "symmetrize", False):
         X = (X + X.transpose(0, 2, 1)) / 2.0
     keys = jax.random.split(jax.random.PRNGKey(0), 5)
-    out_b, bits_b = comp.batched(keys, X)
+    out_b, counts = comp.compress(keys, X)
+    bits_b = comm.price(comp.wire, counts)
+    assert bits_b.shape == (5,)
     for i in range(5):
         out_i, bits_i = comp(keys[i], X[i])
         np.testing.assert_array_equal(np.asarray(out_b[i]), np.asarray(out_i))

@@ -1,0 +1,99 @@
+"""Comm-layer contracts: WireFormat pricing, composed-format recursion,
+CommLedger leg accounting, and the per-leg History streams the round engine
+emits."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bl, comm, glm
+from repro.core.basis import orth_basis_from_data
+from repro.core.compressors import Identity, RandomDithering, TopK, rtopk
+
+
+def test_price_simple_wire():
+    wf = comm.WireFormat()
+    bits = comm.price(wf, comm.Counts(floats=jnp.asarray([3.0, 0.0]),
+                                      indices=jnp.asarray([3.0, 1.0])))
+    np.testing.assert_array_equal(np.asarray(bits), [3 * 64 + 3 * 32, 32.0])
+
+
+def test_price_entry_bits_and_composed_recursion():
+    inner = comm.WireFormat(entry_bits=5)  # dither s=11: 1 sign + 4 levels
+    wire = (comm.WireFormat(), inner)
+    counts = (comm.Counts(indices=jnp.asarray([6.0])),
+              comm.Counts(floats=jnp.asarray([1.0]), entries=jnp.asarray([6.0])))
+    bits = comm.price(wire, counts)
+    assert float(bits[0]) == 6 * 32 + 64 + 6 * 5
+
+
+def test_compressor_declares_wire_not_bits():
+    """Wire-format knowledge lives in declarative descriptors, not in
+    compressor bodies: pricing the declared wire reproduces the adapter's
+    bit count."""
+    comp = RandomDithering(s=11)
+    assert comp.wire.entry_bits == 5
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 32)))
+    import jax
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    _, counts = comp.compress(keys, x)
+    np.testing.assert_array_equal(np.asarray(comm.price(comp.wire, counts)),
+                                  [64 + 32 * 5] * 2)
+
+
+def test_ledger_add_is_functional_and_uplink_totals():
+    led = comm.CommLedger.create(basis_ship=100.0)
+    led2 = led.add(hess_up=10.0, grad_up=5.0)
+    led3 = led2.add(model_down=7.0)
+    assert float(led.hess_up) == 0.0          # original untouched
+    assert float(led3.uplink) == 115.0        # hess + grad + basis
+    assert float(led3.downlink) == 7.0
+
+
+def test_ledger_is_pytree():
+    import jax
+    led = comm.CommLedger.create(hess_up=1.0)
+    leaves = jax.tree_util.tree_leaves(led)
+    assert len(leaves) == 4
+    led2 = jax.tree.map(lambda a: a * 2, led)
+    assert float(led2.hess_up) == 2.0
+
+
+@pytest.fixture(scope="module")
+def problem():
+    clients = glm.make_synthetic(seed=0, n_clients=4, m=24, d=24, r=8, lam=1e-3)
+    x0 = jnp.zeros(24, jnp.float64)
+    xs = glm.newton_solve(clients, x0, 20)
+    return clients, x0, xs
+
+
+def test_history_per_leg_streams(problem):
+    """The engine returns one cumulative stream per ledger leg; the legs sum
+    to the History's up/down totals (the paper's axes are unchanged)."""
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    r = bases[0].r
+    h = bl.bl1(clients, bases, [TopK(k=r)] * 4, TopK(k=10), x0, xs, 8,
+               p=0.5, seed=1, backend="fast")
+    assert set(h.legs) == set(comm.CommLedger.LEGS)
+    for name in comm.CommLedger.LEGS:
+        assert len(h.legs[name]) == 8
+        assert all(b2 >= b1 for b1, b2 in zip(h.legs[name], h.legs[name][1:]))
+    total = np.asarray(h.legs["hess_up"]) + np.asarray(h.legs["grad_up"]) \
+        + np.asarray(h.legs["basis_ship"])
+    np.testing.assert_allclose(total, np.asarray(h.up_bits), rtol=1e-12)
+    np.testing.assert_allclose(h.legs["model_down"], h.down_bits, rtol=1e-12)
+    # one-time basis shipment: constant stream at rd floats per node
+    d = 24
+    ship = sum(b.r * d * 64 for b in bases) / 4
+    assert h.legs["basis_ship"] == [ship] * 8
+
+
+def test_stochastic_wire_counts_are_data_dependent(problem):
+    """BernoulliLazy-style counts flow through the ledger as traced values:
+    a stochastic compressed run has non-constant per-round hess increments."""
+    clients, x0, xs = problem
+    bases = [orth_basis_from_data(c.A) for c in clients]
+    h = bl.bl1(clients, bases, [rtopk(12)] * 4, Identity(), x0, xs, 6,
+               alpha=0.5, backend="fast")
+    inc = np.diff(np.asarray(h.legs["hess_up"]))
+    assert (inc > 0).all()

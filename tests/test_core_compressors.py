@@ -129,3 +129,91 @@ def test_identity_bits():
     out, bits = C.Identity()(None, x)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
     assert float(bits) == 7 * C.FLOAT_BITS
+
+
+# --------------------- batched-contract property tests ----------------------
+# Paper contracts under the native compress(keys, (n, ...)) API: contraction
+# (Eq. 6) must hold PER CLIENT of a random batch, unbiasedness/variance
+# (Eq. 7) in expectation over batched draws.
+def _contractive_cases(d):
+    return [
+        (C.TopK(k=5), min(5, d * d) / (d * d)),
+        (C.TopK(k=5, symmetrize=True), 0.0),   # Lemma 3.1: still a contraction
+        (C.RankR(r=2), min(2, d) / d),
+        (C.Identity(), 1.0),
+    ]
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 6), d=st.integers(4, 10), seed=st.integers(0, 500))
+def test_batched_contraction_eq6(n, d, seed):
+    X = _rand((n, d, d), seed)
+    for comp, delta in _contractive_cases(d):
+        Xs = (X + X.transpose(0, 2, 1)) / 2 if getattr(comp, "symmetrize", False) else X
+        out, _ = comp.compress(None, Xs)
+        lhs = np.asarray(jnp.sum((Xs - out) ** 2, axis=(1, 2)))
+        rhs = (1 - delta) * np.asarray(jnp.sum(Xs**2, axis=(1, 2)))
+        assert (lhs <= rhs + 1e-9).all(), type(comp).__name__
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(2, 5), seed=st.integers(0, 100))
+def test_batched_unbiasedness_eq7(n, seed):
+    """E[C(A)] = A per client, averaged over batched stochastic draws."""
+    d = 6
+    X = _rand((n, d, d), seed)
+    for comp in (C.RandK(k=9), C.RandomDithering(s=6), C.NaturalCompression(),
+                 C.BernoulliLazy(p=0.4)):
+        trials = 400
+        acc = jnp.zeros_like(X)
+        for t in range(trials):
+            keys = jax.random.split(jax.random.PRNGKey(1000 * seed + t), n)
+            out, _ = comp.compress(keys, X)
+            acc = acc + out
+        err = float(jnp.abs(acc / trials - X).max())
+        assert err < 0.35 * float(jnp.abs(X).max()) + 0.05, (type(comp).__name__, err)
+
+
+def test_batched_variance_bound_eq7():
+    """E‖C(A)‖² ≤ (ω+1)‖A‖² per client for dithering over a random batch."""
+    comp = C.RandomDithering(s=6)
+    X = _rand((4, 50), 2)
+    omega = comp.omega_for(50)
+    second = np.zeros(4)
+    trials = 400
+    for t in range(trials):
+        keys = jax.random.split(jax.random.PRNGKey(t), 4)
+        out, _ = comp.compress(keys, X)
+        second += np.asarray(jnp.sum(out**2, axis=1)) / trials
+    bound = (omega + 1) * np.asarray(jnp.sum(X**2, axis=1))
+    assert (second <= bound * 1.15).all()
+
+
+@pytest.mark.parametrize(
+    "mk",
+    [
+        lambda: C.RandK(k=3),
+        lambda: C.RandomDithering(s=4),
+        lambda: C.NaturalCompression(),
+        lambda: C.BernoulliLazy(p=0.5),
+        lambda: C.rtopk(4),
+        lambda: C.ntopk(4),
+        lambda: C.rrankr(1, 6),
+    ],
+)
+def test_stochastic_compressors_require_keys(mk):
+    """keys=None must raise for stochastic compressors — the old contract
+    silently substituted PRNGKey(0), repeating identical 'random' draws."""
+    comp = mk()
+    X = _rand((3, 6, 6), 0)
+    with pytest.raises(ValueError, match="stochastic"):
+        comp.compress(None, X)
+    with pytest.raises(ValueError, match="stochastic"):
+        comp(None, X[0])
+
+
+def test_deterministic_compressors_accept_none_keys():
+    X = _rand((3, 6, 6), 1)
+    for comp in (C.Identity(), C.TopK(k=4), C.RankR(r=1)):
+        out, _ = comp.compress(None, X)
+        assert out.shape == X.shape

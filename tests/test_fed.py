@@ -6,13 +6,16 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.fed.bldnn import (
     BLDNNConfig,
     _rotate,
     _topk_dense,
     _unrotate,
+    accumulate_comm,
     basis_bits,
+    init_comm_ledger,
     init_fed_state,
     layer_bases_from_params,
     make_fed_train_step,
@@ -102,11 +105,19 @@ def test_fed_step_single_client():
     y = jnp.asarray(x @ wtrue, jnp.float32)
     batch = {"x": x, "y": y}
     losses = []
+    ledger = init_comm_ledger(bases)
     for _ in range(30):
         params, state, m = step(params, state, batch)
+        ledger = accumulate_comm(ledger, m)
         losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] * 0.9, losses[::10]
     assert float(m["floats_sent"]) > 0
+    # BL-DNN bills on the shared CommLedger: one-time basis shipment +
+    # per-step gradient (grad leg) and Fisher (hess leg) streams, f32 wire
+    assert float(ledger.basis_ship) == basis_bits(bases) * 32
+    assert float(ledger.grad_up) > 0 and float(ledger.hess_up) > 0
+    assert float(ledger.uplink) == pytest.approx(
+        float(ledger.basis_ship + ledger.grad_up + ledger.hess_up))
 
 
 MULTI_CLIENT_SCRIPT = r"""
@@ -155,5 +166,6 @@ def test_fed_step_eight_clients_subprocess():
     device count is locked at first init in the main test process)."""
     r = subprocess.run([sys.executable, "-c", MULTI_CLIENT_SCRIPT],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert "MULTI_CLIENT_OK" in r.stdout, r.stdout + r.stderr

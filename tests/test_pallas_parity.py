@@ -1,0 +1,67 @@
+"""REPRO_BL_PALLAS=1 selection-backend parity (subprocess — the env flag is
+read at trace time, so each backend gets a fresh process).
+
+The Pallas bitwise-binary-search kernel must return the SAME f32 threshold
+as the barrier'd XLA ``top_k`` path; the shared tie-break mask then selects
+identical entries, so whole optimization trajectories are bitwise-invariant
+to the selection backend.  This is the contract that lets accelerator
+deployments flip the flag without re-validating convergence."""
+import json
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["REPRO_BL_PALLAS"] = "@FLAG@"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.core import bl, glm
+from repro.core.basis import orth_basis_from_data
+from repro.core.compressors import Identity, TopK, _topk_keep_mask, ntopk
+
+clients = glm.make_synthetic(seed=0, n_clients=6, m=30, d=40, r=12, lam=1e-3)
+x0 = jnp.zeros(40, jnp.float64)
+xs = glm.newton_solve(clients, x0, 20)
+bases = [orth_basis_from_data(c.A) for c in clients]
+r = bases[0].r
+
+# raw selection: masks straight off the shared routine
+X = jnp.asarray(np.random.default_rng(3).standard_normal((6, 1600)))
+masks = [np.asarray(_topk_keep_mask(X, k)).tolist() for k in (1, 12, 144, 1600)]
+
+# trajectories: deterministic Top-K (block §2.3 layout) and a stochastic
+# composed Top-K — both consume the one shared selection implementation
+h = bl.bl1(clients, bases, [TopK(k=r)] * 6, Identity(), x0, xs, 12,
+           backend="fast")
+h2 = bl.bl1(clients, bases, [ntopk(2 * r)] * 6, Identity(), x0, xs, 8,
+            seed=5, backend="fast")
+print("RESULT", json.dumps({
+    "masks": masks,
+    "gaps": h.gaps, "up": h.up_bits, "legs": h.legs,
+    "gaps2": h2.gaps, "up2": h2.up_bits,
+}))
+"""
+
+
+def _run(flag):
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT.replace("@FLAG@", flag)],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
+    lines = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT")]
+    assert lines, r.stdout + r.stderr[-3000:]
+    return json.loads(lines[0][len("RESULT "):])
+
+
+def test_pallas_selection_bitwise_matches_xla_path():
+    xla = _run("0")
+    pallas = _run("1")
+    assert pallas["masks"] == xla["masks"]
+    assert pallas["gaps"] == xla["gaps"]
+    assert pallas["up"] == xla["up"]
+    assert pallas["legs"] == xla["legs"]
+    assert pallas["gaps2"] == xla["gaps2"]
+    assert pallas["up2"] == xla["up2"]

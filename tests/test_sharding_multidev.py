@@ -134,9 +134,12 @@ print("ROUND_ENGINE_BITWISE_OK")
 
 
 def _run(script):
+    # JAX_PLATFORMS=cpu: on images with an accelerator plugin an unpinned
+    # subprocess burns minutes probing for hardware before falling back
     return subprocess.run([sys.executable, "-c", script], capture_output=True,
                           text=True, timeout=900,
-                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "JAX_PLATFORMS": "cpu"})
 
 
 def test_expert_parallel_moe_matches_global_path():
