@@ -5,13 +5,22 @@ kernel micro-benches.  Prints ``name,us_per_call,derived`` CSV.
   PYTHONPATH=src python -m benchmarks.run --only fig1r1
   PYTHONPATH=src python -m benchmarks.run --only fig1r1 --json
 
+The paper-figure benches are thin wrappers over the declarative experiment
+registry (`repro.exp`): each pulls its method/compressor/basis cells from
+the registered experiment and times/evaluates them through the same
+`run_cell` engine the figure CSVs come from — there is exactly one place a
+figure's configuration lives.
+
 `derived` encodes the figure's headline quantity — for the convergence
-figures that is Mbits/node to reach gap 1e-6 (the paper's x-axis), for the
-kernels it is GFLOP/s (interpret-mode: correctness-path timing only).
+figures that is Mbits/node to reach gap 1e-6 (the paper's x-axis) plus an
+explicit ``reached=`` flag (an ``inf`` alone cannot distinguish "diverged"
+from "stopped early"; the flag also lands in the JSON record's ``extra``
+field so BENCH trajectories can tell the two apart), for kernels GFLOP/s
+(interpret-mode: correctness-path timing only).
 
 ``--json`` additionally writes one ``BENCH_<name>.json`` perf record per
-bench group (per-bench µs + derived metric), seeding the repo's benchmark
-trajectory; ``--json-dir`` picks the output directory (default: cwd).
+bench group (per-bench µs + derived metric + extras), seeding the repo's
+benchmark trajectory; ``--json-dir`` picks the output directory.
 """
 from __future__ import annotations
 
@@ -33,18 +42,24 @@ def _timeit(fn, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6  # µs
 
 
-def _bits_to(hist, tol=1e-6):
-    g = np.asarray(hist.gaps)
-    reached = g < tol
-    return hist.up_bits[int(np.argmax(reached))] / 1e6 if reached.any() else float("inf")
+def _mbits(hist, tol=1e-6):
+    """Headline metric string + extra dict, via the shared `repro.exp`
+    helper (one implementation for benches, sweeps and artifacts — the old
+    local copy returned a bare ``inf`` with no reached flag)."""
+    from repro.exp import bits_to_tol
+
+    b = bits_to_tol(hist, tol)
+    return (f"Mbits_to_{tol:g}={b.mbits:.3f};reached={b.reached}",
+            {"mbits_to_tol": None if not b.reached else b.mbits,
+             "reached": b.reached})
 
 
-def _problem():
-    from repro.core import glm
-    clients = glm.make_synthetic(seed=0, n_clients=10, m=60, d=120, r=24, lam=1e-3)
-    x0 = jnp.zeros(120, jnp.float64)
-    xs = glm.newton_solve(clients, x0, 20)
-    return clients, x0, xs
+def _exp(name):
+    """(experiment, built problem) for a registered `repro.exp` experiment."""
+    from repro.exp import build_problem, get_experiment
+
+    exp = get_experiment(name)
+    return exp, build_problem(exp.problem)
 
 
 BENCHES = {}
@@ -60,59 +75,45 @@ def bench(name):
 # ---------------- paper figures (comm complexity) ---------------------------
 @bench("fig1r1_BL1_vs_FedNL")
 def fig1r1():
-    from repro.core import bl
-    from repro.core.basis import StandardBasis, orth_basis_from_data
-    from repro.core.compressors import Identity, RankR, TopK
-    clients, x0, xs = _problem()
-    dbases = [orth_basis_from_data(c.A) for c in clients]
-    sbases = [StandardBasis(120) for _ in clients]
-    r = dbases[0].r
+    from repro.exp import run_cell
+    exp, prob = _exp("fig1r1")
     STEPS = 3
 
-    def bl1_run(backend):
-        return lambda: bl.bl1(clients, dbases, [TopK(k=r) for _ in clients],
-                              Identity(), x0, xs, STEPS, backend=backend)
+    def runner(cell_name, backend):
+        cell = exp.cell(cell_name)
+        return lambda: run_cell(exp, cell, prob, steps=STEPS, backend=backend)
 
-    def fednl_run(backend):
-        return lambda: bl.bl1(clients, sbases, [RankR(r=1) for _ in clients],
-                              Identity(), x0, xs, STEPS, backend=backend)
-
-    t_bl = _timeit(bl1_run("fast"), reps=3)
-    t_bl_ref = _timeit(bl1_run("reference"), reps=1)
-    t_fn = _timeit(fednl_run("fast"), reps=3)          # FedNL timed on its own config
-    h_bl = bl.bl1(clients, dbases, [TopK(k=r) for _ in clients], Identity(), x0, xs, 18)
-    h_fn = bl.bl1(clients, sbases, [RankR(r=1) for _ in clients], Identity(), x0, xs, 18)
-    return [("fig1r1_BL1", t_bl / STEPS, f"Mbits_to_1e-6={_bits_to(h_bl):.3f}"),
+    t_bl = _timeit(runner("BL1", "fast"), reps=3)
+    t_bl_ref = _timeit(runner("BL1", "reference"), reps=1)
+    t_fn = _timeit(runner("FedNL", "fast"), reps=3)    # FedNL timed on its own config
+    h_bl = run_cell(exp, exp.cell("BL1"), prob, steps=18)
+    h_fn = run_cell(exp, exp.cell("FedNL"), prob, steps=18)
+    d_bl, x_bl = _mbits(h_bl)
+    d_fn, x_fn = _mbits(h_fn)
+    return [("fig1r1_BL1", t_bl / STEPS, d_bl, x_bl),
             ("fig1r1_BL1_reference", t_bl_ref / STEPS,
              f"fast_speedup={t_bl_ref / t_bl:.1f}x"),
-            ("fig1r1_FedNL", t_fn / STEPS, f"Mbits_to_1e-6={_bits_to(h_fn):.3f}")]
+            ("fig1r1_FedNL", t_fn / STEPS, d_fn, x_fn)]
 
 
 @bench("fig1r2_BL1_vs_first_order")
 def fig1r2():
-    from repro.core import baselines, bl
-    from repro.core.basis import orth_basis_from_data
-    from repro.core.compressors import Identity, RandomDithering, TopK
-    clients, x0, xs = _problem()
-    dbases = [orth_basis_from_data(c.A) for c in clients]
-    comp = RandomDithering(s=11)
-    h_bl = bl.bl1(clients, dbases, [TopK(k=dbases[0].r) for _ in clients],
-                  Identity(), x0, xs, 18)
-    h_gd = baselines.gd(clients, x0, xs, 150)
-    h_di = baselines.diana(clients, x0, xs, 150, comp, comp.omega_for(120))
-    return [("fig1r2_BL1", 0.0, f"Mbits_to_1e-6={_bits_to(h_bl):.3f}"),
-            ("fig1r2_GD", 0.0, f"Mbits_to_1e-6={_bits_to(h_gd):.3f}"),
-            ("fig1r2_DIANA", 0.0, f"Mbits_to_1e-6={_bits_to(h_di):.3f}")]
+    from repro.exp import run_cell
+    exp, prob = _exp("fig1r2")
+    rows = []
+    for cell_name, steps in (("BL1", 18), ("GD", 150), ("DIANA", 150)):
+        h = run_cell(exp, exp.cell(cell_name), prob, steps=steps)
+        derived, extra = _mbits(h)
+        rows.append((f"fig1r2_{cell_name}", 0.0, derived, extra))
+    return rows
 
 
 @bench("fig2_newton_basis")
 def fig2():
-    from repro.core import baselines
-    from repro.core.basis import orth_basis_from_data
-    clients, x0, xs = _problem()
-    dbases = [orth_basis_from_data(c.A) for c in clients]
-    h1 = baselines.newton(clients, x0, xs, 10)
-    h2 = baselines.newton(clients, x0, xs, 10, bases=dbases)
+    from repro.exp import run_cell
+    exp, prob = _exp("fig2")
+    h1 = run_cell(exp, exp.cell("newton_std"), prob)
+    h2 = run_cell(exp, exp.cell("newton_basis"), prob)
     per1 = h1.up_bits[2] - h1.up_bits[1]
     per2 = h2.up_bits[2] - h2.up_bits[1]
     return [("fig2_newton_std", 0.0, f"bits_per_iter={per1:.0f}"),
@@ -122,49 +123,34 @@ def fig2():
 
 @bench("fig4_partial_participation")
 def fig4():
-    from repro.core import bl
-    from repro.core.basis import orth_basis_from_data
-    from repro.core.compressors import Identity, TopK
-    clients, x0, xs = _problem()
-    dbases = [orth_basis_from_data(c.A) for c in clients]
-    r = dbases[0].r
+    from repro.exp import run_cell
+    exp, prob = _exp("fig4")
     out = []
-    for tau in (10, 5):
-        h = bl.bl2(clients, dbases, [TopK(k=r) for _ in clients],
-                   [Identity() for _ in clients], x0, xs, 80, tau=tau)
-        out.append((f"fig4_BL2_tau{tau}", 0.0, f"Mbits_to_1e-6={_bits_to(h):.3f}"))
+    for tag, tau in (("full", 10), ("half", 5)):
+        h = run_cell(exp, exp.cell(f"BL2_tau_{tag}"), prob, steps=80)
+        derived, extra = _mbits(h)
+        out.append((f"fig4_BL2_tau{tau}", 0.0, derived, extra))
     return out
 
 
 @bench("fig5_bidirectional")
 def fig5():
-    from repro.core import bl
-    from repro.core.basis import orth_basis_from_data
-    from repro.core.compressors import TopK
-    clients, x0, xs = _problem()
-    dbases = [orth_basis_from_data(c.A) for c in clients]
-    r = dbases[0].r
-    # the paper's most aggressive A.7 setting (K=r/2 both ways, p=r/2d)
-    # sits outside the local basin on our harder synthetic instance and
-    # diverges (recorded in EXPERIMENTS.md); this is the convergent
-    # bidirectional configuration (K=r both ways, p=1/2)
-    h = bl.bl1(clients, dbases, [TopK(k=r) for _ in clients],
-               TopK(k=r), x0, xs, 60, p=0.5, seed=3)
-    return [("fig5_BL1_BC", 0.0, f"Mbits_to_1e-6={_bits_to(h):.3f}")]
+    from repro.exp import run_cell
+    exp, prob = _exp("fig5")
+    # the registry's BL1-BC cell is the convergent bidirectional config
+    # (K=r both ways, p=1/2; the paper's most aggressive A.7 setting
+    # diverges on this harder synthetic instance)
+    h = run_cell(exp, exp.cell("BL1-BC"), prob, steps=60)
+    derived, extra = _mbits(h)
+    return [("fig5_BL1_BC", 0.0, derived, extra)]
 
 
 @bench("fig6_bl2_vs_bl3")
 def fig6():
-    from repro.core import bl
-    from repro.core.basis import StandardBasis
-    from repro.core.compressors import Identity, TopK
-    clients, x0, xs = _problem()
-    d = 120
-    sbases = [StandardBasis(d) for _ in clients]
-    h2 = bl.bl2(clients, sbases, [TopK(k=d) for _ in clients],
-                [Identity() for _ in clients], x0, xs, 30, tau=5)
-    h3 = bl.bl3(clients, [TopK(k=d) for _ in clients],
-                [Identity() for _ in clients], x0, xs, 30, tau=5)
+    from repro.exp import run_cell
+    exp, prob = _exp("fig6")
+    h2 = run_cell(exp, exp.cell("BL2_p1.00"), prob, steps=30)
+    h3 = run_cell(exp, exp.cell("BL3_p1.00"), prob, steps=30)
     return [("fig6_BL2_std", 0.0, f"gap@30={h2.gaps[-1]:.2e}"),
             ("fig6_BL3", 0.0, f"gap@30={h3.gaps[-1]:.2e}")]
 
@@ -180,7 +166,10 @@ def basis_matrix():
     from repro.core.basis import available_bases, make_bases
     from repro.core.compressors import Identity, RankR, TopK
 
-    clients, x0, xs = _problem()
+    from repro.exp import build_problem, get_experiment
+
+    prob = build_problem(get_experiment("fig1r1").problem)
+    clients, x0, xs = prob.clients, prob.x0, prob.x_star
     r = 24
     STEPS = 16
     comps = {"topk": TopK(k=r * r), "rankr": RankR(r=2)}
@@ -193,10 +182,11 @@ def basis_matrix():
             h = bl.bl1(clients, bases, [comp for _ in clients], Identity(),
                        x0, xs, STEPS, backend="fast")
             ship = h.legs["basis_ship"][-1] / 1e6
+            derived, extra = _mbits(h)
             rows.append((
                 f"basis_matrix_{bname}_{cname}", 0.0,
-                f"Mbits_to_1e-6={_bits_to(h):.3f};gap@{STEPS}={h.gaps[-1]:.2e}"
-                f";basis_ship_Mbits={ship:.3f}"))
+                f"{derived};gap@{STEPS}={h.gaps[-1]:.2e}"
+                f";basis_ship_Mbits={ship:.3f}", extra))
     return rows
 
 
@@ -315,8 +305,9 @@ def _write_json(json_dir, group, rows):
         "bench": group,
         "unix_time": time.time(),
         "rows": [
-            {"name": name, "us_per_call": us, "derived": derived}
-            for name, us, derived in rows
+            {"name": row[0], "us_per_call": row[1], "derived": row[2],
+             **({"extra": row[3]} if len(row) > 3 else {})}
+            for row in rows
         ],
     }
     path = os.path.join(json_dir, f"BENCH_{group}.json")

@@ -1,154 +1,41 @@
-"""Paper-figure reproduction driver (deliverable b/d companion): runs every
-comparison from §6 / Appendix A on synthetic Table-2-style problems and
-writes CSV curves (optimality gap vs communicated bits per node) under
-results/.
+"""Paper-figure reproduction driver — now a thin wrapper over the
+declarative experiment subsystem (`repro.exp`).
 
-  PYTHONPATH=src python examples/fed_glm_figures.py [--fast]
+  PYTHONPATH=src python examples/fed_glm_figures.py [--fast] [--out results]
 
-Figures covered: Fig.1 rows 1–3, Fig.2 (§A.4), Fig.3 (§A.5), Fig.4 (§A.6),
-Fig.5 (§A.7), Fig.6 (§A.8).  benchmarks/run.py calls the same entry points
-with --fast for the timing harness.
+Every figure configuration lives in `repro.exp.registry` (one frozen
+`Experiment` per figure); this script just invokes the same CLI as
+
+  PYTHONPATH=src python -m repro.exp run --all
+
+and exists for backwards compatibility with the original entry point.
+The registry's round budgets ARE the historical ``--fast`` regime (the
+committed ``results/`` curves), so ``--fast`` is accepted as a no-op;
+full-history runs always execute the registered budgets.  Sweeps are
+resumable: a re-run completes only the missing cells (use
+``python -m repro.exp run --force`` for a clean rebuild).  See
+docs/REPRODUCING.md for the figure-by-figure table.
 """
 import argparse
-import csv
 import os
+import sys
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import baselines, bl, glm
-from repro.core.basis import StandardBasis, orth_basis_from_data
-from repro.core.compressors import (
-    Identity, RandomDithering, RankR, TopK, nrankr, ntopk, rrankr, rtopk,
-)
-
-
-def save(outdir, fig, name, hist):
-    os.makedirs(outdir, exist_ok=True)
-    path = os.path.join(outdir, f"{fig}_{name}.csv")
-    g, up, down = hist.as_arrays()
-    with open(path, "w", newline="") as f:
-        w = csv.writer(f)
-        w.writerow(["iter", "gap", "up_bits_per_node", "down_bits_per_node"])
-        for i in range(len(g)):
-            w.writerow([i, g[i], up[i], down[i]])
-    return path
-
-
-def problem(seed=0, lam=1e-3, n=10, m=60, d=120, r=24):
-    clients = glm.make_synthetic(seed=seed, n_clients=n, m=m, d=d, r=r, lam=lam)
-    x0 = jnp.zeros(d, jnp.float64)
-    xs = glm.newton_solve(clients, x0, 20)
-    return clients, x0, xs
+from repro.exp.__main__ import main as exp_main
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="accepted for compatibility (the registry budgets "
+                         "already are the fast regime)")
     ap.add_argument("--out", default="results")
     args = ap.parse_args()
-    S = 12 if args.fast else 25
-    SL = 60 if args.fast else 200
-
-    clients, x0, xs = problem()
-    d = x0.shape[0]
-    dbases = [orth_basis_from_data(c.A) for c in clients]
-    sbases = [StandardBasis(d) for _ in clients]
-    n = len(clients)
-    r = dbases[0].r
-
-    # Fig 1 row 1: second-order comparison
-    rows = {
-        "BL1": bl.bl1(clients, dbases, [TopK(k=r) for _ in clients], Identity(), x0, xs, S),
-        "FedNL": bl.bl1(clients, sbases, [RankR(r=1) for _ in clients], Identity(), x0, xs, S),
-        "NL1": baselines.nl1(clients, x0, xs, S),
-        "Newton": baselines.newton(clients, x0, xs, min(S, 12)),
-    }
-    for k, h in rows.items():
-        save(args.out, "fig1r1", k, h)
-
-    # Fig 1 row 2: vs first-order
-    comp = RandomDithering(s=int(d ** 0.5))
-    om = comp.omega_for(d)
-    rows = {
-        "BL1": bl.bl1(clients, dbases, [TopK(k=r) for _ in clients], Identity(), x0, xs, S),
-        "GD": baselines.gd(clients, x0, xs, SL),
-        "DIANA": baselines.diana(clients, x0, xs, SL, comp, om),
-        "ADIANA": baselines.adiana(clients, x0, xs, SL, comp, om),
-        "LocalGD": baselines.local_gd(clients, x0, xs, SL // 4),
-    }
-    for k, h in rows.items():
-        save(args.out, "fig1r2", k, h)
-
-    # Fig 1 row 3: BL2 with composed Rank-R compressors (std basis ⇒ FedNL)
-    rows = {
-        "RankR": bl.bl2(clients, sbases, [RankR(r=1) for _ in clients],
-                        [TopK(k=d // 10) for _ in clients], x0, xs, S, p=0.1),
-        "RRankR": bl.bl2(clients, sbases, [rrankr(1, d) for _ in clients],
-                         [TopK(k=d // 10) for _ in clients], x0, xs, S, p=0.1),
-        "NRankR": bl.bl2(clients, sbases, [nrankr(1) for _ in clients],
-                         [TopK(k=d // 10) for _ in clients], x0, xs, S, p=0.1),
-    }
-    for k, h in rows.items():
-        save(args.out, "fig1r3", k, h)
-
-    # Fig 2 (§A.4): Newton in different bases
-    save(args.out, "fig2", "newton_std", baselines.newton(clients, x0, xs, 10))
-    save(args.out, "fig2", "newton_basis",
-         baselines.newton(clients, x0, xs, 10, bases=dbases))
-
-    # Fig 3 (§A.5): composed Top-K compressors in BL2 (data basis)
-    rows = {
-        "TopK": bl.bl2(clients, dbases, [TopK(k=r) for _ in clients],
-                       [TopK(k=r // 2) for _ in clients], x0, xs, S, p=r / (2 * d)),
-        "RTopK": bl.bl2(clients, dbases, [rtopk(r) for _ in clients],
-                        [TopK(k=r // 2) for _ in clients], x0, xs, S, p=r / (2 * d)),
-        "NTopK": bl.bl2(clients, dbases, [ntopk(r) for _ in clients],
-                        [TopK(k=r // 2) for _ in clients], x0, xs, S, p=r / (2 * d)),
-    }
-    for k, h in rows.items():
-        save(args.out, "fig3", k, h)
-
-    # Fig 4 (§A.6): partial participation
-    for tau_frac, tag in [(1.0, "full"), (0.5, "half"), (0.25, "quarter")]:
-        tau = max(1, int(n * tau_frac))
-        h = bl.bl2(clients, dbases, [TopK(k=r) for _ in clients],
-                   [Identity() for _ in clients], x0, xs, 2 * S, tau=tau)
-        save(args.out, "fig4", f"BL2_tau_{tag}", h)
-        h = bl.bl3(clients, [TopK(k=d) for _ in clients],
-                   [Identity() for _ in clients], x0, xs, 2 * S, tau=tau)
-        save(args.out, "fig4", f"BL3_tau_{tag}", h)
-
-    # Fig 5 (§A.7): bidirectional compression
-    rows = {
-        "FedNL-BC": bl.bl1(clients, sbases, [TopK(k=d * d // 2, symmetrize=True) for _ in clients],
-                           TopK(k=d // 2), x0, xs, S),
-        # K=r (not the paper's K=r/2) and p=1/2: the paper's most aggressive
-        # A.7 setting diverges on this harder synthetic instance — see
-        # EXPERIMENTS.md §Repro notes
-        "BL1-BC": bl.bl1(clients, dbases, [TopK(k=r) for _ in clients],
-                         TopK(k=r), x0, xs, 2 * S, p=0.5, seed=3),
-        "BL2-BC": bl.bl2(clients, dbases, [TopK(k=r) for _ in clients],
-                         [TopK(k=r) for _ in clients], x0, xs, 2 * S, p=0.5),
-        "BL3-BC": bl.bl3(clients, [TopK(k=d // 2) for _ in clients],
-                         [TopK(k=d // 2) for _ in clients], x0, xs, S, p=0.5),
-        "DORE": baselines.dore_like(clients, x0, xs, SL, TopK(k=d // 2), TopK(k=d // 2)),
-    }
-    for k, h in rows.items():
-        save(args.out, "fig5", k, h)
-
-    # Fig 6 (§A.8): BL2 vs BL3 under PP + BC
-    for p in ([1.0, 1 / 3] if args.fast else [1.0, 1 / 3, 1 / 5]):
-        kk = max(1, int(p * d))
-        h2 = bl.bl2(clients, sbases, [TopK(k=kk) for _ in clients],
-                    [TopK(k=kk) for _ in clients], x0, xs, 2 * S, tau=n // 2, p=p)
-        save(args.out, "fig6", f"BL2_p{p:.2f}", h2)
-        h3 = bl.bl3(clients, [TopK(k=kk) for _ in clients],
-                    [TopK(k=kk) for _ in clients], x0, xs, 2 * S, tau=n // 2, p=p)
-        save(args.out, "fig6", f"BL3_p{p:.2f}", h3)
-
-    print(f"wrote CSVs under {args.out}/")
+    rc = exp_main(["run", "--all", "--out", args.out,
+                   "--artifacts", os.path.join(args.out, "exp")])
+    if rc == 0:
+        print(f"wrote CSVs under {args.out}/")
+    return rc
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

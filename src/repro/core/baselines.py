@@ -1,11 +1,20 @@
 """Every method the paper compares against (§6, §A) — same History contract.
 
 Second order: Newton (naive / problem-structure / data-basis implementations,
-§2.1–2.3 + §A.4), NL1 [Islamov et al. 2021].  FedNL variants come from
-`bl.bl1/bl2` with `StandardBasis`.
+§2.1–2.3 + §A.4 — the data-basis column communicates r²+r floats/iter per
+Table 1's §2.3 block layout), NL1 [Islamov et al. 2021].  FedNL variants
+come from `bl.bl1/bl2` with `StandardBasis`; FedNL-BAG below adds the
+Bernoulli-aggregation follow-up (arXiv 2206.03588).
 
 First order: GD, DIANA, ADIANA, Local-GD (S-Local-GD's p=q special case), and
-a DORE-style bidirectionally-compressed GD with error feedback.
+a DORE-style bidirectionally-compressed GD with error feedback.  Gradient
+compressors obey the same Eq. 6 (contractive) / Eq. 7 (unbiased) contracts
+as the Hessian codecs.
+
+Shared conventions: ``clients`` is a sequence of `glm.ClientData`; ``x0``
+and ``x_star`` are (d,) arrays (x* the 20-iterate Newton reference
+optimum); every function returns a `bl.History` of per-round gaps and
+cumulative per-node uplink/downlink bits.
 """
 from __future__ import annotations
 
@@ -185,6 +194,14 @@ def nl1(
 # --------------------------------------------------------------------------
 def gd(clients, x0, x_star, steps, lr: Optional[float] = None,
        backend: str = "auto") -> History:
+    """Distributed gradient descent; d floats/node/round uplink.
+
+    Args:
+      lr: step size (default 1/L via `smoothness_constant`).
+      backend: "auto" | "fast" | "fast+sharded" | "reference".
+
+    Returns a `History` (downlink is uncounted: exact broadcast).
+    """
     if backend not in _BACKENDS:
         raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
     if backend != "reference":
@@ -223,7 +240,17 @@ def diana(
     backend: str = "auto",
 ) -> History:
     """DIANA [Mishchenko et al. 2019]: compressed gradient differences with
-    local shifts h_i; theoretical stepsizes."""
+    local shifts h_i; theoretical stepsizes.
+
+    Args:
+      comp: unbiased gradient compressor (Eq. 7), e.g. `RandomDithering`.
+      omega: its variance parameter ω (e.g. ``comp.omega_for(d)``).
+      lr: step size (default: the paper's theoretical
+        min(α_h/2μ, 1/(L(1+6ω/n))) with α_h = 1/(ω+1)).
+      seed: PRNG seed for the stochastic compressor draws.
+
+    Returns a `History`; uplink bills the compressed difference messages.
+    """
     if backend not in _BACKENDS:
         raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
     if backend != "reference":
@@ -275,7 +302,12 @@ def adiana(
     seed: int = 0,
 ) -> History:
     """ADIANA [Li et al. 2020, Alg. 1] with the paper's theoretical parameters
-    (strongly convex case)."""
+    (strongly convex case).
+
+    Args as `diana` (no lr override — the accelerated stepsizes are coupled).
+    Reference backend only (no spec/fast path).  Returns a `History`; each
+    round bills TWO compressed messages per client (x^k and w^k shifts).
+    """
     clients = list(clients)
     n = len(clients)
     d = x0.shape[0]
@@ -335,7 +367,14 @@ def adiana(
 
 def local_gd(clients, x0, x_star, steps, local_steps: int = 5, lr: Optional[float] = None) -> History:
     """Local GD (S-Local-GD's deterministic-sync special case): clients run
-    `local_steps` gradient steps, then average — one d-float uplink per sync."""
+    `local_steps` gradient steps, then average — one d-float uplink per sync.
+
+    Args:
+      local_steps: local gradient steps between synchronizations.
+      lr: local step size (default 1/L).
+
+    Returns a `History` with one row per synchronization round.
+    """
     clients = list(clients)
     n = len(clients)
     d = x0.shape[0]
@@ -368,7 +407,17 @@ def dore_like(
     lr: Optional[float] = None,
     seed: int = 0,
 ) -> History:
-    """DORE-style bidirectionally compressed GD with error feedback both ways."""
+    """DORE-style bidirectionally compressed GD with error feedback both ways.
+
+    Args:
+      up_comp / down_comp: uplink (per-client gradient) and downlink
+        (model delta) compressors; error feedback accumulates what each
+        round's compression dropped.
+      lr: step size (default 0.5/L).
+      seed: PRNG seed for stochastic compressors.
+
+    Returns a `History`; the downlink stream is billed (unlike gd/diana).
+    """
     clients = list(clients)
     n = len(clients)
     d = x0.shape[0]

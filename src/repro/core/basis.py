@@ -61,14 +61,24 @@ class MatrixBasis:
     psd: bool = False
 
     def h(self, A: jax.Array) -> jax.Array:
-        """Coefficient matrix of A (same d×d shape; zeros where unused)."""
+        """Coefficient matrix of A (Eq. 10 forward transform).
+
+        Args:  A — (d, d) matrix (symmetric for the S^d bases).
+        Returns: (d, d) coefficient array; exact zeros where the basis
+        stores nothing (e.g. outside the top-left r×r block for
+        `DataOuterBasis`), so the bit accountant only "sees" the
+        potentially-nonzero coefficients.
+        """
         raise NotImplementedError
 
     def reconstruct(self, H: jax.Array) -> jax.Array:
-        """Σ_{jl} H_{jl} B^{jl}."""
+        """Backward transform Σ_{jl} H_{jl} B^{jl}: (d, d) coefficients →
+        (d, d) matrix.  Exact inverse of `h` on the basis span."""
         raise NotImplementedError
 
     def coeff_count(self) -> int:
+        """Number of potentially-nonzero coefficients for a symmetric
+        input (what a dense uplink of h(A) would transmit)."""
         return self.n_coeff
 
 
@@ -285,7 +295,20 @@ def available_bases() -> List[str]:
 
 def make_bases(name: str, clients: Sequence, x0: Optional[jax.Array] = None,
                **kw) -> List[MatrixBasis]:
-    """Build the per-client basis list for a registered basis name."""
+    """Build the per-client basis list for a registered basis name.
+
+    Args:
+      name: registry key (see `available_bases()`).
+      clients: the client fleet (`glm.ClientData` sequence) — data-adaptive
+        bases derive their parameters from it.
+      x0: initial iterate for bases anchored there (`eigen`); ignored by
+        data-independent bases.
+      **kw: factory-specific options (e.g. ``rcond`` for `data_outer`).
+
+    Returns:
+      One `MatrixBasis` per client (shared-object for global bases —
+      the batched engine exploits the identity).
+    """
     if name not in BASIS_REGISTRY:
         raise KeyError(
             f"unknown basis {name!r}; registered: {available_bases()}")

@@ -136,11 +136,12 @@ def _block_mode(basisb, comp) -> bool:
     return False
 
 
-def _run(spec, batch, basisb, x0, x_star, steps, seed, *, sharded, exact=True):
+def _run(spec, batch, basisb, x0, x_star, steps, seed, *, sharded,
+         exact=True, stream=None):
     keys = jax.random.split(jax.random.PRNGKey(seed), steps)
     gaps, leds = rounds.run_rounds(
         spec, batch, basisb, x0, _f_star(batch, x_star), keys,
-        sharded=sharded, exact=exact)
+        sharded=sharded, exact=exact, stream=stream)
     return _history(gaps, leds)
 
 
@@ -149,7 +150,7 @@ def _run(spec, batch, basisb, x0, x_star, steps, seed, *, sharded, exact=True):
 # ==========================================================================
 def bl1_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
              alpha=1.0, eta=1.0, p=1.0, mu=None, seed=0,
-             init_exact_hessian=True, sharded=False) -> History:
+             init_exact_hessian=True, sharded=False, stream=None) -> History:
     batch, basisb = _stack_or_raise(clients, bases)
     hc = _one_of(list(hess_comp), "hessian")
     _check_supported(model_comp)
@@ -161,7 +162,8 @@ def bl1_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
         basis_bits=basisb.transmission_bits_mean(),
         block=_block_mode(basisb, hc),
     )
-    return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded)
+    return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded,
+                stream=stream)
 
 
 # ==========================================================================
@@ -169,7 +171,7 @@ def bl1_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
 # ==========================================================================
 def bl2_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
              alpha=1.0, eta=1.0, p=1.0, tau=None, seed=0,
-             init_exact_hessian=True, sharded=False) -> History:
+             init_exact_hessian=True, sharded=False, stream=None) -> History:
     batch, basisb = _stack_or_raise(clients, bases)
     hc = _one_of(list(hess_comp), "hessian")
     mc = _one_of(list(model_comp), "model")
@@ -180,7 +182,8 @@ def bl2_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
         basis_bits=basisb.transmission_bits_mean(),
         block=_block_mode(basisb, hc),
     )
-    return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded)
+    return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded,
+                stream=stream)
 
 
 # ==========================================================================
@@ -188,7 +191,7 @@ def bl2_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
 # ==========================================================================
 def bl3_fast(clients, hess_comp, model_comp, x0, x_star, steps, alpha=1.0,
              eta=1.0, p=1.0, tau=None, c=1e-8, option=2, seed=0,
-             sharded=False) -> History:
+             sharded=False, stream=None) -> History:
     batch, _ = _stack_or_raise(clients)
     hc = _one_of(list(hess_comp), "hessian")
     mc = _one_of(list(model_comp), "model")
@@ -196,7 +199,8 @@ def bl3_fast(clients, hess_comp, model_comp, x0, x_star, steps, alpha=1.0,
         hess_comp=hc, model_comp=mc, alpha=alpha, eta=eta, p=p,
         tau=batch.n if tau is None else tau, c=c, option=option,
     )
-    return _run(spec, batch, None, x0, x_star, steps, seed, sharded=sharded)
+    return _run(spec, batch, None, x0, x_star, steps, seed, sharded=sharded,
+                stream=stream)
 
 
 # ==========================================================================

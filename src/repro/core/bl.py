@@ -154,11 +154,41 @@ def bl1(
     seed: int = 0,
     init_exact_hessian: bool = True,
     backend: str = "auto",
+    stream=None,
 ) -> History:
     """Basis Learn with Bidirectional Compression (Algorithm 1).
 
     StandardBasis + Rank-R + identity model compressor ≡ FedNL (option 1);
     Top-K model compressor ≡ FedNL-BC.
+
+    Args:
+      clients: n per-client GLM datasets (`glm.ClientData`).
+      bases: one `MatrixBasis` per client (compression acts on the h^i(·)
+        coefficient matrices in this basis — §2.3 / Eq. 10).
+      hess_comp: one Hessian-coefficient compressor per client (contractive
+        Eq. 6 with α=1, or unbiased Eq. 7 with α=1/(ω+1)).
+      model_comp: single server→client model-stream compressor (Identity ⇒
+        exact broadcast; Top-K ⇒ the bidirectional "BC" variants).
+      x0: initial iterate, shape (d,).
+      x_star: reference optimum (gap is f(z_t) − f(x_star)).
+      steps: number of communication rounds.
+      alpha: Hessian-learning step size of the shift recursion
+        L ← L + αC(h(∇²f_i) − L).
+      eta: model-stream step size z ← z + ηC(x − z).
+      p: gradient-refresh probability (ξ ~ Bernoulli(p); p=1 ⇒ fresh
+        gradients every round).
+      mu: PSD-projection floor [·]_μ (defaults to the ridge λ).
+      seed: PRNG seed for stochastic compressors / ξ draws.
+      init_exact_hessian: ship exact initial coefficients (billed on the
+        hess_up leg) instead of starting the learner at zero.
+      backend: "auto" | "fast" | "fast+sharded" | "reference".
+      stream: optional `rounds.StreamHook` for mid-sweep progress emission
+        (fast backends only; the reference loops ignore it).
+
+    Returns:
+      `History` — per-round gaps plus cumulative per-node uplink/downlink
+      bits; `History.legs` carries the per-leg `CommLedger` streams on the
+      fast backends.
     """
     from . import batched, bl_reference
 
@@ -167,7 +197,8 @@ def bl1(
               init_exact_hessian=init_exact_hessian)
     return _dispatch(
         backend,
-        lambda sharded: batched.bl1_fast(*args, sharded=sharded, **kw),
+        lambda sharded: batched.bl1_fast(*args, sharded=sharded, stream=stream,
+                                         **kw),
         lambda: bl_reference.bl1_reference(*args, **kw),
     )
 
@@ -187,9 +218,19 @@ def bl2(
     seed: int = 0,
     init_exact_hessian: bool = True,
     backend: str = "auto",
+    stream=None,
 ) -> History:
     """Basis Learn with Bidirectional Compression and Partial Participation
-    (Algorithm 2).  StandardBasis ≡ FedNL-PP (Rank-R, identity model comp)."""
+    (Algorithm 2).  StandardBasis ≡ FedNL-PP (Rank-R, identity model comp).
+
+    Args are as `bl1` except: `model_comp` is per-client (one compressor
+    each, the downlink is client-individual z_i streams), `tau` is the
+    expected participants per round (Bernoulli(τ/n) with a force-one-client
+    fallback; defaults to full participation), and `p` is the per-client
+    gradient-refresh probability (ξ_i masks, not the fleet-wide scalar).
+
+    Returns a `History` (see `bl1`).
+    """
     from . import batched, bl_reference
 
     args = (clients, bases, hess_comp, model_comp, x0, x_star, steps)
@@ -197,7 +238,8 @@ def bl2(
               init_exact_hessian=init_exact_hessian)
     return _dispatch(
         backend,
-        lambda sharded: batched.bl2_fast(*args, sharded=sharded, **kw),
+        lambda sharded: batched.bl2_fast(*args, sharded=sharded, stream=stream,
+                                         **kw),
         lambda: bl_reference.bl2_reference(*args, **kw),
     )
 
@@ -217,14 +259,24 @@ def bl3(
     option: int = 2,
     seed: int = 0,
     backend: str = "auto",
+    stream=None,
 ) -> History:
-    """BL3 with the PSD basis of Example 5.1 (both β options, Algorithm 3)."""
+    """BL3 with the PSD basis of Example 5.1 (both β options, Algorithm 3).
+
+    Args are as `bl2` (no `bases` — the PSD basis is built in; no
+    `init_exact_hessian` — BL3 always initializes at the exact h̃) plus:
+    `c` is the γ_i floor (γ_i = max(c, max|L_i|)) and `option` selects the
+    β_i candidate (1: previous-iterate numerator; 2: current target).
+
+    Returns a `History` (see `bl1`).
+    """
     from . import batched, bl_reference
 
     args = (clients, hess_comp, model_comp, x0, x_star, steps)
     kw = dict(alpha=alpha, eta=eta, p=p, tau=tau, c=c, option=option, seed=seed)
     return _dispatch(
         backend,
-        lambda sharded: batched.bl3_fast(*args, sharded=sharded, **kw),
+        lambda sharded: batched.bl3_fast(*args, sharded=sharded, stream=stream,
+                                         **kw),
         lambda: bl_reference.bl3_reference(*args, **kw),
     )

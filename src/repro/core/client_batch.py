@@ -334,6 +334,42 @@ def global_hess(batch: ClientBatch, x: jax.Array) -> jax.Array:
     return jnp.mean(hess(batch, x), axis=0)
 
 
+def global_hess_fused(batch: ClientBatch, x: jax.Array) -> jax.Array:
+    """Global Hessian ∇²f(x) = mean_i ∇²f_i(x) WITHOUT the (n, d, d)
+    per-client intermediate: one (n·m, d)-shaped weighted Gram contraction.
+
+    At `repro.exp`'s fig1-xl scale (n=512, d=1200) the stacked per-client
+    Hessians alone are ~5.9 GB f64; this form never materializes them.
+    Accumulation order differs from `global_hess` (contract over n·m at
+    once vs per-client then mean), so results agree to f64 roundoff, not
+    bitwise — use it for solver/reference-optimum work, not inside the
+    parity-pinned round engine."""
+    w = hess_weights(batch, x)                      # (n, m)
+    Aw = batch.A * w[..., None]                     # (n, m, d)
+    H = jnp.einsum("nmd,nme->de", Aw, batch.A) / (batch.n * batch.m)
+    return H + batch.lam * jnp.eye(batch.d, dtype=H.dtype)
+
+
+def newton_solve_fused(batch: ClientBatch, x0: jax.Array,
+                       iters: int = 20) -> jax.Array:
+    """Reference optimum x* by full Newton on the stacked fleet, using the
+    low-memory `global_hess_fused` contraction each iteration.
+
+    The scale-friendly analogue of `glm.newton_solve` (which loops clients
+    in Python and stacks (n, d, d) Hessians) — same algorithm, fused math.
+    """
+    @jax.jit
+    def one(x):
+        g = global_grad(batch, x)
+        H = global_hess_fused(batch, x)
+        return x - jnp.linalg.solve(H, g)
+
+    x = x0
+    for _ in range(iters):
+        x = one(x)
+    return x
+
+
 def hess_coeff_target(basisb: BatchedBasis, batch: ClientBatch, x: jax.Array) -> jax.Array:
     """Batched h^i(∇²f_i): data bases see only the data part (ridge is added
     analytically server-side), dense bases see the full Hessian — exactly

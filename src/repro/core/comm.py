@@ -67,7 +67,18 @@ WireTree = Union[WireFormat, tuple]
 
 def price(wire: WireTree, counts) -> jax.Array:
     """Bits on the wire for `counts` under `wire` — recursing through
-    composed (tuple) formats so nested codecs price leg-by-leg."""
+    composed (tuple) formats so nested codecs price leg-by-leg.
+
+    Args:
+      wire: a `WireFormat`, or a tuple tree of them for composed codecs
+        (must mirror the structure of `counts`).
+      counts: a `Counts` (leaves: per-client (n,) arrays or scalars), or a
+        matching tuple of them.
+
+    Returns:
+      Per-client transmitted bits, shape (n,) float64 (scalar counts
+      broadcast).  Raises ValueError on wire/counts structure mismatch.
+    """
     if isinstance(wire, tuple):
         if not isinstance(counts, tuple) or len(wire) != len(counts):
             raise ValueError(
@@ -103,10 +114,14 @@ class CommLedger:
 
     @classmethod
     def create(cls, hess_up=0.0, grad_up=0.0, model_down=0.0, basis_ship=0.0):
+        """Fresh ledger with optional initial per-leg bits (e.g. the round-0
+        exact-coefficient shipment on hess_up, the basis on basis_ship)."""
         return cls(_f64(hess_up), _f64(grad_up), _f64(model_down),
                    _f64(basis_ship))
 
     def add(self, hess_up=0.0, grad_up=0.0, model_down=0.0, basis_ship=0.0):
+        """Functional per-leg accumulation: returns a NEW ledger with the
+        given per-node bit amounts (scalars or traced values) added."""
         return CommLedger(
             hess_up=self.hess_up + hess_up,
             grad_up=self.grad_up + grad_up,

@@ -80,8 +80,21 @@ class Compressor:
         return comm.WireFormat()
 
     def compress(self, keys: Optional[jax.Array], x: jax.Array) -> Tuple[jax.Array, comm.Counts]:
-        """Compress a client-stacked (n, ...) array; returns
-        (compressed (n, ...), counts with (n,) leaves)."""
+        """Compress a client-stacked batch (the one batched contract).
+
+        Args:
+          keys: per-client PRNG keys, shape (n, 2); None is accepted only
+            by deterministic compressors (stochastic ones raise).
+          x: (n, ...) stack of per-client tensors (matrices for the
+            Hessian codecs, vectors for model/gradient streams).
+
+        Returns:
+          (compressed, counts): ``compressed`` is (n, ...) dense with
+          zeros where entries were dropped (Eq. 6 contraction / Eq. 7
+          unbiased contract applies per client); ``counts`` is a
+          `comm.Counts` whose leaves are per-client (n,) message counts —
+          price them with ``comm.price(self.wire, counts)``.
+        """
         raise NotImplementedError
 
     def _require_keys(self, keys: Optional[jax.Array], n: int) -> Optional[jax.Array]:
@@ -101,8 +114,9 @@ class Compressor:
         dense, counts = self.compress(keys, x[None])
         return dense[0], comm.price(self.wire, counts)[0]
 
-    # default recommended step size for Hessian learning
     def alpha(self) -> float:
+        """Recommended Hessian-learning step size: 1/(ω+1) for unbiased
+        compressors (Eq. 7), 1 for contractive ones (Eq. 6)."""
         if self.is_unbiased:
             return 1.0 / (self.omega + 1.0)
         return 1.0

@@ -272,15 +272,50 @@ class Env:
     extra: object  # spec-specific precomputation (e.g. a CoeffLayout)
 
 
-def _engine(spec, R: Reducer, batch, basisb, x0, keys):
+@dataclasses.dataclass(frozen=True)
+class StreamHook:
+    """Mid-sweep instrumentation hook for long runs (`repro.exp` sweeps).
+
+    The engine emits ``callback(t, eval_x, ledger)`` from inside the scan via
+    `jax.debug.callback` every ``every`` rounds — ``t`` is the 0-based round
+    index, ``eval_x`` the round's evaluation iterate ``(d,)`` and ``ledger``
+    the cumulative per-leg `comm.CommLedger` at that round.  Emission is
+    asynchronous host-side instrumentation only: the recorded `History`
+    still comes from the full post-scan gap evaluation, so trajectories and
+    gap streams are unchanged by attaching a hook.  Only honoured on the
+    single-device backend — the sharded engine ignores hooks (a shard_map
+    callback would fire once per device with shard-local values).
+
+    The hook is a *static* jit argument: each distinct hook instance
+    compiles its own engine program (stream-less runs keep sharing the
+    original cache), so attach hooks to long runs, not micro-benches.
+    """
+
+    every: int
+    callback: Callable
+
+    def _emit(self, t, eval_x, ledger):
+        self.callback(int(t), eval_x, ledger)
+
+
+def _engine(spec, R: Reducer, batch, basisb, x0, keys, stream=None):
     env = Env(batch=batch, basisb=basisb, x0=x0,
               extra=spec.prepare(R, batch, basisb, x0))
     carry0 = spec.init(R, env)
 
-    def step(carry, key_t):
-        return spec.step(R, env, carry, key_t)
+    def step(carry, xt):
+        t, key_t = xt
+        carry, ys = spec.step(R, env, carry, key_t)
+        if stream is not None:
+            # only ship (t, eval_x, ledger) to the host on emitting rounds
+            jax.lax.cond(
+                t % stream.every == 0,
+                lambda: jax.debug.callback(stream._emit, t, ys[0], ys[1]),
+                lambda: None)
+        return carry, ys
 
-    _, ys = jax.lax.scan(step, carry0, keys)
+    ts = jnp.arange(keys.shape[0])
+    _, ys = jax.lax.scan(step, carry0, (ts, keys))
     # ys = (eval_x (steps, d), CommLedger of (steps,) per-leg streams).
     # Specs emit the round's evaluation iterate, not the gap: loss
     # evaluation is instrumentation, and computing it outside the scan
@@ -291,7 +326,8 @@ def _engine(spec, R: Reducer, batch, basisb, x0, keys):
     return ys
 
 
-_engine_jit = functools.partial(jax.jit, static_argnames=("spec", "R"))(_engine)
+_engine_jit = functools.partial(
+    jax.jit, static_argnames=("spec", "R", "stream"))(_engine)
 
 
 @jax.jit
@@ -317,7 +353,8 @@ def _sharded_engine(spec, R: ShardMapReducer, mesh):
 
 
 def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
-               sharded: bool = False, exact: bool = True):
+               sharded: bool = False, exact: bool = True,
+               stream: "StreamHook | None" = None):
     """Run `steps = len(keys)` rounds of `spec` and return the history
     streams ``(gaps, CommLedger-of-streams)`` — one per-leg bit stream per
     `comm.CommLedger` leg.
@@ -325,10 +362,14 @@ def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
     sharded=False → `VmapReducer` on the default device.
     sharded=True  → `ShardMapReducer` over a 1-D client mesh spanning the
     most local devices that evenly divide the client count (a 1-device
-    world still exercises the shard_map code path)."""
+    world still exercises the shard_map code path).
+
+    stream — optional `StreamHook` emitting (round, eval_x, ledger) to the
+    host mid-scan (progress reporting for `repro.exp` sweeps).  Ignored on
+    the sharded backend (see `StreamHook`)."""
     if not sharded:
         xs_t, leds = _engine_jit(spec, VmapReducer(n=batch.n), batch,
-                                 basisb, x0, keys)
+                                 basisb, x0, keys, stream=stream)
     else:
         from repro.launch.mesh import make_client_mesh
 

@@ -1,0 +1,46 @@
+"""Declarative experiment subsystem: every paper figure as a registered,
+resumable, schema-versioned sweep over the unified round engine.
+
+    from repro.exp import get_experiment, run_experiment, build_problem
+
+    exp = get_experiment("fig1r1")
+    run_experiment(exp, "results", "results/exp")
+
+or from the shell: ``python -m repro.exp run --fig fig1r1`` / ``--all``.
+See `repro.exp.registry` for the experiment catalogue,
+`repro.exp.artifacts` for the artifact schema, and docs/REPRODUCING.md
+for the figure-by-figure reproduction table.
+"""
+from .artifacts import CSV_COLUMNS, SCHEMA, SCHEMA_VERSION
+from .engine import Problem, build_compressor, build_problem, run_cell, run_experiment
+from .metrics import BitsToTol, best_gap_stream, bits_to_tol
+from .registry import (
+    CompressorCfg,
+    Experiment,
+    MethodCell,
+    ProblemSpec,
+    available_experiments,
+    get_experiment,
+    register_experiment,
+)
+
+__all__ = [
+    "BitsToTol",
+    "CSV_COLUMNS",
+    "CompressorCfg",
+    "Experiment",
+    "MethodCell",
+    "Problem",
+    "ProblemSpec",
+    "SCHEMA",
+    "SCHEMA_VERSION",
+    "available_experiments",
+    "best_gap_stream",
+    "bits_to_tol",
+    "build_compressor",
+    "build_problem",
+    "get_experiment",
+    "register_experiment",
+    "run_cell",
+    "run_experiment",
+]

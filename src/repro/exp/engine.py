@@ -1,0 +1,292 @@
+"""The sweep engine: execute registered experiments, cell by cell.
+
+`build_problem` materializes a `ProblemSpec` once (clients, x0, reference
+optimum x*, memoized basis fleets); `run_cell` dispatches one `MethodCell`
+to the public method entry points (`repro.core.bl`, `repro.core.baselines`)
+— every fast-path cell therefore runs on the unified jitted round engine
+(`repro.core.rounds`), on whichever aggregation backend the cell declares
+(``backend="fast+sharded"`` shards clients over the mesh).  `run_experiment`
+sweeps (cell × seed), skips cells whose artifact already exists with a
+matching config digest (resume), and regenerates the figure CSVs from the
+artifacts — so CSVs are always consistent with the JSON records.
+
+Long cells can stream progress mid-scan: ``progress_every=N`` attaches a
+`repro.core.rounds.StreamHook` that reports (round, gap, Mbits/node) from
+inside the running scan for the BL methods on the single-device backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, bl, client_batch, compressors, glm
+from repro.core.basis import make_bases
+from repro.core.rounds import StreamHook
+
+from . import artifacts
+from .registry import CompressorCfg, Experiment, MethodCell, ProblemSpec
+
+
+def build_compressor(cfg: CompressorCfg, d: int) -> compressors.Compressor:
+    """Materialize a declarative `CompressorCfg` for a d-dimensional problem
+    (the composed Rank-R codecs derive their dithering levels from d)."""
+    k = cfg.kind
+    if k == "identity":
+        return compressors.Identity()
+    if k == "topk":
+        return compressors.TopK(k=cfg.k, symmetrize=cfg.symmetrize)
+    if k == "randk":
+        return compressors.RandK(k=cfg.k)
+    if k == "rankr":
+        return compressors.RankR(r=cfg.r)
+    if k == "dither":
+        return compressors.RandomDithering(s=cfg.s)
+    if k == "natural":
+        return compressors.NaturalCompression()
+    if k == "rtopk":
+        return compressors.rtopk(cfg.k)
+    if k == "ntopk":
+        return compressors.ntopk(cfg.k)
+    if k == "rrankr":
+        return compressors.rrankr(cfg.r, d)
+    if k == "nrankr":
+        return compressors.nrankr(cfg.r)
+    if k == "bernoulli":
+        return compressors.BernoulliLazy(p=cfg.p)
+    raise ValueError(f"unknown compressor kind {cfg.kind!r}")
+
+
+@dataclasses.dataclass
+class Problem:
+    """A built problem regime: data, initial iterate, reference optimum."""
+
+    spec: ProblemSpec
+    clients: list
+    x0: jax.Array
+    x_star: jax.Array
+    _bases: Dict[str, list] = dataclasses.field(default_factory=dict)
+
+    @property
+    def d(self) -> int:
+        return int(self.x0.shape[0])
+
+    @property
+    def n(self) -> int:
+        return len(self.clients)
+
+    def bases(self, name: str) -> list:
+        """Per-client basis fleet for a `repro.core.basis` registry name,
+        built once per problem and memoized across cells."""
+        if name not in self._bases:
+            self._bases[name] = make_bases(name, self.clients, x0=self.x0)
+        return self._bases[name]
+
+
+@functools.lru_cache(maxsize=None)
+def build_problem(spec: ProblemSpec) -> Problem:
+    """Materialize a `ProblemSpec` (memoized — figures share regimes)."""
+    if spec.kind == "table2":
+        clients = glm.make_table2(spec.name, seed=spec.seed, lam=spec.lam)
+    elif spec.kind == "synthetic":
+        clients = glm.make_synthetic(
+            seed=spec.seed, n_clients=spec.n_clients, m=spec.m, d=spec.d,
+            r=spec.r, lam=spec.lam)
+    else:
+        raise ValueError(f"unknown problem kind {spec.kind!r}")
+    d = int(clients[0].A.shape[1])
+    x0 = jnp.zeros(d, jnp.float64)
+    if spec.solver == "fused":
+        batch = client_batch.from_clients(clients)
+        x_star = client_batch.newton_solve_fused(batch, x0, spec.newton_iters)
+    elif spec.solver == "loop":
+        x_star = glm.newton_solve(clients, x0, spec.newton_iters)
+    else:
+        raise ValueError(f"unknown solver {spec.solver!r}")
+    return Problem(spec=spec, clients=clients, x0=x0, x_star=x_star)
+
+
+#: methods that accept a PRNG seed (the sweep seed is injected only here;
+#: newton/gd/local_gd are deterministic and take none)
+_SEEDED_METHODS = frozenset(
+    {"bl1", "bl2", "bl3", "fednl_bag", "nl1", "diana", "adiana", "dore"})
+
+
+def _comp(cfg: Optional[CompressorCfg], d: int, what: str):
+    if cfg is None:
+        raise ValueError(f"cell needs a {what} compressor config")
+    return build_compressor(cfg, d)
+
+
+def run_cell(exp: Experiment, cell: MethodCell, prob: Problem, *,
+             steps: Optional[int] = None, seed: Optional[int] = None,
+             backend: Optional[str] = None,
+             stream: Optional[StreamHook] = None) -> bl.History:
+    """Run one cell and return its `History`.
+
+    Args:
+      exp, cell: the registered experiment and one of its cells.
+      prob: the built problem (`build_problem(exp.problem)`).
+      steps: override the cell's round budget — shorter OR longer (the
+        benchmark wrappers extend runs; `run_experiment` clamps via its
+        own ``max_steps``).
+      seed: sweep seed; a ``seed`` in ``cell.params`` takes precedence
+        (cells that pin a seed reproduce one specific committed curve).
+      backend: override the cell's engine backend.
+      stream: optional mid-scan progress hook (BL methods, single-device
+        backends only — see `repro.core.rounds.StreamHook`).
+    """
+    n, d = prob.n, prob.d
+    m = cell.method
+    steps = cell.steps if steps is None else steps
+    backend = cell.backend if backend is None else backend
+    params = cell.params_dict()
+    if seed is not None and m in _SEEDED_METHODS:
+        params.setdefault("seed", seed)
+    clients, x0, xs = prob.clients, prob.x0, prob.x_star
+
+    if m in ("bl1", "bl2", "bl3", "fednl_bag"):
+        hc = [_comp(cell.hess_comp, d, "hessian")] * n
+        if m == "bl1":
+            mc = _comp(cell.model_comp, d, "model")
+            return bl.bl1(clients, prob.bases(cell.basis), hc, mc, x0, xs,
+                          steps, backend=backend, stream=stream, **params)
+        if m == "bl2":
+            mc = [_comp(cell.model_comp, d, "model")] * n
+            return bl.bl2(clients, prob.bases(cell.basis), hc, mc, x0, xs,
+                          steps, backend=backend, stream=stream, **params)
+        if m == "bl3":
+            mc = [_comp(cell.model_comp, d, "model")] * n
+            return bl.bl3(clients, hc, mc, x0, xs, steps, backend=backend,
+                          stream=stream, **params)
+        return baselines.fednl_bag(clients, prob.bases(cell.basis), hc, x0,
+                                   xs, steps, backend=backend, **params)
+    if m == "newton":
+        bases = prob.bases(cell.basis) if cell.basis else None
+        return baselines.newton(clients, x0, xs, steps, bases=bases,
+                                backend=backend, **params)
+    if m == "nl1":
+        return baselines.nl1(clients, x0, xs, steps, **params)
+    if m == "gd":
+        return baselines.gd(clients, x0, xs, steps, backend=backend, **params)
+    if m == "diana":
+        comp = _comp(cell.hess_comp, d, "gradient")
+        return baselines.diana(clients, x0, xs, steps, comp,
+                               comp.omega_for(d), backend=backend, **params)
+    if m == "adiana":
+        comp = _comp(cell.hess_comp, d, "gradient")
+        return baselines.adiana(clients, x0, xs, steps, comp,
+                                comp.omega_for(d), **params)
+    if m == "local_gd":
+        return baselines.local_gd(clients, x0, xs, steps, **params)
+    if m == "dore":
+        up = _comp(cell.hess_comp, d, "uplink")
+        down = _comp(cell.model_comp, d, "downlink")
+        return baselines.dore_like(clients, x0, xs, steps, up, down, **params)
+    raise ValueError(f"unknown method {m!r} in cell {cell.name!r}")
+
+
+def _progress_hook(exp: Experiment, cell: MethodCell, prob: Problem,
+                   every: int, log) -> StreamHook:
+    # The hook body runs inside a jax.debug.callback while the engine's
+    # scan is still executing — re-entering JAX from a host callback can
+    # deadlock, so the gap is evaluated in pure numpy on host copies of
+    # the fleet (jax.debug.callback delivers eval_x/ledger as numpy).
+    A = np.stack([np.asarray(c.A) for c in prob.clients])   # (n, m, d)
+    b = np.stack([np.asarray(c.b) for c in prob.clients])   # (n, m)
+    lam = prob.clients[0].lam
+    x_star = np.asarray(prob.x_star)
+
+    def loss(x):
+        z = (A @ x) * b
+        return float(np.mean(np.logaddexp(0.0, -z))
+                     + 0.5 * lam * np.dot(x, x))
+
+    f_star = loss(x_star)
+
+    def report(t, eval_x, ledger):
+        gap = loss(np.asarray(eval_x)) - f_star
+        mb = float(np.asarray(ledger.uplink)) / 1e6
+        log(f"    [{exp.name}/{cell.name}] round {t}: gap={gap:.3e} "
+            f"up={mb:.3f} Mbits/node")
+
+    return StreamHook(every=every, callback=report)
+
+
+def run_experiment(exp: Experiment, out_dir: str, artifacts_dir: str, *,
+                   force: bool = False, max_steps: Optional[int] = None,
+                   cells: Optional[Sequence[str]] = None,
+                   seeds: Optional[Sequence[int]] = None,
+                   progress_every: Optional[int] = None,
+                   log=print) -> List[dict]:
+    """Sweep an experiment: run (cell × seed), write artifacts + CSVs.
+
+    Cells whose artifact JSON already exists with a matching config digest
+    are *skipped* (status "cached") unless ``force`` — re-running a partial
+    sweep is idempotent and completes only the missing cells.  Figure CSVs
+    are regenerated from the artifacts every time (cheap, keeps them
+    consistent).  Returns one summary dict per (cell, seed).
+    """
+    summaries = []
+    sweep_seeds = tuple(seeds) if seeds is not None else exp.seeds
+    run_cells = (exp.cells if cells is None
+                 else tuple(exp.cell(c) for c in cells))
+    prob = None
+    for cell in run_cells:
+        eff_steps = (cell.steps if max_steps is None
+                     else min(cell.steps, max_steps))
+        for seed in sweep_seeds:
+            config = artifacts.cell_config(exp, cell, seed, eff_steps)
+            digest = artifacts.config_digest(config)
+            path = artifacts.artifact_path(artifacts_dir, exp.name,
+                                           cell.name, seed)
+            record = None if force else artifacts.load_json(path)
+            if record is not None and record.get("config_digest") == digest:
+                status = "cached"
+            else:
+                if prob is None:
+                    prob = build_problem(exp.problem)
+                stream = None
+                if progress_every and cell.method in ("bl1", "bl2", "bl3"):
+                    if cell.backend == "fast+sharded":
+                        # StreamHook is single-device only (see rounds.py);
+                        # don't pay the hook's fleet copy for a no-op
+                        log(f"  {exp.name}/{cell.name}: progress streaming "
+                            "unavailable on the sharded backend — will "
+                            "report at completion")
+                    else:
+                        stream = _progress_hook(exp, cell, prob,
+                                                progress_every, log)
+                t0 = time.perf_counter()
+                hist = run_cell(exp, cell, prob, steps=eff_steps, seed=seed,
+                                stream=stream)
+                jax.effects_barrier()   # drain any stream-hook callbacks
+                runtime = time.perf_counter() - t0
+                record = artifacts.cell_record(exp, cell, seed, eff_steps,
+                                               hist, runtime_s=runtime)
+                artifacts.write_json(path, record)
+                status = "ran"
+            csv_file = None
+            if seed == sweep_seeds[0]:
+                csv_file = artifacts.write_fig_csv(out_dir, record)
+            b2t = record["bits_to_tol"]
+            summaries.append({
+                "experiment": exp.name, "cell": cell.name, "seed": seed,
+                "status": status, "steps": eff_steps,
+                "mbits_to_tol": b2t["mbits_per_node"],
+                "reached": b2t["reached"],
+                "final_gap": record["history"]["gaps"][-1],
+                "runtime_s": record.get("runtime_s"),
+                "artifact": path, "csv": csv_file,
+            })
+            reach = (f"{b2t['mbits_per_node']:.3f} Mbits to {exp.tol:g}"
+                     if b2t["reached"] else
+                     f"tol not reached (gap {record['history']['gaps'][-1]:.2e})")
+            log(f"  {exp.name}/{cell.name} seed={seed} [{status}] "
+                f"{eff_steps} rounds — {reach}")
+    return summaries

@@ -1,0 +1,51 @@
+"""Headline metrics derived from `History` streams.
+
+One shared implementation of the paper's headline quantity — communicated
+Mbits per node to reach a target optimality gap (the x-axis of Fig. 1–6) —
+used by both the experiment engine (`repro.exp.engine`) and the benchmark
+harness (`benchmarks/run.py`).  The old benchmark-local helper returned
+``inf`` silently when a run never reached the tolerance, which made
+"diverged" indistinguishable from "slow" in the JSON records; `BitsToTol`
+carries the reached/not-reached flag explicitly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class BitsToTol(NamedTuple):
+    """Mbits/node to reach a gap tolerance, plus whether it was reached.
+
+    ``mbits`` is ``inf`` when the trajectory never dips below ``tol`` —
+    consumers must branch on ``reached`` (a record with ``reached=False``
+    may be a divergent run OR simply one that was stopped early)."""
+
+    mbits: float
+    reached: bool
+
+
+def bits_to_tol(hist, tol: float = 1e-6) -> BitsToTol:
+    """First cumulative uplink cost (Mbits/node) at which ``hist.gaps``
+    drops below ``tol``.
+
+    Args:
+      hist: a `repro.core.bl.History` (any object with ``gaps`` and
+        ``up_bits`` sequences of equal length).
+      tol: target optimality gap.
+
+    Returns:
+      `BitsToTol` — ``(mbits, reached)``; ``mbits == inf`` iff not reached.
+    """
+    g = np.asarray(hist.gaps, dtype=np.float64)
+    up = np.asarray(hist.up_bits, dtype=np.float64)
+    hit = g < tol
+    if not hit.any():
+        return BitsToTol(float("inf"), False)
+    return BitsToTol(float(up[int(np.argmax(hit))]) / 1e6, True)
+
+
+def best_gap_stream(gaps) -> np.ndarray:
+    """Running best (monotone non-increasing) gap: cummin over rounds."""
+    return np.minimum.accumulate(np.asarray(gaps, dtype=np.float64))

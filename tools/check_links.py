@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Dead-relative-link checker for the repo's markdown docs.
+
+    python tools/check_links.py README.md docs
+
+Scans the given markdown files (directories are walked for ``*.md``) for
+inline links/images ``[text](target)`` and verifies every *relative*
+target resolves to an existing file or directory (fragments are stripped;
+``http(s):``/``mailto:`` targets are skipped — this repo's CI is offline).
+Exits 1 listing every dead link.  Used by the CI docs job.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline [text](target) — ignores fenced code by the crude-but-effective
+# rule that links inside backticks don't match the pattern anyway
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(paths):
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, files in os.walk(p):
+                for f in sorted(files):
+                    if f.endswith(".md"):
+                        yield os.path.join(root, f)
+        else:
+            yield p
+
+
+def dead_links(md_path):
+    base = os.path.dirname(os.path.abspath(md_path))
+    text = open(md_path, encoding="utf-8").read()
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            line = text[: m.start()].count("\n") + 1
+            yield line, target
+
+
+def main(argv):
+    if not argv:
+        print(__doc__)
+        return 2
+    bad = 0
+    for md in md_files(argv):
+        for line, target in dead_links(md):
+            print(f"{md}:{line}: dead link -> {target}")
+            bad += 1
+    if bad:
+        print(f"{bad} dead link(s)")
+        return 1
+    print("all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

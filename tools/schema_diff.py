@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Schema-diff freshly generated experiment output against committed artifacts.
+
+    python tools/schema_diff.py <generated_dir> <committed_results_dir>
+
+For every figure CSV in <generated_dir>, the same-named committed CSV must
+share the exact header row (the versioned `repro.exp.artifacts.CSV_COLUMNS`
+layout); for every per-cell JSON under <generated_dir>/exp/, the committed
+counterpart must exist with the same ``schema`` tag, the same top-level
+keys and the same ``history`` keys.  Values are NOT compared — CI runs the
+smoke sweep with a clamped round budget, so only the *shape* of the
+artifacts is comparable.  Exits 1 listing every mismatch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def _fail(msgs):
+    for m in msgs:
+        print(f"schema-diff: {m}")
+    print(f"{len(msgs)} schema mismatch(es)")
+    return 1
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    gen, committed = argv
+    problems = []
+    csvs = sorted(f for f in os.listdir(gen)
+                  if f.startswith("fig") and f.endswith(".csv"))
+    if not csvs:
+        problems.append(f"no generated figure CSVs found in {gen}")
+    for f in csvs:
+        ref = os.path.join(committed, f)
+        if not os.path.exists(ref):
+            problems.append(f"{f}: no committed counterpart in {committed}")
+            continue
+        with open(os.path.join(gen, f)) as fh:
+            got = fh.readline().strip()
+        with open(ref) as fh:
+            want = fh.readline().strip()
+        if got != want:
+            problems.append(f"{f}: header {got!r} != committed {want!r}")
+    gen_exp = os.path.join(gen, "exp")
+    n_json = 0
+    for root, _dirs, files in os.walk(gen_exp):
+        for f in sorted(files):
+            if not f.endswith(".json"):
+                continue
+            n_json += 1
+            rel = os.path.relpath(os.path.join(root, f), gen_exp)
+            ref = os.path.join(committed, "exp", rel)
+            if not os.path.exists(ref):
+                problems.append(f"exp/{rel}: no committed counterpart")
+                continue
+            with open(os.path.join(root, f)) as fh:
+                got = json.load(fh)
+            with open(ref) as fh:
+                want = json.load(fh)
+            if got.get("schema") != want.get("schema"):
+                problems.append(f"exp/{rel}: schema tag "
+                                f"{got.get('schema')!r} != {want.get('schema')!r}")
+            if set(got) != set(want):
+                problems.append(f"exp/{rel}: top-level keys "
+                                f"{sorted(set(got) ^ set(want))} differ")
+            hg, hw = got.get("history", {}), want.get("history", {})
+            if set(hg) != set(hw):
+                problems.append(f"exp/{rel}: history keys "
+                                f"{sorted(set(hg) ^ set(hw))} differ")
+    if os.path.isdir(gen_exp) and n_json == 0:
+        problems.append(f"no generated artifact JSONs found under {gen_exp}")
+    if problems:
+        return _fail(problems)
+    print(f"schema ok: {len(csvs)} CSV(s), {n_json} artifact JSON(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
