@@ -163,7 +163,7 @@ def basis_matrix():
     coefficient budget (K = r² — the data basis's full coefficient count),
     so differences are purely where the basis concentrates energy."""
     from repro.core import bl
-    from repro.core.basis import available_bases, make_bases
+    from repro.core.basis import available_bases, is_pytree_basis, make_bases
     from repro.core.compressors import Identity, RankR, TopK
 
     from repro.exp import build_problem, get_experiment
@@ -175,8 +175,10 @@ def basis_matrix():
     comps = {"topk": TopK(k=r * r), "rankr": RankR(r=2)}
     rows = []
     for bname in available_bases():
-        if bname == "psd":
-            continue  # BL3's basis (Example 5.1); BL1/BL2 grid runs the rest
+        if bname == "psd" or is_pytree_basis(bname):
+            # psd is BL3's basis (Example 5.1); pytree bases (per_layer_svd)
+            # are the DNN workload's — see the fed_dnn bench
+            continue
         bases = make_bases(bname, clients, x0=x0)
         for cname, comp in comps.items():
             h = bl.bl1(clients, bases, [comp for _ in clients], Identity(),
@@ -188,6 +190,85 @@ def basis_matrix():
                 f"{derived};gap@{STEPS}={h.gaps[-1]:.2e}"
                 f";basis_ship_Mbits={ship:.3f}", extra))
     return rows
+
+
+#: per-round cost of the retired hand-rolled BL-DNN shard_map loop
+#: (`fed.bldnn.make_fed_train_step`, one jitted step dispatched per round
+#: over an 8-virtual-device mesh), measured on the fig-dnn problem in the
+#: commit that deleted it — the engine rows below are re-measured live
+#: against this frozen baseline.
+_FED_DNN_LEGACY_US = 19162.0
+
+
+@bench("fed_dnn")
+def fed_dnn():
+    """BL-DNN round cost on the pytree engine (the fig-dnn problem):
+    single-device vmap scan (with and without the post-scan trajectory
+    evaluation) and the 8-virtual-device client-sharded backend, vs the
+    retired hand-rolled loop's recorded per-round cost (subprocess — the
+    device count is locked at first jax init here)."""
+    import subprocess
+    import sys
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax
+from repro.core.rounds import VmapReducer, _engine_jit
+from repro.fed import bldnn as B
+from repro.exp import build_problem, get_experiment
+
+exp = get_experiment("fig-dnn")
+prob = build_problem(exp.problem)
+cfg = B.BLDNNConfig(lr=0.05, top_k_frac=0.1)
+STEPS = 40
+
+from repro.core.basis import per_layer_svd_basis
+spec = B.build_spec(prob.loss_fn, prob.eval_fn, prob.params0, cfg)
+basis = per_layer_svd_basis(prob.params0)
+keys = jax.random.split(jax.random.PRNGKey(0), STEPS)
+
+def scan_run():
+    jax.block_until_ready(_engine_jit(
+        spec, VmapReducer(n=prob.n), prob.batch, basis, prob.params0, keys))
+
+def e2e(backend):
+    return lambda: B.run_bldnn(prob.loss_fn, prob.eval_fn, prob.params0,
+                               prob.batch, STEPS, cfg, backend=backend)
+
+for name, fn in (("scan_only", scan_run), ("fast", e2e("fast")),
+                 ("sharded", e2e("fast+sharded"))):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        fn()
+    print(f"RESULT {name} {(time.perf_counter() - t0) / 3 / STEPS * 1e6:.1f}")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, timeout=900, env=env)
+    res = {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT"):
+            _, name, us = line.split()
+            res[name] = float(us)
+    if set(res) != {"scan_only", "fast", "sharded"}:
+        raise RuntimeError(proc.stdout + proc.stderr[-2000:])
+    speedup = _FED_DNN_LEGACY_US / res["scan_only"]
+    return [
+        ("fed_dnn_engine_scan", res["scan_only"],
+         f"per_round;old_loop_us={_FED_DNN_LEGACY_US:.0f}"
+         f";speedup_vs_old_loop={speedup:.2f}x",
+         {"old_loop_us_per_round": _FED_DNN_LEGACY_US,
+          "speedup_vs_old_loop": speedup}),
+        ("fed_dnn_engine_e2e", res["fast"],
+         "per_round;includes_trajectory_eval"),
+        ("fed_dnn_engine_sharded_8dev", res["sharded"],
+         f"per_round;overhead_vs_fast={res['sharded'] / res['fast']:.2f}x"
+         ";bitwise_equal_histories"),
+    ]
 
 
 @bench("engine_sharded")

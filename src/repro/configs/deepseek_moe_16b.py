@@ -2,8 +2,8 @@
 
 28L, d_model 2048, 16 heads (MHA: kv=16), 64 routed experts top-6 with
 d_expert=1408 + 2 shared experts, vocab 102400.  The source model's first
-layer is a dense MLP; we keep all layers MoE for scan homogeneity (noted in
-DESIGN.md — parameter count matches within 2%).
+layer is a dense MLP; we keep all layers MoE for scan homogeneity
+(parameter count matches within 2%).
 """
 from repro.models.config import LayerSpec, ModelConfig, MoEConfig
 

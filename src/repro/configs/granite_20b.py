@@ -1,7 +1,8 @@
 """Granite-20B code [arXiv:2405.04324] — GPT-BigCode-style dense, MQA (kv=1).
 
 52L, d_model 6144, 48 heads, kv=1, d_ff 24576 (non-gated GELU MLP),
-vocab 49152.  Pure full attention ⇒ long_500k skipped (DESIGN.md).
+vocab 49152.  Pure full attention ⇒ long_500k skipped
+(`launch/shapes.py::shape_applicable`).
 """
 from repro.models.config import LayerSpec, ModelConfig
 

@@ -3,8 +3,8 @@
 48L, d_model 5120, 40 heads (kv=8), 128 routed experts top-1 + 1 shared
 expert (d_expert 8192), interleaved with dense layers (d_ff 16384) every
 other layer — the interleave matches the model card's 400B total / 17B
-active; a uniform all-MoE reading of the flat config would give ~770B
-(DESIGN.md).  Early-fusion multimodality enters through the stubbed prefix
+active; a uniform all-MoE reading of the flat config would give ~770B.
+Early-fusion multimodality enters through the stubbed prefix
 embeddings (text-only token path exercised here).
 """
 from repro.models.config import LayerSpec, ModelConfig, MoEConfig

@@ -27,6 +27,11 @@ under string names and built per-fleet with `make_bases(name, clients,
   * ``dct``         — fixed orthogonal DCT-II basis: same rotation machinery
                       as ``eigen`` but *conventional* — both sides generate
                       it, zero shipment cost.
+  * ``per_layer_svd`` — the *pytree* basis (BL-DNN): per-2-D-weight complete
+                      SVD rotations of a parameter tree's initialization,
+                      shipped once like ``eigen``.  Registered with
+                      ``pytree=True`` — it transforms parameter pytrees,
+                      not d×d matrices (see `PerLayerSVDBasis`).
 
 For DataOuterBasis, coefficient matrices are r×r embedded in the top-left of
 a d×d array padded with exact zeros, so the same compressor machinery
@@ -229,6 +234,91 @@ class DCTBasis(RotationBasis):
         super().__init__(Q=jnp.asarray(C.T))  # columns = DCT basis vectors
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PerLayerSVDBasis:
+    """Pytree basis for DNN parameter trees (the BL-DNN layer, §2.3 carried
+    beyond the paper): every 2-D weight leaf gets a COMPLETE orthogonal
+    basis (U_ℓ, V_ℓ) from the SVD of its initialization — the weight matrix
+    plays the data-matrix role — and its gradient is communicated as the
+    rotated coefficients U_ℓᵀ g V_ℓ.  Non-matrix leaves (biases, norms)
+    pass through unrotated.
+
+    Unlike the d×d `MatrixBasis` classes this operates on whole parameter
+    *pytrees*: `rotate`/`unrotate` are leaf-aligned maps, and leaves may
+    carry a leading client axis (the round engine's (n, ...) stacks) — the
+    rotations broadcast over it.  The basis is fleet-global (every client
+    derives it from the shared initialization), so the engine replicates it
+    across the client mesh instead of sharding it (`MethodSpec.
+    basis_replicated`).
+
+    Completeness matters: `full_matrices=True` in the construction — a
+    truncated V would silently project out every gradient component outside
+    the weight's row space.
+    """
+
+    #: per-leaf entries ordered like ``jax.tree.leaves(params)``:
+    #: ``(U, V)`` for rotated 2-D leaves, ``None`` for pass-through leaves.
+    UV: tuple
+
+    def tree_flatten(self):
+        return (self.UV,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(UV=children[0])
+
+    def _map(self, fn, tree):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if len(leaves) != len(self.UV):
+            raise ValueError(
+                f"tree has {len(leaves)} leaves but basis covers "
+                f"{len(self.UV)} — built from a different parameter tree?")
+        return treedef.unflatten(
+            [leaf if uv is None else fn(uv[0], uv[1], leaf)
+             for uv, leaf in zip(self.UV, leaves)])
+
+    def rotate(self, tree):
+        """Leaf-wise forward transform U_ℓᵀ g V_ℓ (complete basis ⇒ the
+        coefficient tensor keeps the leaf's own shape).  Leaves may carry
+        leading batch/client axes — matrix products broadcast over them."""
+        return self._map(
+            lambda U, V, g: jnp.swapaxes(U, -1, -2) @ g.astype(U.dtype) @ V,
+            tree)
+
+    def unrotate(self, tree):
+        """Exact inverse of `rotate`: U_ℓ c V_ℓᵀ per rotated leaf."""
+        return self._map(
+            lambda U, V, c: U @ c @ jnp.swapaxes(V, -1, -2), tree)
+
+    def ship_floats(self) -> float:
+        """One-time basis shipment size in floats (Σ_ℓ |U_ℓ| + |V_ℓ| — the
+        Table-1 analogue; bill it on the ledger's ``basis_ship`` leg at the
+        shipping wire's float width)."""
+        return float(sum(uv[0].size + uv[1].size
+                         for uv in self.UV if uv is not None))
+
+
+def per_layer_svd_basis(params, use_basis: bool = True,
+                        min_dim: int = 2) -> PerLayerSVDBasis:
+    """Build the `PerLayerSVDBasis` of a parameter pytree's initialization.
+
+    Every 2-D leaf with both dims ≥ `min_dim` gets (U, V) from its full
+    SVD; everything else passes through.  ``use_basis=False`` returns the
+    identity basis (no rotations, zero shipment) — the no-basis control in
+    the basis-vs-compressor experiments.
+    """
+    out = []
+    for p in jax.tree_util.tree_leaves(params):
+        if use_basis and p.ndim == 2 and min(p.shape) >= min_dim:
+            u, _, vt = jnp.linalg.svd(p.astype(jnp.float32),
+                                      full_matrices=True)
+            out.append((u, vt.T))
+        else:
+            out.append(None)
+    return PerLayerSVDBasis(UV=tuple(out))
+
+
 def orth_basis_from_data(A_data: jax.Array, rcond: float = 1e-10) -> DataOuterBasis:
     """Orthonormal basis of the row space of the client's data matrix (m, d).
 
@@ -278,19 +368,35 @@ def basis_transmission_bits(basis: MatrixBasis, float_bits: int = FLOAT_BITS) ->
 # --------------------------------------------------------------------------
 BasisFactory = Callable[..., List[MatrixBasis]]
 BASIS_REGISTRY: Dict[str, BasisFactory] = {}
+#: names whose basis operates on parameter *pytrees* (e.g. ``per_layer_svd``)
+#: rather than d×d matrices — they take the parameter tree where matrix
+#: bases take the client fleet, and the d×d contract tests / benchmark
+#: grids skip them (see `is_pytree_basis`).
+PYTREE_BASES: set = set()
 
 
-def register_basis(name: str):
+def register_basis(name: str, *, pytree: bool = False):
     """Register a fleet-level basis factory ``factory(clients, x0=None,
-    **kw) -> List[MatrixBasis]`` under `name`."""
+    **kw) -> List[MatrixBasis]`` under `name`.
+
+    ``pytree=True`` marks a pytree-basis factory ``factory(params, x0=None,
+    **kw)`` (first argument is a parameter pytree, not a client list)."""
     def deco(factory: BasisFactory) -> BasisFactory:
         BASIS_REGISTRY[name] = factory
+        if pytree:
+            PYTREE_BASES.add(name)
         return factory
     return deco
 
 
 def available_bases() -> List[str]:
     return sorted(BASIS_REGISTRY)
+
+
+def is_pytree_basis(name: str) -> bool:
+    """True for registered bases that transform parameter pytrees (DNN
+    workloads) instead of d×d coefficient matrices."""
+    return name in PYTREE_BASES
 
 
 def make_bases(name: str, clients: Sequence, x0: Optional[jax.Array] = None,
@@ -300,18 +406,24 @@ def make_bases(name: str, clients: Sequence, x0: Optional[jax.Array] = None,
     Args:
       name: registry key (see `available_bases()`).
       clients: the client fleet (`glm.ClientData` sequence) — data-adaptive
-        bases derive their parameters from it.
+        bases derive their parameters from it.  For pytree bases
+        (`is_pytree_basis`) this is the parameter pytree instead (the
+        shared initialization every client derives the basis from).
       x0: initial iterate for bases anchored there (`eigen`); ignored by
         data-independent bases.
       **kw: factory-specific options (e.g. ``rcond`` for `data_outer`).
 
     Returns:
       One `MatrixBasis` per client (shared-object for global bases —
-      the batched engine exploits the identity).
+      the batched engine exploits the identity).  Pytree-basis factories
+      return the fleet-global basis object itself (e.g.
+      `PerLayerSVDBasis`), not a per-client list.
     """
     if name not in BASIS_REGISTRY:
         raise KeyError(
             f"unknown basis {name!r}; registered: {available_bases()}")
+    if name in PYTREE_BASES:
+        return BASIS_REGISTRY[name](clients, x0=x0, **kw)
     return BASIS_REGISTRY[name](list(clients), x0=x0, **kw)
 
 
@@ -351,3 +463,11 @@ def _eigen_bases(clients, x0=None):
 def _dct_bases(clients, x0=None):
     basis = DCTBasis(_fleet_d(clients))
     return [basis for _ in clients]
+
+
+@register_basis("per_layer_svd", pytree=True)
+def _per_layer_svd_bases(params, x0=None, use_basis: bool = True):
+    """Pytree basis of a DNN parameter tree (the BL-DNN workload): one
+    complete per-layer SVD rotation per 2-D weight, shared by the whole
+    fleet.  Shipment (Σ_ℓ |U_ℓ|+|V_ℓ| floats) bills on ``basis_ship``."""
+    return per_layer_svd_basis(params, use_basis=use_basis)

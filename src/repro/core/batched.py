@@ -99,18 +99,21 @@ def _stack_or_raise(clients, bases=None):
     return batch, basisb
 
 
-def _history(gaps, leds: comm.CommLedger) -> History:
-    """History from the engine's (gaps, per-leg ledger streams): `up_bits`
-    is the ledger's uplink total (hess + grad + basis shipment) so the
-    paper's x-axis is unchanged, and every leg stays inspectable in
-    `History.legs`."""
-    g = np.maximum(np.asarray(gaps), 0.0)
+def _history(evals, leds: comm.CommLedger) -> History:
+    """History from the engine's (eval streams, per-leg ledger streams):
+    `up_bits` is the ledger's uplink total (hess + grad + basis shipment)
+    so the paper's x-axis is unchanged, every leg stays inspectable in
+    `History.legs`, and any extra streams the spec's ``eval_streams``
+    emitted besides ``"gap"`` land in `History.metrics`."""
+    g = np.maximum(np.asarray(evals["gap"]), 0.0)
     legs = {name: list(map(float, np.asarray(getattr(leds, name))))
             for name in comm.CommLedger.LEGS}
+    metrics = {k: list(map(float, np.asarray(v)))
+               for k, v in evals.items() if k != "gap"} or None
     return History(list(map(float, g)),
                    list(map(float, np.asarray(leds.uplink))),
                    list(map(float, np.asarray(leds.model_down))),
-                   legs=legs)
+                   legs=legs, metrics=metrics)
 
 
 def _f_star(batch, x_star) -> jax.Array:
@@ -139,10 +142,10 @@ def _block_mode(basisb, comp) -> bool:
 def _run(spec, batch, basisb, x0, x_star, steps, seed, *, sharded,
          exact=True, stream=None):
     keys = jax.random.split(jax.random.PRNGKey(seed), steps)
-    gaps, leds = rounds.run_rounds(
+    evals, leds = rounds.run_rounds(
         spec, batch, basisb, x0, _f_star(batch, x_star), keys,
         sharded=sharded, exact=exact, stream=stream)
-    return _history(gaps, leds)
+    return _history(evals, leds)
 
 
 # ==========================================================================

@@ -64,6 +64,11 @@ class History:
     #: leg name (hess_up / grad_up / model_down / basis_ship) — populated by
     #: the batched engine's ledger; the reference loops leave it None.
     legs: Optional[Dict[str, List[float]]] = None
+    #: optional extra named evaluation streams beyond the gap (e.g. the
+    #: BL-DNN spec's per-round training ``loss``) — whatever the method
+    #: spec's ``eval_streams`` emitted besides ``"gap"``; None for GLM
+    #: methods.
+    metrics: Optional[Dict[str, List[float]]] = None
 
     def append(self, gap, up, down):
         self.gaps.append(float(max(gap, 0.0)))

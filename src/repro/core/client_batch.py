@@ -79,6 +79,49 @@ class ClientBatch:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
+class TreeBatch:
+    """Client-stacked batch for arbitrary-pytree workloads (BL-DNN).
+
+    The GLM engine's `ClientBatch` fixes the data layout to (A, b, λ); deep
+    networks instead carry whatever pytree their loss consumes.  `data` is
+    that pytree with every leaf stacked on a leading n_clients axis — the
+    round engine shards it over `CLIENT_AXIS` exactly like `ClientBatch`
+    (the shard_map in_spec is a per-leaf P(CLIENT_AXIS) prefix), and specs
+    see the local (n_local, ...) slice.  `n_clients` is static so the
+    driver can size reducers and meshes without touching device values.
+    """
+
+    data: object          # pytree; every leaf (n_clients, ...)
+    n_clients: int        # static
+
+    @property
+    def n(self) -> int:
+        return self.n_clients
+
+    def tree_flatten(self):
+        return (self.data,), (self.n_clients,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(data=children[0], n_clients=aux[0])
+
+
+def tree_batch(data, n_clients: Optional[int] = None) -> TreeBatch:
+    """Build a `TreeBatch`, validating the shared leading client axis."""
+    leaves = jax.tree_util.tree_leaves(data)
+    if not leaves:
+        raise ValueError("TreeBatch needs at least one data leaf")
+    n = leaves[0].shape[0] if n_clients is None else n_clients
+    for leaf in leaves:
+        if leaf.ndim < 1 or leaf.shape[0] != n:
+            raise ValueError(
+                f"every TreeBatch leaf needs a leading n_clients={n} axis; "
+                f"got shape {leaf.shape}")
+    return TreeBatch(data=data, n_clients=int(n))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
 class BatchedBasis:
     """A fleet-wide basis: one basis *kind*, per-client parameters stacked.
 

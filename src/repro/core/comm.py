@@ -94,6 +94,19 @@ def price(wire: WireTree, counts) -> jax.Array:
     )
 
 
+def with_float_bits(wire: WireTree, float_bits: int) -> WireTree:
+    """`wire` with every leg's per-float width replaced by `float_bits`,
+    recursing through composed (tuple) formats.
+
+    The GLM stack prices floats at the paper's 64-bit convention; workloads
+    whose tensors are genuinely narrower (the BL-DNN layer ships f32) remap
+    a compressor's declared wire with this instead of re-implementing its
+    count structure (index/entry widths are untouched)."""
+    if isinstance(wire, tuple):
+        return tuple(with_float_bits(w, float_bits) for w in wire)
+    return dataclasses.replace(wire, float_bits=float_bits)
+
+
 def _f64(x):
     return jnp.asarray(x, jnp.float64)
 

@@ -21,7 +21,7 @@ it exists for the op-by-op reference backend and tests; there is exactly
 one selection/quantization implementation per operator.
 
 |·|-Top-K selection (the batched engine's hot spot) is one shared routine,
-`_topk_keep_mask`, consumed by both `TopK` and `ComposedTopK`.  Its
+`topk_keep_mask`, consumed by both `TopK` and `ComposedTopK`.  Its
 threshold search runs on an f32 copy (XLA's CPU sort/top_k on f64 is ~75×
 slower) through one of two parity-pinned backends:
 
@@ -159,18 +159,26 @@ def _selection_threshold(a32: jax.Array, k: int) -> jax.Array:
     return vals[..., -1:]
 
 
-def _topk_keep_mask(v: jax.Array, k: int) -> jax.Array:
+def topk_keep_mask(v: jax.Array, k: int) -> jax.Array:
     """Boolean mask of the K largest-|v| entries along the last axis.
 
     Exactly K entries are kept per row: entries strictly above the f32
     threshold, then earliest-index entries inside the threshold tie group
     (sub-f32-ulp value differences inside the group are broken by index).
     Scatter-free on purpose: mask + `where` instead of `.at[idx].set`.
+
+    Public building block for Top-K-style selection outside the compressor
+    classes (exactly-k semantics, tie handling and the Pallas/XLA backend
+    switch in one place).
     """
     from repro.kernels.topk_threshold import keep_mask
 
     a32 = jnp.abs(v).astype(jnp.float32)
     return keep_mask(a32, _selection_threshold(a32, k), k)
+
+
+#: historical private name — new code should import `topk_keep_mask`.
+_topk_keep_mask = topk_keep_mask
 
 
 @dataclasses.dataclass(unsafe_hash=True)
@@ -192,7 +200,7 @@ class TopK(Compressor):
             iu = jnp.triu_indices(d)
             v = x[:, iu[0], iu[1]]                      # (n, T)
             kk = min(self.k, v.shape[1])
-            keep_tri = _topk_keep_mask(v, kk)
+            keep_tri = topk_keep_mask(v, kk)
             # gather the triangular mask back to the dense upper half
             # (static index map — no scatter)
             pos = jnp.zeros((d, d), jnp.int32).at[iu].set(
@@ -205,7 +213,7 @@ class TopK(Compressor):
             return out, comm.Counts(floats=c, indices=c)
         v = x.reshape(n, -1)
         kk = min(self.k, v.shape[1])
-        out = jnp.where(_topk_keep_mask(v, kk), v, 0.0).reshape(x.shape)
+        out = jnp.where(topk_keep_mask(v, kk), v, 0.0).reshape(x.shape)
         c = _full(n, kk)
         return out, comm.Counts(floats=c, indices=c)
 
@@ -358,7 +366,7 @@ class ComposedTopK(Compressor):
     Contractive (composition of a contraction with an unbiased op, scaled by
     1/(ω+1), remains a contraction — Qian et al. 2021).
 
-    Selection is the shared `_topk_keep_mask`; the kept values are compacted
+    Selection is the shared `topk_keep_mask`; the kept values are compacted
     to (n, K) slots by a cumsum scatter (index order), run through the inner
     compressor's own batched contract, and gathered back — no second Top-K
     implementation.
@@ -379,7 +387,7 @@ class ComposedTopK(Compressor):
         v = x.reshape(n, -1)
         kk = min(self.k, v.shape[1])
         keys = self._require_keys(keys, n)
-        mask = _topk_keep_mask(v, kk)
+        mask = topk_keep_mask(v, kk)
         slot = jnp.cumsum(mask, axis=-1) - 1            # target slot per kept
         slot = jnp.where(mask, slot, kk)                # park dropped at k
         rows = jnp.arange(n)[:, None]

@@ -8,12 +8,13 @@ into three pieces:
 
   1. **Combinators** — the shared round steps as small pure functions over
      client-stacked arrays: the compressed-shift recursion L ← L + αC(·−L)
-     (`shift_update`, also consumed by `repro.fed.bldnn`), Bernoulli
-     participation with the force-one-client fallback (`participation`),
-     the ξ gradient-refresh mask (`xi_mask`), the compressed model-stream
-     downlink (`downlink_broadcast`), and the §2.3 coefficient layouts
-     (`coeff_layout` — compact (n, r, r) blocks vs. full d×d) behind one
-     (target_at, recon, ridge) interface.
+     (`shift_update`; `tree_shift_update` maps it over parameter *pytrees*
+     for the BL-DNN coefficient layout, per-leaf aux records summed into
+     one ledger leg), Bernoulli participation with the force-one-client
+     fallback (`participation`), the ξ gradient-refresh mask (`xi_mask`),
+     the compressed model-stream downlink (`downlink_broadcast`), and the
+     §2.3 coefficient layouts (`coeff_layout` — compact (n, r, r) blocks
+     vs. full d×d) behind one (target_at, recon, ridge) interface.
 
   2. **Reducers** — the aggregation-backend axis.  All cross-client
      reductions (means/sums/maxes of Hessians, gradients, bit counts) go
@@ -85,6 +86,11 @@ class Reducer:
     def client_keys(self, key: jax.Array) -> jax.Array:
         """Per-client PRNG keys for this shard: (n_local, 2)."""
         return self.shard(jax.random.split(key, self.n))
+
+    def tree_mean(self, tree):
+        """`mean` mapped over a pytree of (n_local, ...) leaves — the
+        cross-client reduction for pytree coefficient streams (BL-DNN)."""
+        return jax.tree.map(self.mean, tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,6 +174,39 @@ def shift_update(compress: Callable, target: jax.Array, shift: jax.Array,
     return S, shift + alpha * S, aux
 
 
+def tree_shift_update(compress: Callable, target, shift,
+                      alpha: float) -> Tuple[object, object, tuple]:
+    """`shift_update` mapped over parameter *pytrees* (the BL-DNN layout):
+    one compressed-difference recursion per leaf, aux records kept per leaf.
+
+    Args:
+      compress: ``compress(i, delta) -> (dense, aux)`` — compresses leaf
+        ``i``'s client-stacked delta tensor.  The leaf index is a static
+        Python int, so callers can close over per-leaf compressors (Top-K
+        budgets scale with leaf size) and per-leaf PRNG keys.
+      target, shift: pytrees of identical structure; leaves are
+        client-stacked ``(n_local, ...)`` arrays.
+      alpha: shared shift learning rate.
+
+    Returns:
+      ``(S, new_shift, auxs)`` — two pytrees shaped like the inputs plus a
+      tuple of per-leaf aux records in leaf order (message `Counts` for the
+      core compressors; price each against its compressor's wire and sum
+      into ONE `comm.CommLedger` leg — per-leaf counts never grow their own
+      billing scheme).
+    """
+    t_leaves, treedef = jax.tree_util.tree_flatten(target)
+    s_leaves = jax.tree_util.tree_leaves(shift)
+    if len(t_leaves) != len(s_leaves):
+        raise ValueError(
+            f"target/shift leaf mismatch: {len(t_leaves)} vs {len(s_leaves)}")
+    outs = [shift_update(lambda d, i=i: compress(i, d), t, s, alpha)
+            for i, (t, s) in enumerate(zip(t_leaves, s_leaves))]
+    S = treedef.unflatten([o[0] for o in outs])
+    new_shift = treedef.unflatten([o[1] for o in outs])
+    return S, new_shift, tuple(o[2] for o in outs)
+
+
 def participation(R: Reducer, key: jax.Array, tau: int) -> jax.Array:
     """Bernoulli(τ/n) participation mask for this shard's clients, with the
     reference backend's force-one-client fallback (drawn fleet-wide from the
@@ -211,9 +250,10 @@ def global_grad(R: Reducer, batch, x: jax.Array) -> jax.Array:
     return R.mean(client_batch.grads(batch, x))
 
 # NOTE: there is deliberately no in-scan global_loss combinator — specs emit
-# evaluation iterates and the engine computes f(x)−f* outside the scan
-# (`_gap_stream`); an in-scan loss evaluation compiles differently under
-# shard_map and would break the cross-backend bitwise contract.
+# evaluation iterates and the engine evaluates the whole trajectory outside
+# the scan (`MethodSpec.eval_streams`, default `default_gap_stream`); an
+# in-scan loss evaluation compiles differently under shard_map and would
+# break the cross-backend bitwise contract.
 
 
 # ==========================================================================
@@ -282,9 +322,11 @@ class StreamHook:
     the cumulative per-leg `comm.CommLedger` at that round.  Emission is
     asynchronous host-side instrumentation only: the recorded `History`
     still comes from the full post-scan gap evaluation, so trajectories and
-    gap streams are unchanged by attaching a hook.  Only honoured on the
-    single-device backend — the sharded engine ignores hooks (a shard_map
-    callback would fire once per device with shard-local values).
+    gap streams are unchanged by attaching a hook.  Only supported on the
+    single-device backend — a shard_map callback would fire once per device
+    with shard-local values, so `run_rounds(sharded=True, stream=...)`
+    raises `ValueError` at dispatch instead of failing deep inside the
+    sharded scan.
 
     The hook is a *static* jit argument: each distinct hook instance
     compiles its own engine program (stream-less runs keep sharing the
@@ -331,8 +373,9 @@ _engine_jit = functools.partial(
 
 
 @jax.jit
-def _gap_stream(batch, xs_t, f_star):
-    """f(x_t) − f* for a whole (steps, d) trajectory in one vmapped pass.
+def default_gap_stream(batch, xs_t, f_star):
+    """f(x_t) − f* for a whole (steps, d) GLM trajectory in one vmapped
+    pass — the default `MethodSpec.eval_streams` evaluation.
 
     Shared by both aggregation backends — same program + bitwise-identical
     iterates ⇒ bitwise-identical gap histories."""
@@ -341,12 +384,18 @@ def _gap_stream(batch, xs_t, f_star):
 
 @functools.lru_cache(maxsize=None)
 def _sharded_engine(spec, R: ShardMapReducer, mesh):
-    """One jitted shard_map program per (spec, reducer, mesh) config."""
+    """One jitted shard_map program per (spec, reducer, mesh) config.
+
+    Specs with ``basis_replicated = True`` (pytree bases shared by the
+    whole fleet, e.g. BL-DNN's `PerLayerSVDBasis`) get a replicated basis
+    in_spec; the default shards the basis's leading client axis like the
+    data batch."""
     from jax.experimental.shard_map import shard_map
 
     from repro.sharding.rules import client_engine_specs
 
-    in_specs, out_specs = client_engine_specs()
+    in_specs, out_specs = client_engine_specs(
+        basis_replicated=getattr(spec, "basis_replicated", False))
     body = functools.partial(_engine, spec, R)
     return jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_rep=False))
@@ -356,7 +405,10 @@ def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
                sharded: bool = False, exact: bool = True,
                stream: "StreamHook | None" = None):
     """Run `steps = len(keys)` rounds of `spec` and return the history
-    streams ``(gaps, CommLedger-of-streams)`` — one per-leg bit stream per
+    streams ``(evals, CommLedger-of-streams)``: ``evals`` is the dict the
+    spec's ``eval_streams`` hook derives from the trajectory (always
+    containing ``"gap"``; pytree specs add extra named streams such as
+    ``"loss"``), the ledger carries one per-leg bit stream per
     `comm.CommLedger` leg.
 
     sharded=False → `VmapReducer` on the default device.
@@ -365,12 +417,18 @@ def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
     world still exercises the shard_map code path).
 
     stream — optional `StreamHook` emitting (round, eval_x, ledger) to the
-    host mid-scan (progress reporting for `repro.exp` sweeps).  Ignored on
-    the sharded backend (see `StreamHook`)."""
+    host mid-scan (progress reporting for `repro.exp` sweeps).  Raises
+    `ValueError` on the sharded backend (see `StreamHook`)."""
     if not sharded:
         xs_t, leds = _engine_jit(spec, VmapReducer(n=batch.n), batch,
                                  basisb, x0, keys, stream=stream)
     else:
+        if stream is not None:
+            raise ValueError(
+                "StreamHook is unsupported on the sharded backend: a "
+                "shard_map debug callback fires once per device with "
+                "shard-local values — run with sharded=False to stream "
+                "progress, or drop the hook (see rounds.StreamHook)")
         from repro.launch.mesh import make_client_mesh
 
         mesh, ndev = make_client_mesh(batch.n)
@@ -383,5 +441,5 @@ def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
 
         xs_t, leds = jax.tree.map(lambda a: jnp.asarray(np.asarray(a)),
                                   (xs_t, leds))
-    gaps = _gap_stream(batch, xs_t, f_star)
-    return gaps, leds
+    evals = spec.eval_streams(batch, xs_t, f_star)
+    return evals, leds

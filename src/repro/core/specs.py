@@ -30,6 +30,7 @@ that exists to demonstrate that a new method is a ~50-line spec.
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +46,7 @@ from .rounds import (
     global_grad,
     participation,
     shift_update,
+    tree_shift_update,
     xi_mask,
     xi_scalar,
 )
@@ -68,6 +70,11 @@ def _mv(Hb, xb):
 class MethodSpec:
     """Base hooks; subclasses are frozen dataclasses (static under jit)."""
 
+    #: True for specs whose basis is a fleet-global pytree with no client
+    #: axis (BL-DNN) — the sharded engine replicates it instead of sharding
+    #: its leading dimension over the client mesh.
+    basis_replicated = False
+
     def prepare(self, R: Reducer, batch, basisb, x0):
         return None
 
@@ -76,6 +83,19 @@ class MethodSpec:
 
     def step(self, R: Reducer, env, carry, key_t):
         raise NotImplementedError
+
+    def eval_streams(self, batch, xs_t, f_star):
+        """Post-scan evaluation of the whole trajectory: the ``xs_t`` the
+        spec's ``step`` emitted (stacked over rounds) → a dict of named
+        (steps,) streams, always containing ``"gap"`` (what `History.gaps`
+        records).  Runs OUTSIDE the scan in one shared program on every
+        aggregation backend — that is what keeps recorded histories
+        bitwise-identical across backends.  The default is the GLM
+        optimality gap f(x_t) − f*; pytree specs override (BL-DNN reports
+        training error rate plus a loss stream)."""
+        from .rounds import default_gap_stream
+
+        return {"gap": default_gap_stream(batch, xs_t, f_star)}
 
 
 # ==========================================================================
@@ -439,3 +459,130 @@ class FedNLBAGSpec(MethodSpec):
         # aggressive q would otherwise excite (η = 1 recovers FedNL when q = 1)
         z_n = z - self.eta * jnp.linalg.solve(proj_mu(H_n, self.mu), ghat)
         return (z_n, L_n, H_n, gtab_n, led), ys
+
+
+# ==========================================================================
+# BL-DNN — the paper's communication layer on parameter PYTREES
+# (the beyond-paper deep-network workload; see repro.fed.bldnn for the
+# public entry point, model builders and the experiment wiring)
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class BLDNNSpec(MethodSpec):
+    """Basis Learn + compressed-shift learning applied per layer of a DNN.
+
+    The same round skeleton as the GLM specs, with every array generalized
+    to a parameter *pytree* (leaves carry the engine's leading client
+    axis):
+
+      1. per-client gradients in the per-layer SVD basis (`env.basisb`, a
+         `basis.PerLayerSVDBasis`; None ⇒ standard basis) go through the
+         Alg. 1 shift recursion via `rounds.tree_shift_update` — one
+         compressor per leaf (Top-K budgets scale with leaf size), per-leaf
+         `Counts` priced and summed onto the ledger's ``grad_up`` leg;
+      2. the curvature stream: clients learn a per-parameter Fisher
+         diagonal (g², standard basis) through the identical recursion —
+         the FedNL Hessian-learning loop with diag(F) standing in for
+         ∇²f_i — billed on ``hess_up``; the server preconditions the
+         aggregated update with it;
+      3. the server step x ← x − lr·ĝ/(√F̂+ε) on the replicated params.
+
+    DNN tensors ship as f32, so every leg is priced through
+    `comm.with_float_bits(comp.wire, 32)` (index/entry widths untouched)
+    and the one-time (U_ℓ, V_ℓ) shipment bills 32 bits/float on
+    ``basis_ship``.
+
+    ``loss_fn(params, client_data) -> scalar`` is the per-client loss;
+    ``eval_fn(params, data) -> {"gap": ..., ...}`` produces the post-scan
+    evaluation streams (BL-DNN reports training error rate as the gap — so
+    the registered experiment's bits-to-tolerance IS bits-to-accuracy —
+    plus a ``"loss"`` stream).  Both are static spec fields: specs holding
+    different functions compile separate engine programs.
+    """
+
+    loss_fn: Callable
+    eval_fn: Callable
+    grad_comps: Tuple[Compressor, ...]
+    fisher_comps: Tuple[Compressor, ...]
+    alpha: float = 1.0            # shift learning rate (contractive ⇒ 1)
+    fisher_alpha: float = 0.1
+    lr: float = 1e-3
+    eps: float = 1e-2
+    precondition: bool = True
+
+    basis_replicated = True       # PerLayerSVDBasis is fleet-global
+
+    WIRE_FLOAT_BITS = 32          # DNN tensors are f32 on the wire
+
+    def _bill(self, comps, auxs):
+        """Per-client bits: per-leaf counts priced at the f32 wire, summed
+        across leaves (one ledger leg per stream, never per leaf)."""
+        return sum(
+            comm.price(comm.with_float_bits(c.wire, self.WIRE_FLOAT_BITS), a)
+            for c, a in zip(comps, auxs))
+
+    def init(self, R, env):
+        params = env.x0
+        stacked = lambda p: jnp.zeros((R.n_local,) + p.shape, jnp.float32)
+        shift = jax.tree.map(stacked, params)   # complete basis ⇒ coeff
+        fshift = jax.tree.map(stacked, params)  # shapes == param shapes
+        server_f = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+        ship = (0.0 if env.basisb is None
+                else env.basisb.ship_floats() * self.WIRE_FLOAT_BITS)
+        led0 = CommLedger.create(basis_ship=ship)
+        return (params, shift, fshift, server_f, led0)
+
+    def step(self, R, env, carry, key_t):
+        params, shift, fshift, server_f, led = carry
+        ys = (params, led)  # evaluated outside the scan (eval_streams)
+        data = env.batch.data                     # leaves (n_local, ...)
+        basis = env.basisb
+
+        # per-client gradients, rotated into the per-layer basis
+        g = jax.vmap(jax.grad(self.loss_fn), in_axes=(None, 0))(params, data)
+        coeff = g if basis is None else basis.rotate(g)
+
+        k_g, k_f = jax.random.split(key_t)
+        n_leaves = len(jax.tree_util.tree_leaves(params))
+        gks = jax.random.split(k_g, n_leaves)
+        S, shift_n, gauxs = tree_shift_update(
+            lambda i, delta: self.grad_comps[i].compress(
+                R.client_keys(gks[i]), delta),
+            coeff, shift, self.alpha)
+        # the server mirrors every client's recursion, so the aggregated
+        # gradient estimate is the fleet mean of the UPDATED shifts
+        coeff_mean = R.tree_mean(shift_n)
+        g_hat = coeff_mean if basis is None else basis.unrotate(coeff_mean)
+        gbits = self._bill(self.grad_comps, gauxs)
+
+        if self.precondition:
+            # the second-order leg: Fisher diagonal through the same
+            # recursion (diagonal curvature lives in the standard basis)
+            ftarget = jax.tree.map(lambda gi: gi.astype(jnp.float32) ** 2, g)
+            fks = jax.random.split(k_f, n_leaves)
+            Fc, fshift_n, fauxs = tree_shift_update(
+                lambda i, delta: self.fisher_comps[i].compress(
+                    R.client_keys(fks[i]), delta),
+                ftarget, fshift, self.fisher_alpha)
+            server_f_n = jax.tree.map(
+                lambda sf, fc: sf + self.fisher_alpha * R.mean(fc),
+                server_f, Fc)
+            update = jax.tree.map(
+                lambda gh, sf: gh / (jnp.sqrt(jnp.maximum(sf, 0.0)) + self.eps),
+                g_hat, server_f_n)
+            fbits = self._bill(self.fisher_comps, fauxs)
+        else:
+            fshift_n, server_f_n, update = fshift, server_f, g_hat
+            fbits = jnp.zeros((R.n_local,), jnp.float64)
+
+        params_n = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - self.lr * u).astype(p.dtype),
+            params, update)
+        led = led.add(grad_up=R.mean(gbits), hess_up=R.mean(fbits))
+        return (params_n, shift_n, fshift_n, server_f_n, led), ys
+
+    def eval_streams(self, batch, xs_t, f_star):
+        """Vmapped whole-trajectory evaluation of `eval_fn` (one shared
+        program on every backend); ``f_star`` is unused — DNN training has
+        no reference optimum, the gap stream is the training error rate."""
+        return jax.jit(jax.vmap(lambda p: self.eval_fn(p, batch.data)))(xs_t)

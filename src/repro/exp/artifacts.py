@@ -70,6 +70,18 @@ def cell_record(exp, cell, seed: int, steps: int, hist,
     if hist.legs is not None:
         legs = {name: [float(v) for v in hist.legs[name]]
                 for name in LEG_NAMES}
+    history = {
+        "gaps": [float(g) for g in hist.gaps],
+        "up_bits": [float(b) for b in hist.up_bits],
+        "down_bits": [float(b) for b in hist.down_bits],
+        "legs": legs,
+    }
+    if getattr(hist, "metrics", None):
+        # extra named eval streams (e.g. the BL-DNN loss curve) — the key
+        # is present only when the method emits them, so committed
+        # artifacts of stream-less methods keep their exact history shape
+        history["metrics"] = {k: [float(v) for v in vs]
+                              for k, vs in hist.metrics.items()}
     return {
         "schema": SCHEMA,
         "experiment": exp.name,
@@ -77,12 +89,7 @@ def cell_record(exp, cell, seed: int, steps: int, hist,
         "seed": seed,
         "config_digest": config_digest(config),
         "config": config,
-        "history": {
-            "gaps": [float(g) for g in hist.gaps],
-            "up_bits": [float(b) for b in hist.up_bits],
-            "down_bits": [float(b) for b in hist.down_bits],
-            "legs": legs,
-        },
+        "history": history,
         "bits_to_tol": {
             "tol": exp.tol,
             "mbits_per_node": (None if not b2t.reached else b2t.mbits),

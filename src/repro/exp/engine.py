@@ -30,7 +30,13 @@ from repro.core.basis import make_bases
 from repro.core.rounds import StreamHook
 
 from . import artifacts
-from .registry import CompressorCfg, Experiment, MethodCell, ProblemSpec
+from .registry import (
+    CompressorCfg,
+    DNNProblemSpec,
+    Experiment,
+    MethodCell,
+    ProblemSpec,
+)
 
 
 def build_compressor(cfg: CompressorCfg, d: int) -> compressors.Compressor:
@@ -88,9 +94,37 @@ class Problem:
         return self._bases[name]
 
 
+@dataclasses.dataclass
+class DNNProblem:
+    """A built `DNNProblemSpec`: client-stacked data, student init, and the
+    (stable, memoized) loss/eval closures — stable function identities keep
+    the engine's jit cache warm across cells and seeds."""
+
+    spec: DNNProblemSpec
+    batch: object                    # client_batch.TreeBatch
+    params0: object                  # parameter pytree
+    loss_fn: object
+    eval_fn: object
+
+    @property
+    def n(self) -> int:
+        return self.batch.n
+
+
 @functools.lru_cache(maxsize=None)
 def build_problem(spec: ProblemSpec) -> Problem:
-    """Materialize a `ProblemSpec` (memoized — figures share regimes)."""
+    """Materialize a `ProblemSpec` or `DNNProblemSpec` (memoized — figures
+    share regimes)."""
+    if isinstance(spec, DNNProblemSpec):
+        from repro.fed import bldnn
+
+        batch, params0 = bldnn.make_synthetic_classification(
+            seed=spec.seed, n_clients=spec.n_clients, m=spec.m, d=spec.d,
+            classes=spec.classes, width=spec.width, r=spec.r,
+            heterogeneity=spec.heterogeneity, label_noise=spec.label_noise)
+        return DNNProblem(spec=spec, batch=batch, params0=params0,
+                          loss_fn=bldnn.make_loss_fn(spec.classes),
+                          eval_fn=bldnn.make_eval_fn())
     if spec.kind == "table2":
         clients = glm.make_table2(spec.name, seed=spec.seed, lam=spec.lam)
     elif spec.kind == "synthetic":
@@ -114,7 +148,8 @@ def build_problem(spec: ProblemSpec) -> Problem:
 #: methods that accept a PRNG seed (the sweep seed is injected only here;
 #: newton/gd/local_gd are deterministic and take none)
 _SEEDED_METHODS = frozenset(
-    {"bl1", "bl2", "bl3", "fednl_bag", "nl1", "diana", "adiana", "dore"})
+    {"bl1", "bl2", "bl3", "fednl_bag", "nl1", "diana", "adiana", "dore",
+     "bldnn"})
 
 
 def _comp(cfg: Optional[CompressorCfg], d: int, what: str):
@@ -141,13 +176,33 @@ def run_cell(exp: Experiment, cell: MethodCell, prob: Problem, *,
       stream: optional mid-scan progress hook (BL methods, single-device
         backends only — see `repro.core.rounds.StreamHook`).
     """
-    n, d = prob.n, prob.d
     m = cell.method
     steps = cell.steps if steps is None else steps
     backend = cell.backend if backend is None else backend
     params = cell.params_dict()
     if seed is not None and m in _SEEDED_METHODS:
         params.setdefault("seed", seed)
+
+    if m == "bldnn":
+        from repro.fed import bldnn
+
+        if not isinstance(prob, DNNProblem):
+            raise ValueError(
+                f"cell {cell.name!r} needs a DNNProblemSpec problem")
+        if cell.hess_comp is None:
+            raise ValueError("bldnn cells configure the (gradient+Fisher) "
+                             "compressor via hess_comp")
+        run_seed = params.pop("seed", 0)
+        cfg = bldnn.BLDNNConfig(compressor=cell.hess_comp.kind,
+                                use_basis=cell.basis == "per_layer_svd",
+                                **params)
+        # "auto" on a DNN cell means the engine's single-device fast path
+        eng_backend = "fast" if backend == "auto" else backend
+        return bldnn.run_bldnn(prob.loss_fn, prob.eval_fn, prob.params0,
+                               prob.batch, steps, cfg, seed=run_seed,
+                               backend=eng_backend)
+
+    n, d = prob.n, prob.d
     clients, x0, xs = prob.clients, prob.x0, prob.x_star
 
     if m in ("bl1", "bl2", "bl3", "fednl_bag"):

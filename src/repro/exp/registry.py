@@ -22,6 +22,10 @@ Registered experiments (``available_experiments()``):
   * ``fig1-bag`` — FedNL + Bernoulli-lazy gradient aggregation
     (`specs.FedNLBAGSpec`, after arXiv 2206.03588) vs FedNL, giving the
     BAG follow-up a reproducible experiment path.
+  * ``fig-dnn``  — the BL-DNN deep-network workload (`DNNProblemSpec` +
+    method ``bldnn``) on the pytree round engine: bits-to-accuracy for
+    the per-layer SVD basis vs uncompressed FedAvg vs no-basis Top-K vs
+    stochastic RTop-K.
 
 New experiments register with ``@register_experiment`` and are picked up
 automatically by the CLI (``python -m repro.exp``), the registry
@@ -59,6 +63,29 @@ class ProblemSpec:
     lam: float = 1e-3
     newton_iters: int = 20
     solver: str = "loop"             # "loop" | "fused"
+
+
+@dataclasses.dataclass(frozen=True)
+class DNNProblemSpec:
+    """Problem regime for the BL-DNN deep-network workload (`fig-dnn`).
+
+    A teacher-labelled synthetic classification fleet whose inputs live in
+    a shared r-dimensional subspace (the §2.3 low-rank regime carried to a
+    DNN) plus a near-teacher student initialization — built by
+    `repro.fed.bldnn.make_synthetic_classification`.  A separate dataclass
+    from `ProblemSpec` on purpose: GLM fields (lam, newton_iters, solver)
+    don't apply, and existing artifact config digests stay untouched."""
+
+    kind: str = "dnn_synthetic"
+    seed: int = 0
+    n_clients: int = 8
+    m: int = 64                      # samples per client
+    d: int = 96                      # input features
+    classes: int = 4
+    width: int = 32                  # MLP hidden width
+    r: int = 8                       # intrinsic data rank (§2.3 analogue)
+    heterogeneity: float = 0.5
+    label_noise: float = 0.05
 
 
 @dataclasses.dataclass(frozen=True)
@@ -341,6 +368,39 @@ register_experiment(Experiment(
                    model_comp=_IDENT, backend="fast+sharded"),
     ),
     tags=("xl",),
+))
+
+# fig-dnn: the BL-DNN deep-network workload on the pytree round engine —
+# bits-to-accuracy for the paper's communication mechanism (per-layer SVD
+# basis + compressed-shift recursions + Fisher preconditioning) against an
+# uncompressed FedAvg baseline and the no-basis Top-K ablation, plus the
+# stochastic RTop-K codec (the gap stream is the training ERROR RATE, so
+# tol=0.1 makes bits-to-tolerance = bits to 90% train accuracy).
+_DNN = DNNProblemSpec()
+_DNN_TOPK = CompressorCfg(kind="topk")   # per-leaf k from top_k_frac param
+
+register_experiment(Experiment(
+    name="fig-dnn",
+    figure="extra",
+    title="BL-DNN bits-to-accuracy: SVD basis vs FedAvg vs no-basis Top-K "
+          "(beyond paper)",
+    paper_ref="§2.3 mechanism on a DNN (no paper counterpart)",
+    problem=_DNN,
+    tol=0.1,                             # error rate < 0.1 ⇔ 90% accuracy
+    cells=(
+        MethodCell("BLDNN", "bldnn", 40, basis="per_layer_svd",
+                   hess_comp=_DNN_TOPK,
+                   params=(("top_k_frac", 0.1), ("lr", 0.05))),
+        MethodCell("TopK", "bldnn", 40,
+                   hess_comp=_DNN_TOPK,
+                   params=(("top_k_frac", 0.1), ("lr", 0.05))),
+        MethodCell("RTopK", "bldnn", 40, basis="per_layer_svd",
+                   hess_comp=CompressorCfg(kind="rtopk"),
+                   params=(("top_k_frac", 0.1), ("lr", 0.05))),
+        MethodCell("FedAvg", "bldnn", 60,
+                   hess_comp=CompressorCfg(kind="identity"),
+                   params=(("lr", 0.5), ("precondition", False))),
+    ),
 ))
 
 # fig1-bag: FedNL-BAG (Bernoulli-lazy gradient aggregation, arXiv

@@ -1,8 +1,9 @@
 """BL-DNN: the paper's communication layer applied to deep-network training.
 
-This is the labelled BEYOND-PAPER extension (DESIGN.md §3): the paper's exact
-second-order method needs d×d Hessians, impossible for d ≥ 10⁹.  What *does*
-transfer is the communication mechanism, applied per layer:
+This is the labelled BEYOND-PAPER extension (docs/ARCHITECTURE.md §Layer 3):
+the paper's exact second-order method needs d×d Hessians, impossible for
+d ≥ 10⁹.  What *does* transfer is the communication mechanism, applied per
+layer:
 
   1. **Basis Learn** — every 2-D weight's update is communicated in a fixed
      per-layer orthogonal basis (U_ℓ, V_ℓ) from the SVD of the initialization
@@ -13,34 +14,274 @@ transfer is the communication mechanism, applied per layer:
   2. **Compressed-difference learning with shifts** (the L_i^k recursion of
      Alg. 1 applied to gradients): client i sends C(γ_i − L_i); both sides
      update L_i ← L_i + αC(·).  Contractive compressors use α = 1
-     (Assumption 4.6), unbiased ones α = 1/(ω+1) (Assumption 4.5).  The
-     recursion itself is the shared `repro.core.rounds.shift_update`
-     combinator — the same code the GLM round engine runs.
+     (Assumption 4.6), unbiased ones α = 1/(ω+1) (Assumption 4.5).
   3. **Curvature learning** (the second-order part): clients learn a
      per-parameter Fisher-diagonal estimate through the same compressed
      recursion; the server preconditions the aggregated update — the FedNL
      Hessian-learning loop with diag(F) standing in for ∇²f_i.
 
-Clients map onto the mesh's `data` axis via shard_map: one SPMD program; the
-psum of compressed-dense tensors plays the server aggregation.  Per-client
-state (shifts) carries a leading n_clients axis sharded over `data`.
+The method itself is `repro.core.specs.BLDNNSpec` running on the unified
+round engine (`repro.core.rounds`): per-client state is a parameter pytree
+with a leading client axis, the shift recursion is the shared
+`rounds.tree_shift_update` combinator, compressors come from the
+`repro.core.compressors` registry (one per leaf, so Top-K budgets scale
+with layer size — stochastic codecs like RTop-K work too), the basis is
+the registered ``per_layer_svd`` kind (`repro.core.basis`), and every leg
+bills onto the shared `comm.CommLedger` at the f32 wire.  Both aggregation
+backends run it: `VmapReducer` on a single device (no mesh needed) and
+`ShardMapReducer` with clients sharded over `CLIENT_AXIS` — bitwise
+identical histories (tests/test_fed.py).
+
+This module is the workload wiring: an MLP classifier assembled from
+`repro.models.layers`, a synthetic fine-tuning-style classification fleet,
+per-leaf compressor construction, and the public `run_bldnn` entry point
+the `fig-dnn` experiment (`repro.exp.registry`) dispatches to.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+import numpy as np
 
-from repro.core import comm
-from repro.core.compressors import _topk_keep_mask
-from repro.core.rounds import shift_update
-from repro.sharding.rules import CLIENT_AXIS
+from repro.core import batched, rounds, specs
+from repro.core.basis import PerLayerSVDBasis, make_bases
+from repro.core.bl import History
+from repro.core.client_batch import TreeBatch, tree_batch
+from repro.core.compressors import Compressor, Identity, TopK, rtopk
+from repro.models import layers as L
 
 Params = Dict[str, Any]
+
+_BACKENDS = ("fast", "fast+sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class BLDNNConfig:
+    """BL-DNN hyperparameters (one frozen config → one `BLDNNSpec`)."""
+
+    top_k_frac: float = 0.05       # per-leaf Top-K budget: k = ⌈frac·numel⌉
+    compressor: str = "topk"       # "topk" | "rtopk" | "identity"
+    alpha: float = 1.0             # shift learning rate (contractive ⇒ 1)
+    lr: float = 1e-3
+    precondition: bool = True
+    fisher_alpha: float = 0.1
+    eps: float = 1e-2
+    use_basis: bool = True
+
+
+# --------------------------------------------------------------------------
+# model: an MLP classifier assembled from the production layer library
+# --------------------------------------------------------------------------
+def init_mlp_classifier(key, d_in: int, width: int, classes: int,
+                        spectral_decay: float = 0.0,
+                        dtype=jnp.float32) -> Params:
+    """Input projection → `models.layers` MLP block → class head.
+
+    ``spectral_decay > 0`` re-spectralizes every 2-D weight to singular
+    values exp(−i/decay) (energy concentrated in the leading directions, as
+    pretrained-network weights are) — the regime where the per-layer SVD
+    basis has structure to exploit.  0 keeps the plain random init.
+    """
+    ks = jax.random.split(key, 3)
+    params = {
+        "in": L._init(ks[0], (d_in, width), d_in ** -0.5, dtype),
+        "mlp": L.init_mlp(ks[1], width, 2 * width, False, dtype),
+        "out": L._init(ks[2], (width, classes), width ** -0.5, dtype),
+    }
+    if spectral_decay > 0.0:
+        def respectralize(p):
+            if p.ndim != 2 or min(p.shape) < 2:
+                return p
+            u, s, vt = jnp.linalg.svd(p.astype(jnp.float32),
+                                      full_matrices=False)
+            snew = jnp.exp(-jnp.arange(s.shape[0]) / spectral_decay)
+            snew = snew * (jnp.linalg.norm(s) / jnp.linalg.norm(snew))
+            return ((u * snew) @ vt).astype(p.dtype)
+        params = jax.tree.map(respectralize, params)
+    return params
+
+
+def mlp_classifier_logits(params: Params, x: jax.Array) -> jax.Array:
+    """(B, d_in) features → (B, classes) logits."""
+    h = jnp.tanh(x @ params["in"])
+    # the production MLP block operates on (batch, seq, d) activations
+    h = h + L.mlp(params["mlp"], h[:, None, :], False, None)[:, 0, :]
+    return h @ params["out"]
+
+
+def make_loss_fn(classes: int):
+    """Per-client mean softmax cross-entropy: (params, {"x", "y"}) → scalar."""
+    del classes  # shapes carry it; kept for signature stability
+
+    def loss_fn(params, data):
+        logits = mlp_classifier_logits(params, data["x"])
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, data["y"][:, None],
+                                             axis=1))
+    return loss_fn
+
+
+def make_eval_fn():
+    """Fleet evaluation for `BLDNNSpec.eval_streams`: training error rate
+    (the ``gap`` stream — so bits-to-tolerance IS bits-to-accuracy) plus
+    the mean training loss as an extra ``loss`` stream."""
+
+    def eval_fn(params, data):
+        logits = jax.vmap(
+            lambda xb: mlp_classifier_logits(params, xb))(data["x"])
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, data["y"][..., None], axis=-1)
+        err = jnp.mean((jnp.argmax(logits, -1) != data["y"])
+                       .astype(jnp.float64))
+        return {"gap": err, "loss": jnp.mean(nll).astype(jnp.float64)}
+    return eval_fn
+
+
+# --------------------------------------------------------------------------
+# data: synthetic non-iid classification fleet (fine-tuning regime)
+# --------------------------------------------------------------------------
+def make_synthetic_classification(seed: int, n_clients: int, m: int, d: int,
+                                  classes: int, width: int, r: int = 8,
+                                  heterogeneity: float = 0.5,
+                                  label_noise: float = 0.05,
+                                  ) -> Tuple[TreeBatch, Params]:
+    """A teacher-labelled classification fleet plus a near-teacher student —
+    the §2.3 low-rank regime carried to a DNN.
+
+    Client inputs live EXACTLY in a shared r-dimensional subspace span(P)
+    (x = z Pᵀ, the DNN analogue of §2.3's "client rows span G_i"), so every
+    input-layer gradient xᵀδ has its row space inside span(P) while being
+    entrywise *dense* in standard coordinates.  The teacher's input layer
+    is subspace-aligned (W_in = P M — what training on such data produces)
+    and its deeper layers carry decaying spectra; the student is the
+    teacher plus 40% perturbation whose input-layer component stays in the
+    span.  Fine-tuning the student is therefore the regime BL-DNN targets:
+    the per-layer SVD basis of W_in concentrates the (dense-looking)
+    gradient into ~r·width leading coefficients, exactly as the paper's
+    data basis concentrates Hessian coefficients.  Clients are non-iid
+    (latent mean shifts scaled by `heterogeneity`); labels get
+    `label_noise` uniform flips.
+
+    Returns ``(batch, params0)``: the client-stacked `TreeBatch`
+    ``{"x": (n, m, d), "y": (n, m)}`` and the student parameter pytree.
+    """
+    rng = np.random.default_rng(seed)
+    kt, ks = jax.random.split(jax.random.PRNGKey(seed))
+    P, _ = np.linalg.qr(rng.standard_normal((d, r)))      # shared subspace
+    shifts = np.linspace(-1.0, 1.0, n_clients) * heterogeneity
+    z = rng.standard_normal((n_clients, m, r)) + shifts[:, None, None]
+    x = jnp.asarray(z @ P.T, jnp.float32)                 # rank-r rows
+
+    teacher = init_mlp_classifier(kt, d, width, classes, spectral_decay=8.0)
+    M = rng.standard_normal((r, width)) / np.sqrt(r)
+    teacher["in"] = jnp.asarray(P @ M, jnp.float32)       # subspace-aligned
+    logits = jax.vmap(lambda xb: mlp_classifier_logits(teacher, xb))(x)
+    y = np.asarray(jnp.argmax(logits, -1))
+    flip = rng.random((n_clients, m)) < label_noise
+    y = np.where(flip, rng.integers(0, classes, (n_clients, m)), y)
+    batch = tree_batch({"x": x, "y": jnp.asarray(y, jnp.int32)})
+
+    # student: 60% teacher + 40% perturbation — near the task but not at
+    # it (fine-tuning has work to do).  The input-layer perturbation stays
+    # in span(P) (a model pretrained on this data distribution never grew
+    # out-of-span input weights), so its SVD basis leads with span(P).
+    fresh = init_mlp_classifier(ks, d, width, classes)
+    fresh["in"] = jnp.asarray(P @ (P.T @ np.asarray(fresh["in"], np.float64)),
+                              jnp.float32)
+    student = jax.tree.map(lambda t, f: 0.6 * t + 0.4 * f, teacher, fresh)
+    return batch, student
+
+
+# --------------------------------------------------------------------------
+# per-leaf compressors + the public entry point
+# --------------------------------------------------------------------------
+def leaf_compressors(kind: str, frac: float,
+                     params: Params) -> Tuple[Compressor, ...]:
+    """One registry compressor per parameter leaf, Top-K budgets scaled to
+    the leaf: k_ℓ = max(1, ⌊frac·numel_ℓ⌋)."""
+    comps = []
+    for p in jax.tree_util.tree_leaves(params):
+        k = max(1, int(frac * p.size))
+        if kind == "identity":
+            comps.append(Identity())
+        elif kind == "topk":
+            comps.append(TopK(k=k))
+        elif kind == "rtopk":
+            comps.append(rtopk(k))
+        else:
+            raise ValueError(
+                f"unknown BL-DNN compressor kind {kind!r} "
+                "(expected identity | topk | rtopk)")
+    return tuple(comps)
+
+
+def build_spec(loss_fn, eval_fn, params: Params,
+               cfg: BLDNNConfig) -> specs.BLDNNSpec:
+    """`BLDNNSpec` for a parameter tree under one `BLDNNConfig`."""
+    comps = leaf_compressors(cfg.compressor, cfg.top_k_frac, params)
+    return specs.BLDNNSpec(
+        loss_fn=loss_fn, eval_fn=eval_fn,
+        grad_comps=comps, fisher_comps=comps,
+        alpha=cfg.alpha, fisher_alpha=cfg.fisher_alpha,
+        lr=cfg.lr, eps=cfg.eps, precondition=cfg.precondition)
+
+
+def run_bldnn(loss_fn, eval_fn, params0: Params, batch: TreeBatch,
+              steps: int, cfg: BLDNNConfig = BLDNNConfig(), *,
+              seed: int = 0, backend: str = "fast",
+              basis: Optional[PerLayerSVDBasis] = None) -> History:
+    """Train `steps` BL-DNN rounds on the unified round engine.
+
+    Args:
+      loss_fn: per-client loss ``(params, client_data) -> scalar``.
+      eval_fn: fleet metrics ``(params, stacked_data) -> {"gap", ...}``
+        (see `make_eval_fn`).
+      params0: replicated initial parameter pytree.
+      batch: client-stacked `TreeBatch` (leaves ``(n, ...)``).
+      steps: communication rounds.
+      cfg: hyperparameters; ``cfg.use_basis=False`` runs the standard
+        basis (no rotations, zero shipment).
+      seed: PRNG seed (stochastic compressors, per-round keys).
+      backend: ``"fast"`` (single-device `VmapReducer`) or
+        ``"fast+sharded"`` (clients over the mesh `CLIENT_AXIS`) — bitwise
+        identical histories.
+      basis: override the `per_layer_svd` basis (defaults to building it
+        from ``params0`` via the basis registry).
+
+    Returns:
+      `History` — ``gaps`` is the training error rate, ``metrics["loss"]``
+      the loss stream, ``legs`` the per-leg `CommLedger` bit streams
+      (gradient coefficients on ``grad_up``, the Fisher stream on
+      ``hess_up``, the one-time (U_ℓ, V_ℓ) shipment on ``basis_ship``).
+    """
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+    if cfg.use_basis and basis is None:
+        basis = make_bases("per_layer_svd", params0)
+    if not cfg.use_basis:
+        basis = None
+    spec = build_spec(loss_fn, eval_fn, params0, cfg)
+    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
+    evals, leds = rounds.run_rounds(
+        spec, batch, basis, params0, 0.0, keys,
+        sharded=(backend == "fast+sharded"))
+    return batched._history(evals, leds)
+
+
+# ==========================================================================
+# LEGACY hand-rolled shard_map loop — parity oracle only, deleted once the
+# engine path is pinned against it (tests/test_fed.py::test_legacy_parity)
+# ==========================================================================
+from typing import List                                      # noqa: E402
+from jax.sharding import PartitionSpec as P                  # noqa: E402
+from jax.experimental.shard_map import shard_map             # noqa: E402
+from repro.core import comm                                  # noqa: E402
+from repro.core.compressors import topk_keep_mask            # noqa: E402
+from repro.core.rounds import shift_update                   # noqa: E402
+from repro.sharding.rules import CLIENT_AXIS                 # noqa: E402
 
 #: BL-DNN communicates f32 tensors — one wire format, priced by the shared
 #: comm layer (no hand-kept bit math in the training step).
@@ -48,7 +289,7 @@ WIRE_F32 = comm.WireFormat(float_bits=32)
 
 
 @dataclasses.dataclass(frozen=True)
-class BLDNNConfig:
+class LegacyBLDNNConfig:
     top_k_frac: float = 0.05
     alpha: float = 1.0             # shift learning rate (contractive ⇒ 1)
     lr: float = 1e-3
@@ -131,13 +372,13 @@ def _coeff_shape(p, basis):
 
 def _topk_dense(x, frac: float):
     """Keep exactly the k = ⌈frac·numel⌉ largest-|·| entries; ties broken by
-    index via the core `_topk_keep_mask` machinery (the old ≥-threshold mask
+    index via the core `topk_keep_mask` machinery (the old ≥-threshold mask
     kept extra entries on ties while billing only k).  Returns the compressed
     tensor and the ACTUAL number of nonzeros on the wire — exactly k unless
     some selected entries are themselves zero."""
     k = max(1, int(x.size * frac))
     v = x.reshape(-1)
-    out = jnp.where(_topk_keep_mask(v, k), v, 0.0).reshape(x.shape)
+    out = jnp.where(topk_keep_mask(v, k), v, 0.0).reshape(x.shape)
     return out, jnp.sum(out != 0).astype(jnp.float32)
 
 
@@ -151,7 +392,7 @@ def init_fed_state(params: Params, bases, n_clients: int) -> Dict[str, Any]:
     return {"shift": shift, "fisher_shift": fshift, "server_fisher": server_f}
 
 
-def make_fed_train_step(loss_fn, mesh, cfg: BLDNNConfig, bases, params_tree):
+def make_fed_train_step(loss_fn, mesh, cfg: LegacyBLDNNConfig, bases, params_tree):
     """fed_step(params, state, batch) → (params, state, metrics).
 
     loss_fn(params, batch) → scalar (computed on the client's batch shard).

@@ -4,7 +4,8 @@ Grid (B·H, Sq/bq, Sk/bk); the k-grid is innermost and sequential on TPU, so
 the running max / denominator / accumulator live in VMEM scratch across k
 steps.  Supports causal and sliding-window masking (mask-based: TPU grids are
 static, so fully-masked blocks are computed-and-masked rather than skipped —
-the roofline ratio in EXPERIMENTS.md quantifies that 2× causal overhead).
+the roofline ratio in README.md §EXPERIMENTS quantifies that 2× causal
+overhead).
 
 q: (BH, Sq, hd)   k, v: (BH, Sk, hd)   → o: (BH, Sq, hd)
 GQA is handled by the ops.py wrapper (q heads grouped, k/v broadcast by

@@ -5,7 +5,8 @@ BlockSpec tiling: (bm × bk) · (bk × bn) tiles staged through VMEM, f32
 accumulation in a VMEM scratch across the k-grid (TPU grids iterate the last
 dimension fastest and sequentially, so the scratch carries between k steps).
 Tile sizes default to 128/256 — MXU-aligned (multiples of 128) per the
-hardware-adaptation notes in DESIGN.md.  Validated on CPU via interpret=True.
+hardware-adaptation notes in docs/ARCHITECTURE.md (§Pallas switches).
+Validated on CPU via interpret=True.
 """
 from __future__ import annotations
 

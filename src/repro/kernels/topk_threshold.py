@@ -5,7 +5,7 @@ GPU Top-K implementations sort (or radix-select) the |values|; TPUs have no
 efficient global sort, and XLA's CPU fallback decomposes a partially-dead
 ``top_k`` into a full stable sort (~75× slower on the engine's d²
 coefficient arrays — the reason the XLA selection path needs
-``optimization_barrier``s, see `repro.core.compressors._topk_keep_mask`).
+``optimization_barrier``s, see `repro.core.compressors.topk_keep_mask`).
 This kernel instead finds, per row, the EXACT k-th largest |value| by a
 bitwise binary search over f32 bit patterns:
 

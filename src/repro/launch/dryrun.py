@@ -5,8 +5,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 For every (architecture × input shape) on the production mesh:
   jit(step).lower(*ShapeDtypeStructs).compile()
 then record memory_analysis(), cost_analysis() and the collective byte totals
-parsed from the optimized HLO — the raw material for EXPERIMENTS.md §Dry-run
-and the roofline in §Roofline.
+parsed from the optimized HLO — the raw material for the perf and roofline
+notes in README.md §EXPERIMENTS.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k

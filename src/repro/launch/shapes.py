@@ -36,7 +36,8 @@ SHAPES = {
 
 
 def shape_applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
-    """long_500k only for sub-quadratic archs (DESIGN.md §skips)."""
+    """long_500k only for sub-quadratic archs (skip rationale in each
+    config's docstring)."""
     if shape.name == "long_500k" and not cfg.subquadratic:
         return False, "pure full-attention arch: no sub-quadratic variant in source config"
     return True, ""

@@ -391,7 +391,7 @@ def _moe_expert_parallel(p, x, cfg: ModelConfig, rules) -> Tuple[jax.Array, jax.
     experts, computes, and the per-expert partial outputs combine with ONE
     (B_loc·S·D) psum over `model` — no token all-to-all / all-gather at all.
     Measured on deepseek-moe train_4k: collective bytes 405 GB → see
-    EXPERIMENTS.md §Perf."""
+    README.md §EXPERIMENTS."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 

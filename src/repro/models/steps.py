@@ -35,7 +35,8 @@ def _xent(logits: jax.Array, labels: jax.Array, rules) -> jax.Array:
 def make_fused_vocab_xent(cfg: ModelConfig, rules):
     """Vocab-parallel fused cross entropy (Megatron-style), custom_vjp.
 
-    Motivation (measured in the dry-run, see EXPERIMENTS.md): letting autodiff
+    Motivation (measured in the dry-run, see README.md §EXPERIMENTS): letting
+    autodiff
     differentiate `logits = h @ W; CE(logits)` makes XLA all-gather the full
     f32 (B, S, V) cotangent along the vocab shard (13.2 GB/device for mamba2
     train_4k) because it prefers gathering dlogits over an all-reduced dh.

@@ -1,8 +1,8 @@
 """Minimal production optimizers (pytree-based, shard-friendly).
 
 AdamW with configurable state dtype: f32 for ≤20B models; bf16 moments for
-the 70B+/MoE configs so optimizer state fits the v5e HBM budget (documented
-in DESIGN.md).  Master weights stay in the parameter dtype (bf16) with an
+the 70B+/MoE configs so optimizer state fits the v5e HBM budget.  Master
+weights stay in the parameter dtype (bf16) with an
 f32 update path, matching common large-scale TPU practice.
 """
 from __future__ import annotations

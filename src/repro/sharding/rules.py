@@ -1,7 +1,7 @@
 """Logical-axis sharding rules: one place that decides how every parameter,
 activation and cache tensor maps onto the (pod, data, model) mesh.
 
-Scheme (baseline, see EXPERIMENTS.md §Perf for hillclimbed variants):
+Scheme (baseline, see README.md §EXPERIMENTS for hillclimbed variants):
 
 * batch            → (pod, data)      (data parallelism)
 * attention heads, FFN hidden, MoE experts, vocab → model  (tensor/expert par.)
@@ -27,18 +27,24 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 CLIENT_AXIS = "data"
 
 
-def client_engine_specs():
+def client_engine_specs(basis_replicated: bool = False):
     """shard_map specs for the unified round engine's scan body.
 
     Positional layout is (batch, basisb, x0, keys): the client-stacked
-    pytrees (`ClientBatch`, `BatchedBasis`) shard their leading client
-    axis over CLIENT_AXIS; the server iterate and per-round PRNG keys are
+    pytrees (`ClientBatch`, `BatchedBasis`, `TreeBatch`) shard their
+    leading client axis over CLIENT_AXIS; the server iterate (a (d,)
+    vector or a whole parameter pytree) and per-round PRNG keys are
     replicated; the history streams — eval iterates plus the `CommLedger`
     pytree of per-leg bit streams — come back replicated (the second P()
     is a pytree prefix covering every ledger leg).
+
+    ``basis_replicated=True`` replicates the basis argument instead of
+    sharding it — pytree bases (`PerLayerSVDBasis`) are fleet-global with
+    no client axis to shard (specs opt in via
+    `MethodSpec.basis_replicated`).
     """
     sharded = P(CLIENT_AXIS)
-    return (sharded, sharded, P(), P()), (P(), P())
+    return (sharded, P() if basis_replicated else sharded, P(), P()), (P(), P())
 
 
 @dataclasses.dataclass

@@ -11,13 +11,22 @@ from repro.core import bl, client_batch, glm
 from repro.core.basis import (
     DCTBasis,
     EigenBasis,
+    PerLayerSVDBasis,
     available_bases,
     basis_transmission_bits,
+    is_pytree_basis,
     make_bases,
 )
 from repro.core.compressors import Identity, TopK
 
-EXPECTED = {"standard", "symmetric", "psd", "data_outer", "eigen", "dct"}
+EXPECTED = {"standard", "symmetric", "psd", "data_outer", "eigen", "dct",
+            "per_layer_svd"}
+
+
+def _matrix_bases():
+    """The d×d-contract bases (pytree bases transform parameter trees and
+    have their own contract tests in tests/test_fed.py)."""
+    return [n for n in available_bases() if not is_pytree_basis(n)]
 
 
 @pytest.fixture(scope="module")
@@ -30,8 +39,27 @@ def problem():
 
 def test_registry_contents():
     assert EXPECTED <= set(available_bases())
+    assert is_pytree_basis("per_layer_svd") and not is_pytree_basis("eigen")
     with pytest.raises(KeyError, match="unknown basis"):
         make_bases("warp", [])
+
+
+def test_per_layer_svd_registry_roundtrip():
+    """The pytree basis builds through the same `make_bases` registry door
+    and round-trips parameter trees exactly (its full contract tests live
+    with the BL-DNN layer in tests/test_fed.py)."""
+    import jax
+
+    params = {"w": jnp.asarray(np.random.default_rng(0)
+                               .standard_normal((12, 7)), jnp.float32),
+              "b": jnp.zeros((7,), jnp.float32)}
+    basis = make_bases("per_layer_svd", params)
+    assert isinstance(basis, PerLayerSVDBasis)
+    back = basis.unrotate(basis.rotate(params))
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    assert basis.ship_floats() == 12 * 12 + 7 * 7
 
 
 @settings(max_examples=8, deadline=None)
@@ -44,7 +72,7 @@ def test_roundtrip_every_registered_basis(problem, seed):
     d = 30
     S = rng.standard_normal((d, d))
     S = jnp.asarray((S + S.T) / 2)
-    for name in available_bases():
+    for name in _matrix_bases():
         bases = make_bases(name, clients, x0=x0)
         b = bases[0]
         if name == "data_outer":
@@ -74,7 +102,7 @@ def test_batched_kind_matches_per_client_ops(problem):
     rng = np.random.default_rng(7)
     A = rng.standard_normal((5, 30, 30))
     A = jnp.asarray((A + A.transpose(0, 2, 1)) / 2)
-    for name in available_bases():
+    for name in _matrix_bases():
         bases = make_bases(name, clients, x0=x0)
         bb = client_batch.stack_bases(bases)
         assert bb is not None, name

@@ -174,6 +174,20 @@ def test_stream_hook_fires_and_preserves_trajectory():
     assert h1.gaps == h0.gaps and h1.up_bits == h0.up_bits
 
 
+def test_stream_hook_raises_on_sharded_backend():
+    """StreamHook is single-device-only; attaching one under the
+    ShardMapReducer used to die obscurely deep inside shard_map — the
+    engine now refuses at dispatch with an actionable message."""
+    from repro.core.rounds import StreamHook
+
+    exp = get_experiment("fig1r1")
+    prob = build_problem(exp.problem)
+    hook = StreamHook(every=1, callback=lambda *_: None)
+    with pytest.raises(ValueError, match="sharded"):
+        run_cell(exp, exp.cell("BL1"), prob, steps=3,
+                 backend="fast+sharded", stream=hook)
+
+
 def test_bits_to_tol_reached_flag():
     class H:
         gaps = [1.0, 1e-3, 1e-9]

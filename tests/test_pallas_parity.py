@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from repro.core import bl, glm
 from repro.core.basis import orth_basis_from_data
-from repro.core.compressors import Identity, TopK, _topk_keep_mask, ntopk
+from repro.core.compressors import Identity, TopK, ntopk, topk_keep_mask
 
 clients = glm.make_synthetic(seed=0, n_clients=6, m=30, d=40, r=12, lam=1e-3)
 x0 = jnp.zeros(40, jnp.float64)
@@ -29,7 +29,7 @@ r = bases[0].r
 
 # raw selection: masks straight off the shared routine
 X = jnp.asarray(np.random.default_rng(3).standard_normal((6, 1600)))
-masks = [np.asarray(_topk_keep_mask(X, k)).tolist() for k in (1, 12, 144, 1600)]
+masks = [np.asarray(topk_keep_mask(X, k)).tolist() for k in (1, 12, 144, 1600)]
 
 # trajectories: deterministic Top-K (block §2.3 layout) and a stochastic
 # composed Top-K — both consume the one shared selection implementation

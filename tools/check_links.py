@@ -1,13 +1,22 @@
 #!/usr/bin/env python3
-"""Dead-relative-link checker for the repo's markdown docs.
+"""Dead-reference checker for the repo's markdown docs AND source files.
 
-    python tools/check_links.py README.md docs
+    python tools/check_links.py README.md docs src
 
-Scans the given markdown files (directories are walked for ``*.md``) for
-inline links/images ``[text](target)`` and verifies every *relative*
-target resolves to an existing file or directory (fragments are stripped;
+Markdown files (directories are walked for ``*.md``) are scanned for
+inline links/images ``[text](target)``: every *relative* target must
+resolve to an existing file or directory (fragments are stripped;
 ``http(s):``/``mailto:`` targets are skipped — this repo's CI is offline).
-Exits 1 listing every dead link.  Used by the CI docs job.
+
+Python files (directories are walked for ``*.py``) are scanned for
+doc-file references — any ``Foo.md`` / ``docs/Foo.md`` token in a
+docstring or comment — and each referenced markdown file must exist,
+resolved against the repo root (the directory holding ``tools/``) and the
+file's own directory.  This is what keeps docstrings from citing design
+docs that do not exist (a ``DESIGN.md`` cited by seven docstrings was
+never committed).
+
+Exits 1 listing every dead reference.  Used by the CI lint job.
 """
 from __future__ import annotations
 
@@ -19,14 +28,18 @@ import sys
 # rule that links inside backticks don't match the pattern anyway
 _LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 _SKIP = ("http://", "https://", "mailto:", "#")
+# a markdown-file token in python source: optional dir prefix + Name.md
+_MD_REF = re.compile(r"[\w][\w./-]*\.md\b")
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def md_files(paths):
+def source_files(paths):
     for p in paths:
         if os.path.isdir(p):
             for root, _dirs, files in os.walk(p):
                 for f in sorted(files):
-                    if f.endswith(".md"):
+                    if f.endswith((".md", ".py")):
                         yield os.path.join(root, f)
         else:
             yield p
@@ -47,19 +60,37 @@ def dead_links(md_path):
             yield line, target
 
 
+def dead_doc_refs(py_path):
+    """Markdown files referenced by a python file that do not exist —
+    resolved against the repo root and the file's own directory."""
+    if os.path.abspath(py_path) == os.path.abspath(__file__):
+        return  # this docstring's Foo.md examples are illustrative
+    base = os.path.dirname(os.path.abspath(py_path))
+    text = open(py_path, encoding="utf-8").read()
+    for m in _MD_REF.finditer(text):
+        ref = m.group(0)
+        if os.path.exists(os.path.join(_REPO_ROOT, ref)):
+            continue
+        if os.path.exists(os.path.join(base, ref)):
+            continue
+        line = text[: m.start()].count("\n") + 1
+        yield line, ref
+
+
 def main(argv):
     if not argv:
         print(__doc__)
         return 2
     bad = 0
-    for md in md_files(argv):
-        for line, target in dead_links(md):
-            print(f"{md}:{line}: dead link -> {target}")
+    for path in source_files(argv):
+        finder = dead_doc_refs if path.endswith(".py") else dead_links
+        for line, target in finder(path):
+            print(f"{path}:{line}: dead reference -> {target}")
             bad += 1
     if bad:
-        print(f"{bad} dead link(s)")
+        print(f"{bad} dead reference(s)")
         return 1
-    print("all relative links resolve")
+    print("all doc references resolve")
     return 0
 
 
