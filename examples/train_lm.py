@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data import make_batch_iterator
 from repro.models import model as M
@@ -53,30 +52,45 @@ def main():
     it = make_batch_iterator(cfg.vocab_size, args.seq + 1, args.batch, seed=0)
 
     if args.fed:
-        from repro.fed.bldnn import (BLDNNConfig, init_fed_state,
-                                     layer_bases_from_params, make_fed_train_step)
-        n_dev = len(jax.devices())
-        mesh = jax.make_mesh((n_dev,), ("data",))
-        fcfg = BLDNNConfig(lr=args.lr, top_k_frac=0.05)
-        bases = layer_bases_from_params(params)
-        state = init_fed_state(params, bases, n_dev)
+        # BL-DNN on the unified round engine: clients are a stacked
+        # (n_clients, B, S) TreeBatch scanned for --steps full-batch
+        # rounds (each client keeps one fixed local batch — the paper's
+        # full-batch federated setting); backend "fast+sharded" shards
+        # clients over however many devices divide the fleet.
+        from repro.core.client_batch import tree_batch
+        from repro.fed.bldnn import BLDNNConfig, run_bldnn
 
-        def loss_fn(p, batch):
-            tokens = batch["tokens"]
+        n_clients = max(len(jax.devices()), 2)
+        args.steps = max(args.steps, 2)   # ≥1 round + a comparison point
+        fcfg = BLDNNConfig(lr=args.lr, top_k_frac=0.05)
+        batch = tree_batch(
+            jax.tree.map(lambda *bs: jnp.stack(bs),
+                         *[next(it) for _ in range(n_clients)]))
+
+        def loss_fn(p, data):
+            tokens = data["tokens"]
             h, _, aux = M.forward(p, cfg, None, tokens[:, :-1],
                                   remat=False, return_hidden=True)
             from repro.models.steps import make_fused_vocab_xent
             return make_fused_vocab_xent(cfg, None)(
                 h, p["unembed"], tokens[:, 1:]) + aux
 
-        step = jax.jit(make_fed_train_step(loss_fn, mesh, fcfg, bases, params))
+        def eval_fn(p, data):
+            losses = jax.vmap(lambda d: loss_fn(p, d))(data)
+            return {"gap": jnp.mean(losses)}
+
+        backend = "fast+sharded" if len(jax.devices()) > 1 else "fast"
         t0 = time.time()
-        for i in range(args.steps):
-            params, state, m = step(params, state, next(it))
-            if i % 10 == 0 or i == args.steps - 1:
-                print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
-                      f"floats/round {float(m['floats_sent'])/1e3:.0f}k  "
-                      f"({time.time()-t0:.0f}s)")
+        hist = run_bldnn(loss_fn, eval_fn, params, batch, args.steps, fcfg,
+                         backend=backend)
+        for i in range(0, len(hist.gaps), 10):
+            print(f"round {i:4d}  loss {hist.gaps[i]:.4f}")
+        print(f"final loss {hist.gaps[-1]:.4f}  "
+              f"uplink {hist.up_bits[-1]/1e6:.1f} Mbits/node  "
+              f"({time.time()-t0:.0f}s)")
+        # gaps[t] is the loss BEFORE round t's update — steps ≥ 2 above
+        # guarantees there is a later round to compare against
+        assert hist.gaps[-1] < hist.gaps[0], "loss must decrease"
         return
 
     opt = adamw_init(params)

@@ -1,1 +1,8 @@
-from .bldnn import BLDNNConfig, make_fed_train_step, layer_bases_from_params  # noqa: F401
+from .bldnn import (  # noqa: F401
+    BLDNNConfig,
+    init_mlp_classifier,
+    make_eval_fn,
+    make_loss_fn,
+    make_synthetic_classification,
+    run_bldnn,
+)

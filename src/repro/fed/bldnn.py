@@ -62,7 +62,7 @@ _BACKENDS = ("fast", "fast+sharded")
 class BLDNNConfig:
     """BL-DNN hyperparameters (one frozen config → one `BLDNNSpec`)."""
 
-    top_k_frac: float = 0.05       # per-leaf Top-K budget: k = ⌈frac·numel⌉
+    top_k_frac: float = 0.05       # per-leaf Top-K budget: k = max(1, ⌊frac·numel⌋)
     compressor: str = "topk"       # "topk" | "rtopk" | "identity"
     alpha: float = 1.0             # shift learning rate (contractive ⇒ 1)
     lr: float = 1e-3
@@ -270,217 +270,3 @@ def run_bldnn(loss_fn, eval_fn, params0: Params, batch: TreeBatch,
         sharded=(backend == "fast+sharded"))
     return batched._history(evals, leds)
 
-
-# ==========================================================================
-# LEGACY hand-rolled shard_map loop — parity oracle only, deleted once the
-# engine path is pinned against it (tests/test_fed.py::test_legacy_parity)
-# ==========================================================================
-from typing import List                                      # noqa: E402
-from jax.sharding import PartitionSpec as P                  # noqa: E402
-from jax.experimental.shard_map import shard_map             # noqa: E402
-from repro.core import comm                                  # noqa: E402
-from repro.core.compressors import topk_keep_mask            # noqa: E402
-from repro.core.rounds import shift_update                   # noqa: E402
-from repro.sharding.rules import CLIENT_AXIS                 # noqa: E402
-
-#: BL-DNN communicates f32 tensors — one wire format, priced by the shared
-#: comm layer (no hand-kept bit math in the training step).
-WIRE_F32 = comm.WireFormat(float_bits=32)
-
-
-@dataclasses.dataclass(frozen=True)
-class LegacyBLDNNConfig:
-    top_k_frac: float = 0.05
-    alpha: float = 1.0             # shift learning rate (contractive ⇒ 1)
-    lr: float = 1e-3
-    precondition: bool = True
-    fisher_alpha: float = 0.1
-    eps: float = 1e-2
-    use_basis: bool = True
-
-
-def _leaves(tree):
-    return jax.tree_util.tree_flatten(tree)[0]
-
-
-def _unflatten_like(tree, leaves):
-    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(tree), leaves)
-
-
-# --------------------------------------------------------------------------
-# Per-layer bases (shipped once — §2.3's "initial communication cost")
-# --------------------------------------------------------------------------
-def layer_bases_from_params(params: Params, use_basis: bool = True) -> List:
-    """List (ordered like tree leaves) of (U, V) per 2-D leaf, else None.
-
-    full_matrices=True: the basis must be a COMPLETE orthogonal basis of
-    R^{m×n} (the paper's requirement — a truncated V would silently project
-    out every gradient component outside the weight's row space)."""
-    out = []
-    for p in _leaves(params):
-        if use_basis and p.ndim == 2 and min(p.shape) >= 2:
-            u, _, vt = jnp.linalg.svd(p.astype(jnp.float32), full_matrices=True)
-            out.append((u, vt.T))
-        else:
-            out.append(None)
-    return out
-
-
-def basis_bits(bases) -> float:
-    """One-time basis shipping cost (floats)."""
-    total = 0.0
-    for b in bases:
-        if b is not None:
-            total += b[0].size + b[1].size
-    return total
-
-
-def init_comm_ledger(bases) -> comm.CommLedger:
-    """Fresh per-leg ledger with the one-time (U_ℓ, V_ℓ) shipment billed —
-    the same `CommLedger` the GLM round engine threads through its scan, so
-    BL-DNN runs report bits on the same axes (no separate billing scheme)."""
-    ship = comm.price(WIRE_F32, comm.Counts(floats=basis_bits(bases)))
-    return comm.CommLedger.create(basis_ship=ship)
-
-
-def accumulate_comm(ledger: comm.CommLedger, metrics) -> comm.CommLedger:
-    """Fold one fed_step's metrics into the ledger: basis-coefficient
-    gradients on the grad leg, the Fisher-diagonal (curvature) stream on the
-    hess leg."""
-    return ledger.add(grad_up=metrics["grad_up_bits"],
-                      hess_up=metrics["hess_up_bits"])
-
-
-def _rotate(g, basis):
-    if basis is None:
-        return g
-    U, V = basis
-    return U.T @ g.astype(jnp.float32) @ V
-
-
-def _unrotate(c, basis):
-    if basis is None:
-        return c
-    U, V = basis
-    return U @ c @ V.T
-
-
-def _coeff_shape(p, basis):
-    # complete basis ⇒ coefficient tensor has the parameter's own shape
-    return p.shape
-
-
-def _topk_dense(x, frac: float):
-    """Keep exactly the k = ⌈frac·numel⌉ largest-|·| entries; ties broken by
-    index via the core `topk_keep_mask` machinery (the old ≥-threshold mask
-    kept extra entries on ties while billing only k).  Returns the compressed
-    tensor and the ACTUAL number of nonzeros on the wire — exactly k unless
-    some selected entries are themselves zero."""
-    k = max(1, int(x.size * frac))
-    v = x.reshape(-1)
-    out = jnp.where(topk_keep_mask(v, k), v, 0.0).reshape(x.shape)
-    return out, jnp.sum(out != 0).astype(jnp.float32)
-
-
-def init_fed_state(params: Params, bases, n_clients: int) -> Dict[str, Any]:
-    """Shifts carry a leading n_clients axis (sharded over `data`)."""
-    pl = _leaves(params)
-    shift = [jnp.zeros((n_clients,) + _coeff_shape(p, b), jnp.float32)
-             for p, b in zip(pl, bases)]
-    fshift = [jnp.zeros((n_clients,) + p.shape, jnp.float32) for p in pl]
-    server_f = [jnp.zeros(p.shape, jnp.float32) for p in pl]
-    return {"shift": shift, "fisher_shift": fshift, "server_fisher": server_f}
-
-
-def make_fed_train_step(loss_fn, mesh, cfg: LegacyBLDNNConfig, bases, params_tree):
-    """fed_step(params, state, batch) → (params, state, metrics).
-
-    loss_fn(params, batch) → scalar (computed on the client's batch shard).
-    batch leaves sharded over `data`; params replicated; per-client shifts
-    sharded on their leading axis.
-    """
-    data_axis = CLIENT_AXIS
-    treedef = jax.tree_util.tree_structure(params_tree)
-    compress = lambda t: _topk_dense(t, cfg.top_k_frac)
-
-    def body(params, shift, fshift, server_f, batch):
-        # each shard: params replicated; shift (1, ...) per client; batch local
-        pl = _leaves(params)
-        g = jax.grad(loss_fn)(params, batch)
-        gl = _leaves(g)
-
-        new_shift, sent_g, sent_f = [], 0.0, 0.0
-        for gi, si, b in zip(gl, shift, bases):
-            coeff = _rotate(gi, b)
-            # shared Alg. 1 recursion: c = C(γ − L), L ← L + αc; the server
-            # aggregation below tracks the pmean of the updated shifts
-            _, s_new, k = shift_update(compress, coeff, si[0], cfg.alpha)
-            new_shift.append(s_new[None])
-            sent_g += k
-        shift_mean = [jax.lax.pmean(s[0], data_axis) for s in new_shift]
-        g_hat = [_unrotate(sm, b) for sm, b in zip(shift_mean, bases)]
-
-        if cfg.precondition:
-            new_fshift, f_server_new, update = [], [], []
-            for gi, fsi, sfi, gh in zip(gl, fshift, server_f, g_hat):
-                fl = gi.astype(jnp.float32) ** 2
-                # same recursion learning the Fisher diagonal
-                fc, fs_new, kf = shift_update(compress, fl, fsi[0],
-                                              cfg.fisher_alpha)
-                new_fshift.append(fs_new[None])
-                sent_f += kf
-                sf = sfi + cfg.fisher_alpha * jax.lax.pmean(fc, data_axis)
-                f_server_new.append(sf)
-                update.append(gh / (jnp.sqrt(jnp.maximum(sf, 0.0)) + cfg.eps))
-        else:
-            new_fshift = fshift
-            f_server_new = server_f
-            update = g_hat
-
-        new_pl = [
-            (p.astype(jnp.float32) - cfg.lr * u.reshape(p.shape)).astype(p.dtype)
-            for p, u in zip(pl, update)
-        ]
-        new_params = _unflatten_like(params, new_pl)
-        loss = jax.lax.pmean(loss_fn(params, batch), data_axis)
-        # counts are the ACTUAL per-client nonzero totals (data-dependent,
-        # differ per shard) — reduce to the fleet mean so the replicated
-        # out_spec P() is genuinely replicated on multi-device meshes
-        sent_g = jax.lax.pmean(jnp.asarray(sent_g, jnp.float32), data_axis)
-        sent_f = jax.lax.pmean(jnp.asarray(sent_f, jnp.float32), data_axis)
-        metrics = {
-            "loss": loss,
-            "floats_sent": sent_g + sent_f,
-            # per-leg bits priced by the shared comm layer (ledger legs:
-            # rotated-gradient coefficients → grad_up, Fisher diagonal →
-            # hess_up; fold into a CommLedger via `accumulate_comm`)
-            "grad_up_bits": comm.price(WIRE_F32, comm.Counts(floats=sent_g)),
-            "hess_up_bits": comm.price(WIRE_F32, comm.Counts(floats=sent_f)),
-        }
-        return (new_params, new_shift, new_fshift, f_server_new, metrics)
-
-    prepl = jax.tree.map(lambda _: P(), params_tree)
-
-    def fed_step(params, state, batch):
-        f = shard_map(
-            body, mesh=mesh,
-            in_specs=(prepl,
-                      [P(data_axis)] * len(state["shift"]),
-                      [P(data_axis)] * len(state["fisher_shift"]),
-                      [P()] * len(state["server_fisher"]),
-                      jax.tree.map(lambda _: P(data_axis), batch)),
-            out_specs=(prepl,
-                       [P(data_axis)] * len(state["shift"]),
-                       [P(data_axis)] * len(state["fisher_shift"]),
-                       [P()] * len(state["server_fisher"]),
-                       {"loss": P(), "floats_sent": P(),
-                        "grad_up_bits": P(), "hess_up_bits": P()}),
-            check_rep=False,
-        )
-        new_params, shift, fshift, server_f, metrics = f(
-            params, state["shift"], state["fisher_shift"],
-            state["server_fisher"], batch)
-        return new_params, {"shift": shift, "fisher_shift": fshift,
-                            "server_fisher": server_f}, metrics
-
-    return fed_step

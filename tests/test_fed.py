@@ -1,7 +1,9 @@
 """BL-DNN on the unified round engine: pytree basis contracts, per-leaf
 compressor budgets, single-device (VmapReducer) training with ledger
-billing, parity against the legacy hand-rolled shard_map loop, and
-cross-backend bitwise parity (vmap vs client-sharded shard_map)."""
+billing, and cross-backend bitwise parity (vmap vs client-sharded
+shard_map).  The pin against the legacy hand-rolled loop lives in the
+commit that introduced the engine path (see the note above
+MULTI_CLIENT_SCRIPT)."""
 import subprocess
 import sys
 
@@ -146,117 +148,62 @@ def test_no_basis_and_fedavg_controls(problem):
 
 
 # --------------------------------------------------------------------------
-# parity: the engine path vs the legacy hand-rolled shard_map loop
+# cross-backend parity
 # --------------------------------------------------------------------------
-def _legacy_trajectory(loss_fn, params0, client_data, cfg, steps):
-    """Per-round (pre-update) loss stream + param trajectory from the old
-    `make_fed_train_step` loop on a 1-device mesh (1 client)."""
-    mesh = jax.make_mesh((1,), ("data",))
-    lcfg = B.LegacyBLDNNConfig(
-        top_k_frac=cfg.top_k_frac, alpha=cfg.alpha, lr=cfg.lr,
-        precondition=cfg.precondition, fisher_alpha=cfg.fisher_alpha,
-        eps=cfg.eps, use_basis=cfg.use_basis)
-    bases = B.layer_bases_from_params(params0, use_basis=cfg.use_basis)
-    state = B.init_fed_state(params0, bases, 1)
-    step = jax.jit(B.make_fed_train_step(loss_fn, mesh, lcfg, bases, params0))
-    params, losses, traj = params0, [], []
-    for _ in range(steps):
-        traj.append(params)
-        params, state, m = step(params, state, client_data)
-        losses.append(float(m["loss"]))
-    return losses, traj
+# The legacy hand-rolled shard_map loop (fed.bldnn.make_fed_train_step) was
+# deleted after its parity pin: the commit introducing the engine path
+# carries a test pinning the BLDNNSpec per-round parameter trajectory
+# against the old loop (bitwise for the gradient-only config, ≤1e-6 for the
+# preconditioned one — the 1/(√F+ε) update amplifies last-ulp compile
+# differences).  What remains load-bearing forever is the cross-backend
+# contract below: VmapReducer and ShardMapReducer produce BITWISE-identical
+# histories.
 
 
-@pytest.mark.parametrize("cfg,steps,tol", [
-    # gradient leg only: the engine reproduces the legacy trajectory
-    # BITWISE (tol 0) over 12 rounds
-    (B.BLDNNConfig(lr=0.05, top_k_frac=0.1, precondition=False), 12, 0.0),
-    # with the Fisher/preconditioning leg the 1/(√F+ε) update amplifies
-    # last-ulp scan-vs-eager compile differences exponentially, so the pin
-    # is short-horizon ≤1e-6
-    (B.BLDNNConfig(lr=0.01, top_k_frac=0.1, precondition=True), 6, 1e-6),
-])
-def test_engine_matches_legacy_loop_single_client(problem, cfg, steps, tol):
-    """The promoted `BLDNNSpec` reproduces the legacy hand-rolled loop's
-    per-round parameter trajectory and loss stream (deterministic Top-K;
-    1 client, so fleet means are identities) — the pin that licenses
-    deleting the old path."""
-    from repro.core.client_batch import tree_batch
-    from repro.core.rounds import VmapReducer, _engine_jit
-
+def test_vmap_vs_shardmap_bitwise_single_device(problem):
+    """Even a 1-device world exercises the shard_map code path; histories
+    (error, loss, per-leg bits) must match the vmap backend bitwise."""
     batch, params0, loss_fn, eval_fn = problem
-    one = jax.tree.map(lambda a: a[:1], batch.data)
-    client_data = jax.tree.map(lambda a: a[0], one)
-
-    legacy_losses, legacy_traj = _legacy_trajectory(
-        loss_fn, params0, client_data, cfg, steps)
-
-    b1 = tree_batch(one)
-    spec = B.build_spec(loss_fn, eval_fn, params0, cfg)
-    basis = per_layer_svd_basis(params0)
-    keys = jax.random.split(jax.random.PRNGKey(0), steps)
-    xs_t, _leds = _engine_jit(spec, VmapReducer(n=1), b1, basis, params0,
-                              keys)
-
-    h = B.run_bldnn(loss_fn, eval_fn, params0, b1, steps, cfg,
+    cfg = B.BLDNNConfig(lr=0.05, top_k_frac=0.1)
+    h = B.run_bldnn(loss_fn, eval_fn, params0, batch, 10, cfg,
                     backend="fast")
-    np.testing.assert_allclose(h.metrics["loss"], legacy_losses,
-                               rtol=tol, atol=tol)
-    for t, ref in enumerate(legacy_traj):
-        got = jax.tree.map(lambda a, t=t: a[t], xs_t)
-        for ga, gb in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
-            np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
-                                       rtol=tol, atol=tol)
+    hs = B.run_bldnn(loss_fn, eval_fn, params0, batch, 10, cfg,
+                     backend="fast+sharded")
+    assert h.gaps == hs.gaps
+    assert h.metrics["loss"] == hs.metrics["loss"]
+    assert h.up_bits == hs.up_bits and h.legs == hs.legs
 
 
 MULTI_CLIENT_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
+import jax
 from repro.fed import bldnn as B
 
 batch, params0 = B.make_synthetic_classification(
     seed=0, n_clients=8, m=64, d=32, classes=4, width=48)
 loss_fn = B.make_loss_fn(4); eval_fn = B.make_eval_fn()
-cfg = B.BLDNNConfig(lr=0.05, top_k_frac=0.1)
 assert len(jax.devices()) == 8
 
-# engine: single-device vmap vs 8-device shard_map — BITWISE histories
-h = B.run_bldnn(loss_fn, eval_fn, params0, batch, 20, cfg, backend="fast")
-hs = B.run_bldnn(loss_fn, eval_fn, params0, batch, 20, cfg,
-                 backend="fast+sharded")
-assert h.gaps == hs.gaps, (h.gaps, hs.gaps)
-assert h.metrics["loss"] == hs.metrics["loss"]
-assert h.up_bits == hs.up_bits and h.down_bits == hs.down_bits
-assert h.gaps[-1] < h.gaps[0]
-
-# engine vs the legacy hand-rolled loop (1 client per device): per-round
-# loss stream parity to 1e-6 on the non-chaotic gradient-only config (the
-# preconditioned update amplifies last-ulp compile differences — see the
-# single-client parametrized pin)
-gcfg = B.BLDNNConfig(lr=0.05, top_k_frac=0.1, precondition=False)
-hg = B.run_bldnn(loss_fn, eval_fn, params0, batch, 20, gcfg, backend="fast")
-mesh = jax.make_mesh((8,), ("data",))
-lcfg = B.LegacyBLDNNConfig(top_k_frac=gcfg.top_k_frac, alpha=gcfg.alpha,
-                           lr=gcfg.lr, precondition=False)
-bases = B.layer_bases_from_params(params0)
-state = B.init_fed_state(params0, bases, 8)
-step = jax.jit(B.make_fed_train_step(loss_fn, mesh, lcfg, bases, params0))
-# the legacy loop shards a FLAT (n·B, ...) batch over the mesh (client i's
-# rows land on device i); the engine takes the client-stacked (n, B, ...)
-flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), batch.data)
-params, losses = params0, []
-for _ in range(20):
-    params, state, m = step(params, state, flat)
-    losses.append(float(m["loss"]))
-np.testing.assert_allclose(hg.metrics["loss"], losses, rtol=1e-6, atol=1e-6)
+# engine: single-device vmap vs 8-device shard_map — BITWISE histories,
+# for both the preconditioned and the gradient-only configurations
+for cfg in (B.BLDNNConfig(lr=0.05, top_k_frac=0.1),
+            B.BLDNNConfig(lr=0.05, top_k_frac=0.1, precondition=False)):
+    h = B.run_bldnn(loss_fn, eval_fn, params0, batch, 20, cfg,
+                    backend="fast")
+    hs = B.run_bldnn(loss_fn, eval_fn, params0, batch, 20, cfg,
+                     backend="fast+sharded")
+    assert h.gaps == hs.gaps, (h.gaps, hs.gaps)
+    assert h.metrics["loss"] == hs.metrics["loss"]
+    assert h.up_bits == hs.up_bits and h.down_bits == hs.down_bits
+    assert h.gaps[-1] < h.gaps[0]
 print("FED_ENGINE_PARITY_OK", h.gaps[0], "->", h.gaps[-1])
 """
 
 
 def test_engine_parity_eight_clients_subprocess():
-    """8 real devices: engine vmap-vs-sharded bitwise + legacy-loop loss
-    parity (subprocess because the device count locks at first jax init;
+    """8 real devices: engine vmap-vs-sharded histories are bitwise equal
+    (subprocess because the device count locks at first jax init;
     JAX_PLATFORMS pinned — an unpinned child burns minutes probing TPUs)."""
     r = subprocess.run([sys.executable, "-c", MULTI_CLIENT_SCRIPT],
                        capture_output=True, text=True, timeout=900,
