@@ -151,9 +151,12 @@ def _run(spec, batch, basisb, x0, x_star, steps, seed, *, sharded,
 # ==========================================================================
 # BL1 — Algorithm 1 (fast path)
 # ==========================================================================
-def bl1_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
-             alpha=1.0, eta=1.0, p=1.0, mu=None, seed=0,
-             init_exact_hessian=True, sharded=False, stream=None) -> History:
+# Each method has a `*_setup` (validate + stack the fleet, build the frozen
+# `MethodSpec` — everything static about a run) and a `*_fast` wrapper that
+# adds the batch driver.  The service loop (`repro.launch.fed_serve`) reuses
+# the setups with the chunked driver instead.
+def bl1_setup(clients, bases, hess_comp, model_comp, alpha=1.0, eta=1.0,
+              p=1.0, mu=None, init_exact_hessian=True):
     batch, basisb = _stack_or_raise(clients, bases)
     hc = _one_of(list(hess_comp), "hessian")
     _check_supported(model_comp)
@@ -165,6 +168,15 @@ def bl1_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
         basis_bits=basisb.transmission_bits_mean(),
         block=_block_mode(basisb, hc),
     )
+    return spec, batch, basisb
+
+
+def bl1_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
+             alpha=1.0, eta=1.0, p=1.0, mu=None, seed=0,
+             init_exact_hessian=True, sharded=False, stream=None) -> History:
+    spec, batch, basisb = bl1_setup(
+        clients, bases, hess_comp, model_comp, alpha=alpha, eta=eta, p=p,
+        mu=mu, init_exact_hessian=init_exact_hessian)
     return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded,
                 stream=stream)
 
@@ -172,9 +184,8 @@ def bl1_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
 # ==========================================================================
 # BL2 — Algorithm 2 (fast path)
 # ==========================================================================
-def bl2_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
-             alpha=1.0, eta=1.0, p=1.0, tau=None, seed=0,
-             init_exact_hessian=True, sharded=False, stream=None) -> History:
+def bl2_setup(clients, bases, hess_comp, model_comp, alpha=1.0, eta=1.0,
+              p=1.0, tau=None, init_exact_hessian=True):
     batch, basisb = _stack_or_raise(clients, bases)
     hc = _one_of(list(hess_comp), "hessian")
     mc = _one_of(list(model_comp), "model")
@@ -185,6 +196,15 @@ def bl2_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
         basis_bits=basisb.transmission_bits_mean(),
         block=_block_mode(basisb, hc),
     )
+    return spec, batch, basisb
+
+
+def bl2_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
+             alpha=1.0, eta=1.0, p=1.0, tau=None, seed=0,
+             init_exact_hessian=True, sharded=False, stream=None) -> History:
+    spec, batch, basisb = bl2_setup(
+        clients, bases, hess_comp, model_comp, alpha=alpha, eta=eta, p=p,
+        tau=tau, init_exact_hessian=init_exact_hessian)
     return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded,
                 stream=stream)
 
@@ -192,9 +212,8 @@ def bl2_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
 # ==========================================================================
 # BL3 — Algorithm 3 (fast path, PSD basis of Example 5.1)
 # ==========================================================================
-def bl3_fast(clients, hess_comp, model_comp, x0, x_star, steps, alpha=1.0,
-             eta=1.0, p=1.0, tau=None, c=1e-8, option=2, seed=0,
-             sharded=False, stream=None) -> History:
+def bl3_setup(clients, hess_comp, model_comp, alpha=1.0, eta=1.0, p=1.0,
+              tau=None, c=1e-8, option=2):
     batch, _ = _stack_or_raise(clients)
     hc = _one_of(list(hess_comp), "hessian")
     mc = _one_of(list(model_comp), "model")
@@ -202,7 +221,16 @@ def bl3_fast(clients, hess_comp, model_comp, x0, x_star, steps, alpha=1.0,
         hess_comp=hc, model_comp=mc, alpha=alpha, eta=eta, p=p,
         tau=batch.n if tau is None else tau, c=c, option=option,
     )
-    return _run(spec, batch, None, x0, x_star, steps, seed, sharded=sharded,
+    return spec, batch, None
+
+
+def bl3_fast(clients, hess_comp, model_comp, x0, x_star, steps, alpha=1.0,
+             eta=1.0, p=1.0, tau=None, c=1e-8, option=2, seed=0,
+             sharded=False, stream=None) -> History:
+    spec, batch, basisb = bl3_setup(
+        clients, hess_comp, model_comp, alpha=alpha, eta=eta, p=p, tau=tau,
+        c=c, option=option)
+    return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded,
                 stream=stream)
 
 
@@ -255,11 +283,8 @@ def newton_fast(clients, x0, x_star, steps,
     return _run(spec, batch, basisb, x0, x_star, steps, 0, sharded=sharded)
 
 
-def fednl_bag_fast(clients, bases, hess_comp, x0, x_star, steps, alpha=1.0,
-                   q=0.5, eta=None, mu=None, seed=0, init_exact_hessian=True,
-                   sharded=False) -> History:
-    """FedNL with Bernoulli gradient aggregation — see `specs.FedNLBAGSpec`.
-    eta defaults to q: damping matched to the aggregation probability."""
+def fednl_bag_setup(clients, bases, hess_comp, alpha=1.0, q=0.5, eta=None,
+                    mu=None, init_exact_hessian=True):
     batch, basisb = _stack_or_raise(clients, bases)
     hc = _one_of(list(hess_comp), "hessian")
     spec = specs.FedNLBAGSpec(
@@ -270,4 +295,15 @@ def fednl_bag_fast(clients, bases, hess_comp, x0, x_star, steps, alpha=1.0,
         basis_bits=basisb.transmission_bits_mean(),
         block=_block_mode(basisb, hc),
     )
+    return spec, batch, basisb
+
+
+def fednl_bag_fast(clients, bases, hess_comp, x0, x_star, steps, alpha=1.0,
+                   q=0.5, eta=None, mu=None, seed=0, init_exact_hessian=True,
+                   sharded=False) -> History:
+    """FedNL with Bernoulli gradient aggregation — see `specs.FedNLBAGSpec`.
+    eta defaults to q: damping matched to the aggregation probability."""
+    spec, batch, basisb = fednl_bag_setup(
+        clients, bases, hess_comp, alpha=alpha, q=q, eta=eta, mu=mu,
+        init_exact_hessian=init_exact_hessian)
     return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded)

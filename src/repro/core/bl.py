@@ -69,6 +69,10 @@ class History:
     #: spec's ``eval_streams`` emitted besides ``"gap"``; None for GLM
     #: methods.
     metrics: Optional[Dict[str, List[float]]] = None
+    #: optional per-round degradation-event bitmasks (`rounds.EVENT_*`,
+    #: OR-combined ints) — populated by the service loop
+    #: (`repro.launch.fed_serve`); the batch drivers leave it None.
+    events: Optional[List[int]] = None
 
     def append(self, gap, up, down):
         self.gaps.append(float(max(gap, 0.0)))

@@ -151,6 +151,23 @@ class CommLedger:
     def downlink(self) -> jax.Array:
         return self.model_down
 
+    def snapshot(self) -> dict:
+        """Host-side numpy dict of the per-leg counters, keyed by leg name
+        — the checkpointable form (`repro.exp.artifacts.save_checkpoint`
+        serializes it alongside the rest of the scan carry)."""
+        import numpy as np
+
+        return {leg: np.asarray(getattr(self, leg)) for leg in self.LEGS}
+
+    @classmethod
+    def restore(cls, snap: dict) -> "CommLedger":
+        """Rebuild a ledger from `snapshot()` output — the round-trip is
+        bitwise (f64 counters pass through numpy untouched)."""
+        missing = [leg for leg in cls.LEGS if leg not in snap]
+        if missing:
+            raise ValueError(f"ledger snapshot missing legs {missing}")
+        return cls(*(jnp.asarray(snap[leg]) for leg in cls.LEGS))
+
     def tree_flatten(self):
         return (self.hess_up, self.grad_up, self.model_down,
                 self.basis_ship), None

@@ -30,11 +30,26 @@ into three pieces:
          uses `lax.psum/pmean/pmax`, which is bandwidth-optimal but can
          differ in the last ulp (summation order).
 
-  3. **Driver** — one jitted `lax.scan` over rounds (`run_rounds`).  A
-     `MethodSpec` (see `repro.core.specs`) supplies `prepare/init/step`;
-     the driver never knows which algorithm it is running.  The sharded
-     backend wraps the same scan body in a single `shard_map` over the
-     client mesh, so a whole sharded trajectory is still one SPMD program.
+  3. **Drivers** — jitted `lax.scan`s over rounds.  A `MethodSpec` (see
+     `repro.core.specs`) supplies `prepare/init/step`; the drivers never
+     know which algorithm they are running.  Two entry points:
+
+       * `run_rounds`  — the batch driver: one scan over a fixed round
+         budget, histories come back at the end (the figure path).
+       * `run_chunk` / `init_serve_carry` — the *service-loop* driver: the
+         scan carry is an explicit input/output, rounds run in bounded
+         chunks so control returns to the host between chunks (fault
+         injection, checkpointing — see `repro.launch.fed_serve`).  Per-
+         round PRNG keys are ``fold_in(root_key, t)`` of the absolute round
+         index, so a trajectory is invariant to how rounds are batched into
+         chunks — the crash-safe bit-exact-resume contract.
+
+     The sharded backend wraps the same scan bodies in a single `shard_map`
+     over the client mesh, so a whole sharded trajectory (or chunk) is
+     still one SPMD program.  For the chunked driver the carry itself
+     crosses the shard_map boundary; `carry_client_flags` derives which
+     carry leaves are client-stacked (the carry serialization contract —
+     see `init_serve_carry`).
 """
 from __future__ import annotations
 
@@ -155,6 +170,35 @@ class ShardMapReducer(Reducer):
 
 
 # ==========================================================================
+# Round context + degradation events
+# ==========================================================================
+#: `History.events` bit flags (per-round int32 bitmask, OR-combined).
+EVENT_NONE = 0
+#: faults shrank the round's surviving cohort below its τ target
+EVENT_DEGRADED = 1
+#: the force-one-client fallback engaged (empty cohort after the draw/faults)
+EVENT_FORCED = 2
+#: no client was available at all — the round stalls (nothing participates)
+EVENT_ALL_DOWN = 4
+
+
+@dataclasses.dataclass
+class RoundCtx:
+    """Per-round traced context handed to `MethodSpec.step`.
+
+    ``key`` is the round's PRNG key (replicated), ``t`` the absolute
+    0-based round index, and ``avail`` an optional fleet-wide ``(n,)`` bool
+    availability mask from the fault-injection layer (`repro.core.faults`)
+    — ``None`` (the batch driver) means every client is reachable.
+    ``avail`` is *fleet-wide and replicated* like the participation draws;
+    spec code shards it through the `Reducer` where needed."""
+
+    key: jax.Array
+    t: jax.Array
+    avail: "jax.Array | None" = None
+
+
+# ==========================================================================
 # Round-step combinators
 # ==========================================================================
 def shift_update(compress: Callable, target: jax.Array, shift: jax.Array,
@@ -207,19 +251,60 @@ def tree_shift_update(compress: Callable, target, shift,
     return S, new_shift, tuple(o[2] for o in outs)
 
 
-def participation(R: Reducer, key: jax.Array, tau: int) -> jax.Array:
+def participation(R: Reducer, key: jax.Array, tau: int,
+                  avail: "jax.Array | None" = None
+                  ) -> Tuple[jax.Array, jax.Array]:
     """Bernoulli(τ/n) participation mask for this shard's clients, with the
     reference backend's force-one-client fallback (drawn fleet-wide from the
     replicated key, then sharded).
 
+    τ is validated statically: τ < 1 raises `ValueError` (a Bernoulli(0)
+    fleet would silently degenerate to the forced client every round) and
+    τ > n clamps to full participation (bitwise-harmless: Bernoulli(p) with
+    p ≥ 1 is always-true either way).
+
+    ``avail`` is an optional fleet-wide ``(n,)`` bool availability mask from
+    the fault layer (`RoundCtx.avail`): drawn participants that are down
+    this round are removed, and when the surviving cohort is empty the
+    fallback forces one *available* client instead.  ``avail`` of all-ones
+    reproduces the unmasked path bitwise (mask and fallback index alike).
+
+    Returns ``(mask, event)`` — the shard-local participation mask plus a
+    replicated int32 `EVENT_*` bitmask for the round (`EVENT_DEGRADED` when
+    faults pushed the cohort below τ, `EVENT_FORCED` when the fallback
+    engaged, `EVENT_ALL_DOWN` when no client was available and the round
+    stalls with an all-false mask).
+
     The mask and the fallback index come from SPLIT keys: reusing one key
     for both correlates the forced client with the mask draw (the reference
     backend mirrors this split, so parity stays bitwise)."""
+    tau = int(tau)
+    if tau < 1:
+        raise ValueError(
+            f"participation needs τ ≥ 1 expected clients per round, got "
+            f"τ={tau} — pass τ in [1, n] (τ=n is full participation)")
+    tau = min(tau, R.n)
     k_mask, k_idx = jax.random.split(key)
-    part = jax.random.bernoulli(k_mask, tau / R.n, (R.n,))
+    drawn = jax.random.bernoulli(k_mask, tau / R.n, (R.n,))
     idx = jax.random.randint(k_idx, (), 0, R.n)
-    part = part | (~part.any() & (jnp.arange(R.n) == idx))
-    return R.shard(part)
+    if avail is None:
+        forced = ~drawn.any() & (jnp.arange(R.n) == idx)
+        event = jnp.where(forced.any(), EVENT_FORCED, EVENT_NONE)
+        return R.shard(drawn | forced), event.astype(jnp.int32)
+    avail = jnp.asarray(avail, bool)
+    n_avail = jnp.sum(avail)
+    surviving = drawn & avail
+    n_surv = jnp.sum(surviving)
+    # fallback index rotated onto the available subset: with avail all-ones
+    # cumsum(avail) == idx+1 first holds exactly at position idx, so the
+    # masked path degenerates to the unmasked one bitwise
+    pick = avail & (jnp.cumsum(avail) == idx % jnp.maximum(n_avail, 1) + 1)
+    need_force = (n_surv == 0) & (n_avail > 0)
+    part = surviving | (need_force & pick)
+    event = (EVENT_DEGRADED * ((n_surv < jnp.sum(drawn)) & (n_surv < tau))
+             + EVENT_FORCED * need_force
+             + EVENT_ALL_DOWN * (n_avail == 0))
+    return R.shard(part), event.astype(jnp.int32)
 
 
 def xi_mask(R: Reducer, key: jax.Array, p: float) -> jax.Array:
@@ -347,7 +432,7 @@ def _engine(spec, R: Reducer, batch, basisb, x0, keys, stream=None):
 
     def step(carry, xt):
         t, key_t = xt
-        carry, ys = spec.step(R, env, carry, key_t)
+        carry, ys = spec.step(R, env, carry, RoundCtx(key=key_t, t=t))
         if stream is not None:
             # only ship (t, eval_x, ledger) to the host on emitting rounds
             jax.lax.cond(
@@ -358,7 +443,9 @@ def _engine(spec, R: Reducer, batch, basisb, x0, keys, stream=None):
 
     ts = jnp.arange(keys.shape[0])
     _, ys = jax.lax.scan(step, carry0, (ts, keys))
-    # ys = (eval_x (steps, d), CommLedger of (steps,) per-leg streams).
+    # ys = (eval_x (steps, d), CommLedger of (steps,) per-leg streams,
+    # events (steps,) int32 EVENT_* bitmasks — all-zero without a fault
+    # layer, so the batch path drops them).
     # Specs emit the round's evaluation iterate, not the gap: loss
     # evaluation is instrumentation, and computing it outside the scan
     # (a) vectorizes it over all rounds and (b) keeps the gap stream
@@ -420,20 +507,23 @@ def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
     host mid-scan (progress reporting for `repro.exp` sweeps).  Raises
     `ValueError` on the sharded backend (see `StreamHook`)."""
     if not sharded:
-        xs_t, leds = _engine_jit(spec, VmapReducer(n=batch.n), batch,
-                                 basisb, x0, keys, stream=stream)
+        xs_t, leds, _events = _engine_jit(spec, VmapReducer(n=batch.n), batch,
+                                          basisb, x0, keys, stream=stream)
     else:
         if stream is not None:
             raise ValueError(
-                "StreamHook is unsupported on the sharded backend: a "
+                "StreamHook is unsupported on the sharded aggregation "
+                "backend (ShardMapReducer, backend='fast+sharded'): a "
                 "shard_map debug callback fires once per device with "
-                "shard-local values — run with sharded=False to stream "
-                "progress, or drop the hook (see rounds.StreamHook)")
+                "shard-local values.  Run the cell on the single-device "
+                "backend (backend='fast') to stream progress, or disable "
+                "streaming (--progress-every 0).")
         from repro.launch.mesh import make_client_mesh
 
         mesh, ndev = make_client_mesh(batch.n)
         R = ShardMapReducer(n=batch.n, ndev=ndev, exact=exact)
-        xs_t, leds = _sharded_engine(spec, R, mesh)(batch, basisb, x0, keys)
+        xs_t, leds, _events = _sharded_engine(spec, R, mesh)(
+            batch, basisb, x0, keys)
         # outputs come back committed to the client mesh; rehome them so the
         # gap evaluation below is the same default-device program on every
         # backend (this is what makes the histories bitwise-comparable)
@@ -443,3 +533,154 @@ def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
                                   (xs_t, leds))
     evals = spec.eval_streams(batch, xs_t, f_star)
     return evals, leds
+
+
+# ==========================================================================
+# Chunked service-loop driver (repro.launch.fed_serve)
+# ==========================================================================
+def _with_client_dim(tree, n_new: int):
+    """Abstract (shape-only) copy of a client-stacked pytree with the
+    leading client axis resized — every leaf of `ClientBatch` /
+    `BatchedBasis` / `TreeBatch` carries the client axis first (static aux
+    like ``lam`` is not a leaf and survives unflattening untouched)."""
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((n_new,) + tuple(l.shape[1:]),
+                                       l.dtype), tree)
+
+
+def _init_body(spec, R: Reducer, batch, basisb, x0):
+    env = Env(batch=batch, basisb=basisb, x0=x0,
+              extra=spec.prepare(R, batch, basisb, x0))
+    return spec.init(R, env)
+
+
+_init_jit = functools.partial(jax.jit, static_argnames=("spec", "R"))(_init_body)
+
+
+def carry_client_flags(spec, batch, basisb, x0):
+    """Which carry leaves are client-stacked — the carry serialization /
+    sharding contract for the chunked driver.
+
+    Derived structurally, with no per-spec declarations: `spec.init` is
+    shape-evaluated twice (at n and at 2n clients) and exactly the leaves
+    whose shape moved carry the client axis.  This disambiguates d == n
+    coincidences and works for any spec the engine can run.  Returns a
+    bool pytree shaped like the carry."""
+    n = batch.n
+
+    def init_at(b, bb, nn):
+        return _init_body(spec, VmapReducer(n=nn), b, bb, x0)
+
+    s1 = jax.eval_shape(functools.partial(init_at, nn=n), batch, basisb)
+    b2 = _with_client_dim(batch, 2 * n)
+    bb2 = (basisb if basisb is None
+           or getattr(spec, "basis_replicated", False)
+           else _with_client_dim(basisb, 2 * n))
+    s2 = jax.eval_shape(functools.partial(init_at, nn=2 * n), b2, bb2)
+    return jax.tree.map(lambda a, b: a.shape != b.shape, s1, s2)
+
+
+def _flags_key(flags):
+    """Hashable (leaves, treedef) form of a carry-flags pytree — the cache
+    key for the per-(spec, reducer, mesh) sharded chunk programs."""
+    leaves, treedef = jax.tree_util.tree_flatten(flags)
+    return tuple(leaves), treedef
+
+
+def _chunk_body(spec, R: Reducer, batch, basisb, x0, carry, ts, root_key,
+                avail):
+    env = Env(batch=batch, basisb=basisb, x0=x0,
+              extra=spec.prepare(R, batch, basisb, x0))
+
+    def step(carry, xt):
+        t, avail_t = xt
+        rc = RoundCtx(key=jax.random.fold_in(root_key, t), t=t,
+                      avail=avail_t)
+        return spec.step(R, env, carry, rc)
+
+    return jax.lax.scan(step, carry, (ts, avail))
+
+
+_chunk_jit = functools.partial(
+    jax.jit, static_argnames=("spec", "R"))(_chunk_body)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_chunk_fns(spec, R: "ShardMapReducer", mesh, flags_key):
+    """Jitted shard_map (init, chunk) programs whose carry crosses the
+    shard_map boundary: client-stacked carry leaves shard over the mesh,
+    everything else is replicated (per `carry_client_flags`)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.rules import CLIENT_AXIS, client_chunk_specs
+
+    leaves, treedef = flags_key
+    carry_specs = jax.tree_util.tree_unflatten(
+        treedef, [P(CLIENT_AXIS) if f else P() for f in leaves])
+    in_specs, out_specs = client_chunk_specs(
+        carry_specs,
+        basis_replicated=getattr(spec, "basis_replicated", False))
+    init = jax.jit(shard_map(
+        functools.partial(_init_body, spec, R), mesh=mesh,
+        in_specs=in_specs[:3], out_specs=carry_specs, check_rep=False))
+    chunk = jax.jit(shard_map(
+        functools.partial(_chunk_body, spec, R), mesh=mesh,
+        in_specs=in_specs, out_specs=out_specs, check_rep=False))
+    return init, chunk
+
+
+def _serve_backend(spec, batch, basisb, x0, sharded: bool, exact: bool):
+    if not sharded:
+        R = VmapReducer(n=batch.n)
+        return (functools.partial(_init_jit, spec, R),
+                functools.partial(_chunk_jit, spec, R))
+    from repro.launch.mesh import make_client_mesh
+
+    mesh, ndev = make_client_mesh(batch.n)
+    R = ShardMapReducer(n=batch.n, ndev=ndev, exact=exact)
+    flags = carry_client_flags(spec, batch, basisb, x0)
+    init, chunk = _sharded_chunk_fns(spec, R, mesh, _flags_key(flags))
+    return init, chunk
+
+
+def init_serve_carry(spec, batch, basisb, x0, *, sharded: bool = False,
+                     exact: bool = True):
+    """The round-0 scan carry as an explicit (global) pytree — the state the
+    service loop checkpoints.  Its structure and leaf shapes/dtypes ARE the
+    carry serialization contract: `repro.exp.artifacts.save_checkpoint`
+    stores the flattened leaves and restore validates them against a fresh
+    `init_serve_carry` shape evaluation, so an incompatible spec change
+    fails loudly instead of resuming garbage."""
+    init, _ = _serve_backend(spec, batch, basisb, x0, sharded, exact)
+    return init(batch, basisb, x0)
+
+
+def run_chunk(spec, batch, basisb, x0, carry, t0: int, steps: int, root_key,
+              *, avail=None, sharded: bool = False, exact: bool = True):
+    """Run `steps` rounds starting at absolute round `t0` from an explicit
+    carry; returns ``(carry, (eval_x stream, CommLedger of per-leg streams,
+    events stream))`` with the new carry ready for the next chunk (or for a
+    checkpoint).
+
+    Per-round keys are ``fold_in(root_key, t)`` — a pure function of the
+    absolute round index — so a trajectory is invariant to chunk boundaries
+    and a run resumed from a checkpoint at any boundary is bit-exactly the
+    uninterrupted run.  ``avail`` is an optional ``(steps, n)`` bool
+    availability schedule from the fault layer (`repro.core.faults`); rows
+    reach specs as `RoundCtx.avail`.  An all-ones schedule (the default) is
+    bitwise-equivalent to no fault layer at all.
+
+    Chunk programs compile once per (spec, backend, chunk length); the
+    service loop reuses one length for every full chunk, so only a trailing
+    partial chunk costs a second compile."""
+    ts = jnp.arange(t0, t0 + steps)
+    if avail is None:
+        avail = jnp.ones((steps, batch.n), bool)
+    avail = jnp.asarray(avail, bool)
+    if avail.shape != (steps, batch.n):
+        raise ValueError(
+            f"avail schedule must be (steps, n) = ({steps}, {batch.n}), "
+            f"got {avail.shape}")
+    _, chunk = _serve_backend(spec, batch, basisb, x0, sharded, exact)
+    return chunk(batch, basisb, x0, carry, ts, root_key, avail)

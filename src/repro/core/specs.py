@@ -6,11 +6,15 @@ the method's hyperparameters and three hooks consumed by the engine driver:
   * ``prepare(R, batch, basisb, x0)`` — per-run traced precomputation
     (typically a `CoeffLayout`);
   * ``init(R, env)``                 — the scan carry at round 0;
-  * ``step(R, env, carry, key)``     — one round, returning
-    ``(carry, (eval_x, ledger))``: the iterate the round is evaluated at
-    plus the cumulative `comm.CommLedger` (the engine turns the eval_x
-    stream into f(x)−f* gaps outside the scan, and the ledger stream into
-    per-leg bit histories).
+  * ``step(R, env, carry, rc)``      — one round (``rc`` is a
+    `rounds.RoundCtx`: the round's PRNG key, the absolute round index and
+    the fault layer's optional availability mask), returning
+    ``(carry, (eval_x, ledger, event))``: the iterate the round is
+    evaluated at, the cumulative `comm.CommLedger`, and the round's int32
+    `rounds.EVENT_*` degradation bitmask (the engine turns the eval_x
+    stream into f(x)−f* gaps outside the scan, the ledger stream into
+    per-leg bit histories, and the event stream into `History.events` on
+    the service loop).
 
 Communication accounting is per-leg and declarative: compressors return
 message `Counts`, specs price them with ``comm.price(comp.wire, counts)``
@@ -40,6 +44,9 @@ from .bl import _psd_h_tilde, _psd_reconstruct_full, _psd_sum_matrix, proj_mu
 from .comm import FLOAT_BITS, CommLedger
 from .compressors import Compressor
 from .rounds import (
+    EVENT_ALL_DOWN,
+    EVENT_DEGRADED,
+    EVENT_NONE,
     Reducer,
     coeff_layout,
     downlink_broadcast,
@@ -75,13 +82,21 @@ class MethodSpec:
     #: its leading dimension over the client mesh.
     basis_replicated = False
 
+    #: True for specs whose round reacts to the fault layer's availability
+    #: mask (`RoundCtx.avail`): the partial-participation methods (BL2/BL3)
+    #: and the Bernoulli-lazy uplink (FedNL-BAG).  Specs modelling a fully
+    #: synchronous fleet leave this False and `repro.launch.fed_serve`
+    #: refuses to inject faults into them rather than silently ignoring
+    #: the schedule.
+    supports_faults = False
+
     def prepare(self, R: Reducer, batch, basisb, x0):
         return None
 
     def init(self, R: Reducer, env):
         raise NotImplementedError
 
-    def step(self, R: Reducer, env, carry, key_t):
+    def step(self, R: Reducer, env, carry, rc):
         raise NotImplementedError
 
     def eval_streams(self, batch, xs_t, f_star):
@@ -128,10 +143,11 @@ class BL1Spec(MethodSpec):
                                  basis_ship=self.basis_bits)
         return (x0, x0, L0, H0, grad_w0, jnp.asarray(True), led0)
 
-    def step(self, R, env, carry, key_t):
+    def step(self, R, env, carry, rc):
+        key_t = rc.key
         z, w, L, H, grad_w, xi, led = carry
         lay = env.extra
-        ys = (z, led)  # gap evaluated at z, outside the scan
+        ys = (z, led, jnp.int32(EVENT_NONE))  # gap evaluated at z, post-scan
 
         Hmu = proj_mu(H, self.mu)
         # gradient leg (both branches evaluated, selected by ξ)
@@ -174,6 +190,8 @@ class BL2Spec(MethodSpec):
     basis_bits: float
     block: bool
 
+    supports_faults = True        # partial participation absorbs dropouts
+
     def prepare(self, R, batch, basisb, x0):
         return coeff_layout(R, batch, basisb, x0, self.block)
 
@@ -190,7 +208,8 @@ class BL2Spec(MethodSpec):
                                  basis_ship=self.basis_bits)
         return (x0b, x0b, L0, Hi0, li0, gi0, led0)
 
-    def step(self, R, env, carry, key_t):
+    def step(self, R, env, carry, rc):
+        key_t = rc.key
         z, w, L, Hi, li, gi, led = carry
         batch = env.batch
         d = batch.d
@@ -204,7 +223,7 @@ class BL2Spec(MethodSpec):
         ys = (x_cur, led)  # gap evaluated at x_cur, outside the scan
 
         k_part, k_m, k_h, k_xi = jax.random.split(key_t, 4)
-        part = participation(R, k_part, self.tau)
+        part, pev = participation(R, k_part, self.tau, avail=rc.avail)
 
         # compressed model broadcast (participants only)
         z_n, dbits = downlink_broadcast(R, self.model_comp, k_m, z, x_cur,
@@ -233,7 +252,7 @@ class BL2Spec(MethodSpec):
         g_bits = jnp.where(xi, d * FLOAT_BITS, FLOAT_BITS + 1.0)
         led = led.add(hess_up=R.sum(jnp.where(part, sbits, 0.0)) / R.n,
                       grad_up=R.sum(jnp.where(part, g_bits, 0.0)) / R.n)
-        return (z_n, w_n, L_n, Hi_n, li_n, gi_n, led), ys
+        return (z_n, w_n, L_n, Hi_n, li_n, gi_n, led), (*ys, pev)
 
 
 # ==========================================================================
@@ -249,6 +268,8 @@ class BL3Spec(MethodSpec):
     tau: int
     c: float
     option: int
+
+    supports_faults = True        # partial participation absorbs dropouts
 
     def prepare(self, R, batch, basisb, x0):
         return _psd_sum_matrix(batch.d, x0.dtype)
@@ -269,7 +290,8 @@ class BL3Spec(MethodSpec):
             hess_up=(env.batch.d * (env.batch.d + 1) // 2) * FLOAT_BITS)
         return (x0b, x0b, x0b, L0, gam0, A0, C0, g1_0, g2_0, beta0, led0)
 
-    def step(self, R, env, carry, key_t):
+    def step(self, R, env, carry, rc):
+        key_t = rc.key
         z, w, zprev, L, gam, A_i, C_i, g1, g2, beta_i, led = carry
         batch = env.batch
         d = batch.d
@@ -284,7 +306,7 @@ class BL3Spec(MethodSpec):
         ys = (x_cur, led)  # gap evaluated at x_cur, outside the scan
 
         k_part, k_m, k_h, k_xi = jax.random.split(key_t, 4)
-        part = participation(R, k_part, self.tau)
+        part, pev = participation(R, k_part, self.tau, avail=rc.avail)
 
         zprev_n = jnp.where(part[:, None], z, zprev)
         z_n, dbits = downlink_broadcast(R, self.model_comp, k_m, z, x_cur,
@@ -332,7 +354,7 @@ class BL3Spec(MethodSpec):
             grad_up=R.sum(jnp.where(part, g_bits, 0.0)) / R.n)
         carry_n = (z_n, w_n, zprev_n, L_n, gam_n, A_n, C_n, g1_n, g2_n,
                    beta_i_n, led)
-        return carry_n, ys
+        return carry_n, (*ys, pev)
 
 
 # ==========================================================================
@@ -345,10 +367,11 @@ class GDSpec(MethodSpec):
     def init(self, R, env):
         return (env.x0, CommLedger.create())
 
-    def step(self, R, env, carry, key_t):
+    def step(self, R, env, carry, rc):
         x, led = carry
         x_n = x - self.lr * global_grad(R, env.batch, x)
-        return (x_n, led.add(grad_up=env.batch.d * FLOAT_BITS)), (x, led)
+        return ((x_n, led.add(grad_up=env.batch.d * FLOAT_BITS)),
+                (x, led, jnp.int32(EVENT_NONE)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -361,15 +384,16 @@ class DianaSpec(MethodSpec):
         h0 = jnp.zeros((R.n_local, env.batch.d), env.x0.dtype)
         return (env.x0, h0, CommLedger.create())
 
-    def step(self, R, env, carry, key_t):
+    def step(self, R, env, carry, rc):
         x, h, led = carry
         gi = client_batch.grads(env.batch, x)
-        q, counts = self.comp.compress(R.client_keys(key_t), gi - h)
+        q, counts = self.comp.compress(R.client_keys(rc.key), gi - h)
         bits = comm.price(self.comp.wire, counts)
         ghat = R.mean(h + q)
         h_n = h + self.alpha_h * q
         x_n = x - self.lr * ghat
-        return (x_n, h_n, led.add(grad_up=R.mean(bits))), (x, led)
+        return ((x_n, h_n, led.add(grad_up=R.mean(bits))),
+                (x, led, jnp.int32(EVENT_NONE)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -381,7 +405,7 @@ class NewtonSpec(MethodSpec):
     def init(self, R, env):
         return (env.x0, CommLedger.create(basis_ship=self.basis_bits))
 
-    def step(self, R, env, carry, key_t):
+    def step(self, R, env, carry, rc):
         x, led = carry
         batch = env.batch
         if env.basisb is None:
@@ -391,8 +415,9 @@ class NewtonSpec(MethodSpec):
             H = R.mean(env.basisb.server_reconstruct(coef, batch.lam))
         g = global_grad(R, batch, x)
         x_n = x - jnp.linalg.solve(H, g)
-        return (x_n, led.add(hess_up=self.hess_bits,
-                             grad_up=self.grad_bits)), (x, led)
+        return ((x_n, led.add(hess_up=self.hess_bits,
+                              grad_up=self.grad_bits)),
+                (x, led, jnp.int32(EVENT_NONE)))
 
 
 # ==========================================================================
@@ -420,6 +445,8 @@ class FedNLBAGSpec(MethodSpec):
     basis_bits: float
     block: bool
 
+    supports_faults = True        # lazy table reuses silent clients' rows
+
     def prepare(self, R, batch, basisb, x0):
         return coeff_layout(R, batch, basisb, x0, self.block)
 
@@ -434,15 +461,27 @@ class FedNLBAGSpec(MethodSpec):
                                  basis_ship=self.basis_bits)
         return (x0, L0, H0, gtab0, led0)
 
-    def step(self, R, env, carry, key_t):
+    def step(self, R, env, carry, rc):
+        key_t = rc.key
         z, L, H, gtab, led = carry
         batch = env.batch
         lay = env.extra
-        ys = (z, led)  # gap evaluated at z, outside the scan
 
         k_h, k_b = jax.random.split(key_t, 2)
-        # Bernoulli-lazy aggregation: reporters refresh their table row
-        send = R.shard(jax.random.bernoulli(k_b, self.q, (R.n,)))
+        # Bernoulli-lazy aggregation: reporters refresh their table row.
+        # Unavailable clients (fault layer) just stay silent — BAG's lazy
+        # table reuses their stale rows, so dropouts degrade staleness
+        # rather than correctness (the event stream records the outage).
+        send = jax.random.bernoulli(k_b, self.q, (R.n,))
+        if rc.avail is None:
+            ev = jnp.int32(EVENT_NONE)
+        else:
+            n_av = jnp.sum(rc.avail)
+            ev = (jnp.int32(EVENT_DEGRADED) * (n_av < R.n)
+                  + jnp.int32(EVENT_ALL_DOWN) * (n_av == 0)).astype(jnp.int32)
+            send = send & rc.avail
+        send = R.shard(send)
+        ys = (z, led, ev)  # gap evaluated at z, outside the scan
         gtab_n = jnp.where(send[:, None], client_batch.grads(batch, z), gtab)
         ghat = R.mean(gtab_n)
         led = led.add(grad_up=R.sum(
@@ -532,9 +571,10 @@ class BLDNNSpec(MethodSpec):
         led0 = CommLedger.create(basis_ship=ship)
         return (params, shift, fshift, server_f, led0)
 
-    def step(self, R, env, carry, key_t):
+    def step(self, R, env, carry, rc):
+        key_t = rc.key
         params, shift, fshift, server_f, led = carry
-        ys = (params, led)  # evaluated outside the scan (eval_streams)
+        ys = (params, led, jnp.int32(EVENT_NONE))  # evaluated post-scan
         data = env.batch.data                     # leaves (n_local, ...)
         basis = env.basisb
 

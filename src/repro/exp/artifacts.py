@@ -25,6 +25,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import zipfile
 from typing import Optional
 
 import numpy as np
@@ -125,6 +126,161 @@ def load_json(path: str) -> Optional[dict]:
 
 def csv_path(out_dir: str, exp_name: str, cell_name: str) -> str:
     return os.path.join(out_dir, f"{exp_name}_{cell_name}.csv")
+
+
+# ==========================================================================
+# Service-loop checkpoints (repro.launch.fed_serve)
+# ==========================================================================
+# A checkpoint is a pair of files in the checkpoint directory:
+#
+#   ckpt-<t>.npz    — the flattened scan carry (``carry/<i>`` per leaf, leaf
+#                     order = the engine's `init_serve_carry` flattening),
+#                     the accumulated history streams (``stream/<name>``),
+#                     and the run's root PRNG key data (``root_key``).
+#   ckpt-<t>.json   — the manifest: schema tag, the serve config digest
+#                     (resume key — a changed config invalidates the
+#                     checkpoint), round counter, per-leaf shapes/dtypes,
+#                     and the sha256 of the npz payload.
+#
+# Writes are atomic (tmp file + os.replace, npz before manifest) so a crash
+# mid-write never leaves a manifest pointing at a torn payload; the loader
+# walks checkpoints newest-first and falls back past any whose payload is
+# missing, torn, or fails the digest — so the latest *valid* checkpoint
+# wins even after a worst-case crash.
+CKPT_SCHEMA_VERSION = 1
+CKPT_SCHEMA = f"repro.exp/ckpt@{CKPT_SCHEMA_VERSION}"
+
+SERVE_SCHEMA_VERSION = 1
+SERVE_SCHEMA = f"repro.exp/serve@{SERVE_SCHEMA_VERSION}"
+
+
+def _ckpt_base(ckpt_dir: str, t: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt-{t:08d}")
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def _atomic_replace(tmp: str, dst: str) -> None:
+    os.replace(tmp, dst)
+    # best-effort directory fsync so the rename itself survives power loss
+    try:
+        dfd = os.open(os.path.dirname(dst) or ".", os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:
+        pass
+
+
+def save_checkpoint(ckpt_dir: str, *, t: int, carry_leaves, streams: dict,
+                    root_key, config_digest: str, keep: int = 3) -> str:
+    """Atomically write the service loop's full server state at round ``t``.
+
+    ``carry_leaves`` is the flattened scan carry (numpy/JAX arrays, in the
+    engine's canonical leaf order); ``streams`` maps stream name →
+    accumulated (t, ...) array (eval iterates, per-leg ledger bit streams,
+    events); ``root_key`` is the raw PRNG key data.  ``config_digest`` keys
+    the checkpoint to one serve configuration.  Keeps the newest ``keep``
+    checkpoints and prunes the rest.  Returns the manifest path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    base = _ckpt_base(ckpt_dir, t)
+    payload = {f"carry/{i}": np.asarray(leaf)
+               for i, leaf in enumerate(carry_leaves)}
+    for name, arr in streams.items():
+        payload[f"stream/{name}"] = np.asarray(arr)
+    payload["root_key"] = np.asarray(root_key)
+    tmp = base + ".npz.tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+        f.flush()
+        os.fsync(f.fileno())
+    _atomic_replace(tmp, base + ".npz")
+    manifest = {
+        "schema": CKPT_SCHEMA,
+        "config_digest": config_digest,
+        "t": int(t),
+        "n_carry_leaves": len(carry_leaves),
+        "carry_leaves": [{"shape": list(np.asarray(x).shape),
+                          "dtype": str(np.asarray(x).dtype)}
+                         for x in carry_leaves],
+        "streams": sorted(streams),
+        "payload_sha256": _sha256_file(base + ".npz"),
+    }
+    tmp = base + ".json.tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.write("\n")
+        f.flush()
+        os.fsync(f.fileno())
+    _atomic_replace(tmp, base + ".json")
+    prune_checkpoints(ckpt_dir, keep=keep)
+    return base + ".json"
+
+
+def list_checkpoints(ckpt_dir: str):
+    """(round, manifest path) pairs, oldest first."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for f in sorted(os.listdir(ckpt_dir)):
+        if f.startswith("ckpt-") and f.endswith(".json"):
+            try:
+                t = int(f[len("ckpt-"):-len(".json")])
+            except ValueError:
+                continue
+            out.append((t, os.path.join(ckpt_dir, f)))
+    return out
+
+
+def prune_checkpoints(ckpt_dir: str, keep: int) -> None:
+    for t, manifest in list_checkpoints(ckpt_dir)[:-keep if keep else None]:
+        for ext in (".json", ".npz"):
+            try:
+                os.remove(_ckpt_base(ckpt_dir, t) + ext)
+            except OSError:
+                pass
+
+
+def load_checkpoint(ckpt_dir: str, *, config_digest: Optional[str] = None):
+    """The newest valid checkpoint as a dict
+    ``{t, carry_leaves, streams, root_key, manifest}`` — or None.
+
+    Walks newest-first, skipping checkpoints whose manifest or payload is
+    torn/corrupt (digest mismatch) or that belong to a different serve
+    config — a crash during `save_checkpoint` therefore falls back to the
+    previous intact checkpoint instead of resuming garbage."""
+    for t, manifest_path in reversed(list_checkpoints(ckpt_dir)):
+        manifest = load_json(manifest_path)
+        if manifest is None or manifest.get("schema") != CKPT_SCHEMA:
+            continue
+        if (config_digest is not None
+                and manifest.get("config_digest") != config_digest):
+            continue
+        npz_path = _ckpt_base(ckpt_dir, t) + ".npz"
+        if not os.path.exists(npz_path):
+            continue
+        if _sha256_file(npz_path) != manifest.get("payload_sha256"):
+            continue
+        try:
+            with np.load(npz_path) as z:
+                n = manifest["n_carry_leaves"]
+                carry = [z[f"carry/{i}"] for i in range(n)]
+                streams = {name: z[f"stream/{name}"]
+                           for name in manifest["streams"]}
+                root_key = z["root_key"]
+        except (OSError, KeyError, ValueError, zipfile.BadZipFile):
+            continue
+        return {"t": manifest["t"], "carry_leaves": carry,
+                "streams": streams, "root_key": root_key,
+                "manifest": manifest}
+    return None
 
 
 def write_fig_csv(out_dir: str, record: dict) -> str:

@@ -34,9 +34,10 @@ def client_engine_specs(basis_replicated: bool = False):
     pytrees (`ClientBatch`, `BatchedBasis`, `TreeBatch`) shard their
     leading client axis over CLIENT_AXIS; the server iterate (a (d,)
     vector or a whole parameter pytree) and per-round PRNG keys are
-    replicated; the history streams — eval iterates plus the `CommLedger`
-    pytree of per-leg bit streams — come back replicated (the second P()
-    is a pytree prefix covering every ledger leg).
+    replicated; the history streams — eval iterates, the `CommLedger`
+    pytree of per-leg bit streams, and the per-round degradation-event
+    codes — come back replicated (the second P() is a pytree prefix
+    covering every ledger leg).
 
     ``basis_replicated=True`` replicates the basis argument instead of
     sharding it — pytree bases (`PerLayerSVDBasis`) are fleet-global with
@@ -44,7 +45,25 @@ def client_engine_specs(basis_replicated: bool = False):
     `MethodSpec.basis_replicated`).
     """
     sharded = P(CLIENT_AXIS)
-    return (sharded, P() if basis_replicated else sharded, P(), P()), (P(), P())
+    return ((sharded, P() if basis_replicated else sharded, P(), P()),
+            (P(), P(), P()))
+
+
+def client_chunk_specs(carry_specs, basis_replicated: bool = False):
+    """shard_map specs for the chunked serve driver's body
+    (`repro.core.rounds.run_chunk`).
+
+    Positional layout is (batch, basisb, x0, carry, ts, root_key, avail) →
+    (carry, (eval_x, ledger, events)).  Unlike the batch engine, the scan
+    carry crosses the shard_map boundary here: ``carry_specs`` is the
+    per-leaf spec pytree derived from `rounds.carry_client_flags`
+    (client-stacked leaves shard over CLIENT_AXIS, server state is
+    replicated).  The fault-availability schedule ``avail`` is fleet-wide
+    (steps, n) and replicated, exactly like the participation draws."""
+    sharded = P(CLIENT_AXIS)
+    in_specs = (sharded, P() if basis_replicated else sharded, P(),
+                carry_specs, P(), P(), P())
+    return in_specs, (carry_specs, (P(), P(), P()))
 
 
 @dataclasses.dataclass

@@ -1,0 +1,219 @@
+"""Fault-injection layer + participation edge cases.
+
+Covers the `rounds.participation` τ validation/clamping contract and its
+availability-masked fallback path, the determinism/chunk-invariance of
+`repro.core.faults` schedules, and the StreamHook sharded-dispatch error
+message (pinned verbatim: the CLI workaround it names must stay real)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import faults, rounds
+from repro.core.rounds import (
+    EVENT_ALL_DOWN,
+    EVENT_DEGRADED,
+    EVENT_FORCED,
+    EVENT_NONE,
+    VmapReducer,
+    participation,
+)
+
+N = 10
+R = VmapReducer(n=N)
+
+
+# ---------------------------------------------------------------- τ edges
+def test_participation_tau_zero_raises():
+    with pytest.raises(ValueError, match="τ ≥ 1"):
+        participation(R, jax.random.PRNGKey(0), 0)
+
+
+def test_participation_tau_negative_raises():
+    with pytest.raises(ValueError, match="τ ≥ 1"):
+        participation(R, jax.random.PRNGKey(0), -3)
+
+
+def test_participation_tau_above_n_clamps_to_full():
+    """τ > n clamps to full participation — and is bitwise-identical to
+    τ = n (Bernoulli(p ≥ 1) is always-true either way)."""
+    key = jax.random.PRNGKey(7)
+    over, ev_over = participation(R, key, N + 5)
+    full, ev_full = participation(R, key, N)
+    assert bool(jnp.all(over))
+    np.testing.assert_array_equal(np.asarray(over), np.asarray(full))
+    assert int(ev_over) == int(ev_full) == EVENT_NONE
+
+
+def test_participation_unmasked_matches_allones_avail_bitwise():
+    """avail of all-ones must reproduce the unmasked path bitwise — mask
+    AND event — so attaching a trivial fault layer changes nothing."""
+    ones = jnp.ones((N,), bool)
+    for seed in range(40):
+        key = jax.random.PRNGKey(seed)
+        m0, e0 = participation(R, key, 3)
+        m1, e1 = participation(R, key, 3, avail=ones)
+        np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+        assert int(e0) == int(e1)
+
+
+def test_participation_forced_event_fires_without_avail():
+    """With τ=1 some seed draws an empty cohort; the fallback must force
+    exactly one client and flag EVENT_FORCED."""
+    forced_seen = False
+    for seed in range(200):
+        mask, ev = participation(R, jax.random.PRNGKey(seed), 1)
+        assert int(jnp.sum(mask)) >= 1     # never an empty round
+        if int(ev) & EVENT_FORCED:
+            forced_seen = True
+            assert int(jnp.sum(mask)) == 1
+    assert forced_seen, "no forced fallback in 200 draws of τ=1 — suspicious"
+
+
+# ------------------------------------------------- availability masking
+def test_participation_avail_removes_down_clients():
+    avail = jnp.asarray([True] * 5 + [False] * 5)
+    for seed in range(50):
+        mask, _ = participation(R, jax.random.PRNGKey(seed), 8, avail=avail)
+        assert not bool(jnp.any(mask[5:])), "down client participated"
+
+
+def test_participation_all_zero_draw_forces_one_available_client():
+    """When faults wipe the whole drawn cohort, the fallback must force
+    exactly one client from the AVAILABLE set and flag it."""
+    avail = jnp.asarray([False] * 9 + [True])   # only client 9 is up
+    hit = 0
+    for seed in range(50):
+        mask, ev = participation(R, jax.random.PRNGKey(seed), 5, avail=avail)
+        m = np.asarray(mask)
+        assert m.sum() == 1 and m[9], "fallback must pick the one up client"
+        if int(ev) & EVENT_FORCED:
+            hit += 1
+        assert int(ev) & EVENT_DEGRADED or int(jnp.sum(mask)) >= 1
+    assert hit > 0
+
+
+def test_participation_all_down_stalls_with_event():
+    avail = jnp.zeros((N,), bool)
+    mask, ev = participation(R, jax.random.PRNGKey(0), 5, avail=avail)
+    assert not bool(jnp.any(mask))
+    assert int(ev) & EVENT_ALL_DOWN
+
+
+@given(seed=st.integers(0, 2**31 - 1), tau=st.integers(1, 2 * N))
+@settings(max_examples=60, deadline=None)
+def test_participation_never_empty_when_any_client_up(seed, tau):
+    """Property: for every (seed, τ) and a one-client availability mask,
+    the round still has exactly that participant (the force-one-client
+    fallback under an arbitrarily bad draw)."""
+    avail = jnp.asarray([True] + [False] * (N - 1))
+    mask, _ = participation(R, jax.random.PRNGKey(seed), tau, avail=avail)
+    m = np.asarray(mask)
+    assert m.sum() == 1 and m[0]
+
+
+@given(seed=st.integers(0, 2**31 - 1), tau=st.integers(1, N))
+@settings(max_examples=60, deadline=None)
+def test_participation_mask_subset_of_avail(seed, tau):
+    avail = jnp.asarray(
+        np.random.default_rng(seed ^ 0x5EED).random(N) < 0.5)
+    mask, ev = participation(R, jax.random.PRNGKey(seed), tau, avail=avail)
+    m, a = np.asarray(mask), np.asarray(avail)
+    assert not (m & ~a).any()
+    if not a.any():
+        assert int(ev) & EVENT_ALL_DOWN and not m.any()
+    else:
+        assert m.sum() >= 1
+
+
+# ----------------------------------------------------------- fault plans
+def test_fault_plan_schedule_is_chunk_invariant():
+    plan = faults.FaultPlan(
+        n=8, dropout_p=0.3, outages=(faults.Outage(2, 5, 12),),
+        straggler=faults.StragglerModel(mean_s=0.1, timeout_s=0.15,
+                                        retries=1),
+        seed=42)
+    whole, _ = plan.schedule(0, 20)
+    first, _ = plan.schedule(0, 7)
+    rest, _ = plan.schedule(7, 13)
+    np.testing.assert_array_equal(whole, np.concatenate([first, rest]))
+
+
+def test_fault_plan_outage_window_and_rejoin():
+    plan = faults.FaultPlan(n=4, outages=(faults.Outage(1, 3, 6),))
+    sched, _ = plan.schedule(0, 10)
+    assert sched[:3, 1].all() and sched[6:, 1].all()   # up before & rejoined
+    assert not sched[3:6, 1].any()                     # down in the window
+    others = np.delete(sched, 1, axis=1)
+    assert others.all()                                # nobody else affected
+
+
+def test_fault_plan_trivial_flag():
+    assert faults.FaultPlan(n=4).trivial
+    assert not faults.FaultPlan(n=4, dropout_p=0.1).trivial
+    assert not faults.FaultPlan(n=4, outages=(faults.Outage(0, 0, 1),)).trivial
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="dropout_p"):
+        faults.FaultPlan(n=4, dropout_p=1.0)
+    with pytest.raises(ValueError, match="out of range"):
+        faults.FaultPlan(n=4, outages=(faults.Outage(7, 0, 3),))
+    with pytest.raises(ValueError, match="empty outage"):
+        faults.Outage(0, 5, 5)
+    with pytest.raises(ValueError, match="client:start:stop"):
+        faults.Outage.parse("nonsense")
+    assert faults.Outage.parse("2:10:20") == faults.Outage(2, 10, 20)
+
+
+def test_straggler_survivors_monotone_in_retries():
+    """A bigger retry budget can only ADD survivors, never remove them."""
+    base = dict(mean_s=0.2, timeout_s=0.1, backoff=2.0, slow_frac=0.25,
+                slow_factor=5.0)
+    for t in range(10):
+        prev = None
+        for retries in range(4):
+            sm = faults.StragglerModel(retries=retries, **base)
+            ok, _ = sm.round_outcome(seed=9, t=t, n=16)
+            if prev is not None:
+                assert (prev <= ok).all(), (t, retries)
+            prev = ok
+
+
+def test_straggler_validation():
+    with pytest.raises(ValueError, match="backoff"):
+        faults.StragglerModel(backoff=0.5)
+    with pytest.raises(ValueError, match="retry"):
+        faults.StragglerModel(retries=-1)
+    with pytest.raises(ValueError, match="slow_frac"):
+        faults.StragglerModel(slow_frac=1.5)
+
+
+# ------------------------------------------------ StreamHook dispatch error
+def test_streamhook_sharded_error_names_backend_and_workaround():
+    """The dispatch error must name the offending backend and the CLI
+    workaround — both pinned so they cannot silently rot."""
+    from repro.core import batched, glm
+
+    clients = glm.make_synthetic(seed=0, n_clients=4, m=10, d=6, r=3,
+                                 lam=1e-3)
+    spec, batch, basisb = batched.bl3_setup(
+        clients, [batched.Identity() for _ in clients],
+        [batched.Identity() for _ in clients], tau=4)
+    hook = rounds.StreamHook(every=1, callback=lambda *a: None)
+    x0 = jnp.zeros(6, jnp.float64)
+    with pytest.raises(ValueError) as exc:
+        rounds.run_rounds(spec, batch, basisb, x0, 0.0,
+                          jax.random.split(jax.random.PRNGKey(0), 3),
+                          sharded=True, stream=hook)
+    msg = str(exc.value)
+    assert "ShardMapReducer" in msg
+    assert "backend='fast+sharded'" in msg
+    assert "--progress-every 0" in msg
+    # the named workaround flag must actually exist on the exp CLI
+    import inspect
+
+    from repro.exp import __main__ as exp_cli
+
+    assert "--progress-every" in inspect.getsource(exp_cli)

@@ -133,6 +133,58 @@ print("ROUND_ENGINE_BITWISE_OK")
 """
 
 
+SCRIPT_SERVE_CHUNKED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import batched, comm, faults, glm, rounds
+from repro.core.compressors import Identity, TopK
+
+clients = glm.make_synthetic(seed=0, n_clients=8, m=24, d=20, r=8, lam=1e-3)
+from repro.core.basis import orth_basis_from_data
+bases = [orth_basis_from_data(c.A) for c in clients]
+x0 = jnp.zeros(20, jnp.float64)
+spec, batch, basisb = batched.bl2_setup(
+    clients, bases, [TopK(k=8)] * 8, [Identity()] * 8, tau=4)
+assert len(jax.devices()) == 8
+root = jax.random.PRNGKey(3)
+plan = faults.FaultPlan(n=8, dropout_p=0.25,
+                        outages=(faults.Outage(5, 4, 10),), seed=13)
+
+def drive(sharded, chunk, t1=16):
+    carry = rounds.init_serve_carry(spec, batch, basisb, x0, sharded=sharded)
+    xs, evs, legs = [], [], {k: [] for k in comm.CommLedger.LEGS}
+    t = 0
+    while t < t1:
+        steps = min(chunk, t1 - t)
+        avail, _ = plan.schedule(t, steps)
+        carry, ys = rounds.run_chunk(spec, batch, basisb, x0, carry, t,
+                                     steps, root, avail=avail,
+                                     sharded=sharded)
+        xs.append(np.asarray(ys[0])); evs.append(np.asarray(ys[2]))
+        for k in legs:
+            legs[k].append(np.asarray(getattr(ys[1], k)))
+        t += steps
+    return (np.concatenate(xs), np.concatenate(evs),
+            {k: np.concatenate(v) for k, v in legs.items()}, carry)
+
+# 8-device chunked serve ≡ single-device, and chunk-size invariant — the
+# resume contract (carry crosses the shard_map boundary between chunks)
+v1 = drive(False, 16)      # vmap, one chunk
+s1 = drive(True, 16)       # shard_map, one chunk
+s2 = drive(True, 5)        # shard_map, resumed every 5 rounds
+for a, b in ((s1, v1), (s2, v1)):
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    for k in a[2]:
+        np.testing.assert_array_equal(a[2][k], b[2][k])
+for la, lb in zip(jax.tree_util.tree_leaves(s2[3]),
+                  jax.tree_util.tree_leaves(v1[3])):
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+print("SERVE_CHUNKED_MULTIDEV_OK")
+"""
+
+
 def _run(script):
     # JAX_PLATFORMS=cpu: on images with an accelerator plugin an unpinned
     # subprocess burns minutes probing for hardware before falling back
@@ -158,3 +210,11 @@ def test_round_engine_shard_map_reducer_bitwise():
     the FedNL-BAG spec, and stay within reference parity."""
     r = _run(SCRIPT_ROUND_ENGINE)
     assert "ROUND_ENGINE_BITWISE_OK" in r.stdout, r.stdout + r.stderr[-3000:]
+
+
+def test_serve_chunked_driver_multidev_bitwise():
+    """The service-loop chunked driver on 8 devices — carry resumed across
+    chunk boundaries through the shard_map program — is bitwise equal to the
+    single-device single-chunk run under a non-trivial fault plan."""
+    r = _run(SCRIPT_SERVE_CHUNKED)
+    assert "SERVE_CHUNKED_MULTIDEV_OK" in r.stdout, r.stdout + r.stderr[-3000:]

@@ -2,6 +2,7 @@
 """Schema-diff freshly generated experiment output against committed artifacts.
 
     python tools/schema_diff.py <generated_dir> <committed_results_dir>
+    python tools/schema_diff.py --ckpt <checkpoint_dir>
 
 For every figure CSV in <generated_dir>, the same-named committed CSV must
 share the exact header row (the versioned `repro.exp.artifacts.CSV_COLUMNS`
@@ -10,12 +11,27 @@ counterpart must exist with the same ``schema`` tag, the same top-level
 keys and the same ``history`` keys.  Values are NOT compared — CI runs the
 smoke sweep with a clamped round budget, so only the *shape* of the
 artifacts is comparable.  Exits 1 listing every mismatch.
+
+``--ckpt`` validates a service-loop checkpoint directory instead
+(`repro.launch.fed_serve` output): every manifest must carry the current
+``repro.exp/ckpt@N`` schema tag and the required keys, reference an npz
+payload whose sha256 matches the manifest, and agree with the payload on
+the carry leaf count; a serve result JSON in the directory (if present) is
+checked for the ``repro.exp/serve@N`` tag and its history keys.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import sys
+import zipfile
+
+CKPT_SCHEMA = "repro.exp/ckpt@1"
+SERVE_SCHEMA = "repro.exp/serve@1"
+_MANIFEST_KEYS = {"schema", "config_digest", "t", "n_carry_leaves",
+                  "carry_leaves", "streams", "payload_sha256"}
+_SERVE_HISTORY_KEYS = {"gaps", "up_bits", "down_bits", "legs", "events"}
 
 
 def _fail(msgs):
@@ -25,7 +41,103 @@ def _fail(msgs):
     return 1
 
 
+def _sha256(path):
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def check_ckpt_dir(ckpt_dir):
+    """Validate every checkpoint manifest/payload pair in a directory; a
+    serve result record found alongside is validated too."""
+    problems = []
+    if not os.path.isdir(ckpt_dir):
+        return [f"{ckpt_dir}: not a directory"]
+    manifests = sorted(f for f in os.listdir(ckpt_dir)
+                       if f.startswith("ckpt-") and f.endswith(".json"))
+    if not manifests:
+        problems.append(f"no checkpoint manifests found in {ckpt_dir}")
+    for f in manifests:
+        path = os.path.join(ckpt_dir, f)
+        try:
+            with open(path) as fh:
+                m = json.load(fh)
+        except (json.JSONDecodeError, OSError) as e:
+            problems.append(f"{f}: unreadable manifest ({e})")
+            continue
+        if m.get("schema") != CKPT_SCHEMA:
+            problems.append(f"{f}: schema tag {m.get('schema')!r} != "
+                            f"{CKPT_SCHEMA!r}")
+        missing = _MANIFEST_KEYS - set(m)
+        if missing:
+            problems.append(f"{f}: manifest missing keys {sorted(missing)}")
+            continue
+        npz = path[:-len(".json")] + ".npz"
+        if not os.path.exists(npz):
+            problems.append(f"{f}: payload {os.path.basename(npz)} missing")
+            continue
+        if _sha256(npz) != m["payload_sha256"]:
+            problems.append(f"{f}: payload sha256 mismatch (torn write?)")
+            continue
+        try:
+            with zipfile.ZipFile(npz) as z:
+                names = set(z.namelist())
+        except zipfile.BadZipFile:
+            problems.append(f"{f}: payload is not a valid npz archive")
+            continue
+        want = ({f"carry/{i}.npy" for i in range(m["n_carry_leaves"])}
+                | {f"stream/{s}.npy" for s in m["streams"]}
+                | {"root_key.npy"})
+        if not want <= names:
+            problems.append(
+                f"{f}: payload missing entries {sorted(want - names)}")
+    n_results = 0
+    for f in sorted(os.listdir(ckpt_dir)):
+        if f.startswith("ckpt-") or not f.endswith(".json"):
+            continue
+        try:
+            with open(os.path.join(ckpt_dir, f)) as fh:
+                rec = json.load(fh)
+        except (json.JSONDecodeError, OSError):
+            continue
+        if rec.get("schema") != SERVE_SCHEMA:
+            continue
+        n_results += 1
+        hk = set(rec.get("history", {}))
+        if hk != _SERVE_HISTORY_KEYS:
+            problems.append(f"{f}: serve history keys "
+                            f"{sorted(hk ^ _SERVE_HISTORY_KEYS)} differ")
+    if not problems:
+        print(f"ckpt schema ok: {len(manifests)} checkpoint(s), "
+              f"{n_results} serve record(s) in {ckpt_dir}")
+    return problems
+
+
+def check_serve_result(path):
+    """Validate one serve result record (callable with a file outside the
+    checkpoint dir, e.g. a CI-archived result)."""
+    try:
+        with open(path) as fh:
+            rec = json.load(fh)
+    except (json.JSONDecodeError, OSError) as e:
+        return [f"{path}: unreadable ({e})"]
+    problems = []
+    if rec.get("schema") != SERVE_SCHEMA:
+        problems.append(f"{path}: schema tag {rec.get('schema')!r} != "
+                        f"{SERVE_SCHEMA!r}")
+    hk = set(rec.get("history", {}))
+    if hk != _SERVE_HISTORY_KEYS:
+        problems.append(f"{path}: serve history keys "
+                        f"{sorted(hk ^ _SERVE_HISTORY_KEYS)} differ")
+    return problems
+
+
 def main(argv):
+    if len(argv) == 2 and argv[0] == "--ckpt":
+        problems = check_ckpt_dir(argv[1])
+        return _fail(problems) if problems else 0
     if len(argv) != 2:
         print(__doc__)
         return 2
