@@ -203,10 +203,12 @@ _FED_DNN_LEGACY_US = 19162.0
 @bench("fed_dnn")
 def fed_dnn():
     """BL-DNN round cost on the pytree engine (the fig-dnn problem):
-    single-device vmap scan (with and without the post-scan trajectory
-    evaluation) and the 8-virtual-device client-sharded backend, vs the
-    retired hand-rolled loop's recorded per-round cost (subprocess — the
-    device count is locked at first jax init here)."""
+    single-device chunked scan (with and without the post-scan trajectory
+    evaluation) and the 8-virtual-device client-sharded backend — exact
+    (fixed-order gather, bitwise-checked against the fast path) and
+    exact=False (BLDNNSpec's pmean ReducePlan) — vs the retired
+    hand-rolled loop's recorded per-round cost (subprocess: the device
+    count is locked at first jax init here)."""
     import subprocess
     import sys
 
@@ -215,7 +217,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
 import jax
-from repro.core.rounds import VmapReducer, _engine_jit
+from repro.core import rounds
 from repro.fed import bldnn as B
 from repro.exp import build_problem, get_experiment
 
@@ -227,34 +229,46 @@ STEPS = 40
 from repro.core.basis import per_layer_svd_basis
 spec = B.build_spec(prob.loss_fn, prob.eval_fn, prob.params0, cfg)
 basis = per_layer_svd_basis(prob.params0)
-keys = jax.random.split(jax.random.PRNGKey(0), STEPS)
+root = jax.random.PRNGKey(0)
 
 def scan_run():
-    jax.block_until_ready(_engine_jit(
-        spec, VmapReducer(n=prob.n), prob.batch, basis, prob.params0, keys))
+    # chunked driver without the trajectory eval (run_chunk donates its
+    # carry, so each rep pays the cheap carry init too)
+    c = rounds.init_serve_carry(spec, prob.batch, basis, prob.params0)
+    c, ys = rounds.run_chunk(spec, prob.batch, basis, prob.params0, c, 0,
+                             STEPS, root)
+    jax.block_until_ready((c, ys))
 
-def e2e(backend):
+def e2e(backend, exact=True):
     return lambda: B.run_bldnn(prob.loss_fn, prob.eval_fn, prob.params0,
-                               prob.batch, STEPS, cfg, backend=backend)
+                               prob.batch, STEPS, cfg, backend=backend,
+                               exact=exact)
 
+hists = {}
 for name, fn in (("scan_only", scan_run), ("fast", e2e("fast")),
-                 ("sharded", e2e("fast+sharded"))):
-    fn()
+                 ("sharded", e2e("fast+sharded")),
+                 ("sharded_approx", e2e("fast+sharded", exact=False))):
+    hists[name] = fn()   # warm/compile (History for the e2e rows)
     t0 = time.perf_counter()
     for _ in range(3):
         fn()
     print(f"RESULT {name} {(time.perf_counter() - t0) / 3 / STEPS * 1e6:.1f}")
+bw = (hists["sharded"].gaps == hists["fast"].gaps
+      and hists["sharded"].up_bits == hists["fast"].up_bits)
+print(f"BITWISE {bw}")
 """
     env = dict(os.environ, PYTHONPATH="src")
     env.setdefault("JAX_PLATFORMS", "cpu")
     proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
                           text=True, timeout=900, env=env)
-    res = {}
+    res, bw = {}, None
     for line in proc.stdout.splitlines():
         if line.startswith("RESULT"):
             _, name, us = line.split()
             res[name] = float(us)
-    if set(res) != {"scan_only", "fast", "sharded"}:
+        elif line.startswith("BITWISE"):
+            bw = line.split()[1] == "True"
+    if set(res) != {"scan_only", "fast", "sharded", "sharded_approx"}:
         raise RuntimeError(proc.stdout + proc.stderr[-2000:])
     speedup = _FED_DNN_LEGACY_US / res["scan_only"]
     return [
@@ -267,68 +281,138 @@ for name, fn in (("scan_only", scan_run), ("fast", e2e("fast")),
          "per_round;includes_trajectory_eval"),
         ("fed_dnn_engine_sharded_8dev", res["sharded"],
          f"per_round;overhead_vs_fast={res['sharded'] / res['fast']:.2f}x"
-         ";bitwise_equal_histories"),
+         f";bitwise_equal_histories={bw}",
+         {"overhead_vs_fast": res["sharded"] / res["fast"],
+          "bitwise_equal_histories": bw}),
+        ("fed_dnn_engine_sharded_8dev_approx", res["sharded_approx"],
+         f"per_round;overhead_vs_fast="
+         f"{res['sharded_approx'] / res['fast']:.2f}x;exact=False",
+         {"overhead_vs_fast": res["sharded_approx"] / res["fast"]}),
     ]
 
 
-@bench("engine_sharded")
-def engine_sharded():
-    """Round-engine aggregation backends head-to-head: single-device vmap
-    reductions vs clients sharded over an 8-virtual-CPU-device mesh
-    (subprocess — the device count is locked at first jax init here).
-    On one physical CPU the sharded backend pays collective overhead; the
-    row exists to track that tax and to smoke the backend at bench scale."""
-    import subprocess
-    import sys
-
-    script = r"""
+_ENGINE_GRID_SCRIPT = r"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=@NDEV@"
 import time
-import jax.numpy as jnp
+import jax, jax.numpy as jnp
 from repro.core import bl, glm
 from repro.core.basis import orth_basis_from_data
 from repro.core.compressors import Identity, TopK
 
-clients = glm.make_synthetic(seed=0, n_clients=8, m=60, d=120, r=24, lam=1e-3)
-x0 = jnp.zeros(120, jnp.float64)
+TINY = @TINY@
+# STEPS=24 amortizes the one-time init/dispatch cost so per_round reflects
+# the steady-state marginal rate (at STEPS=6 the fixed ~10ms still dominates)
+m, d, r, STEPS, REPS = (20, 24, 8, 3, 1) if TINY else (60, 120, 24, 24, 2)
+clients = glm.make_synthetic(seed=0, n_clients=8, m=m, d=d, r=r, lam=1e-3)
+x0 = jnp.zeros(d, jnp.float64)
 xs = glm.newton_solve(clients, x0, 20)
 bases = [orth_basis_from_data(c.A) for c in clients]
-r = bases[0].r
-STEPS = 6
+k = bases[0].r
 
-def run(backend):
-    return bl.bl1(clients, bases, [TopK(k=r)] * 8, Identity(), x0, xs, STEPS,
-                  backend=backend)
-
-for backend in ("fast", "fast+sharded"):
-    h = run(backend)  # warm/compile
+def time_cell(tag, fn, steps):
+    h = fn()   # warm/compile
     t0 = time.perf_counter()
-    for _ in range(3):
-        run(backend)
-    us = (time.perf_counter() - t0) / 3 / STEPS * 1e6
-    print(f"RESULT {backend} {us:.1f} {h.gaps[-1]:.3e}")
+    for _ in range(REPS):
+        fn()
+    us = (time.perf_counter() - t0) / REPS / steps * 1e6
+    print(f"RESULT {tag} {us:.1f}", flush=True)
+    return h
+
+def run_bl1(backend, exact=True):
+    return bl.bl1(clients, bases, [TopK(k=k)] * 8, Identity(), x0, xs,
+                  STEPS, backend=backend, exact=exact)
+
+h_fast = time_cell("bl1_fast", lambda: run_bl1("fast"), STEPS)
+h_ex = time_cell("bl1_sharded", lambda: run_bl1("fast+sharded"), STEPS)
+time_cell("bl1_sharded_approx",
+          lambda: run_bl1("fast+sharded", exact=False), STEPS)
+bw = (h_ex.gaps == h_fast.gaps and h_ex.up_bits == h_fast.up_bits
+      and h_ex.down_bits == h_fast.down_bits)
+print(f"BITWISE bl1 {bw}", flush=True)
+
+if not TINY:
+    from repro.fed import bldnn as B
+    from repro.exp import build_problem, get_experiment
+    prob = build_problem(get_experiment("fig-dnn").problem)
+    cfg = B.BLDNNConfig(lr=0.05, top_k_frac=0.1)
+    DSTEPS = 12
+
+    def run_dnn(backend, exact=True):
+        return B.run_bldnn(prob.loss_fn, prob.eval_fn, prob.params0,
+                           prob.batch, DSTEPS, cfg, backend=backend,
+                           exact=exact)
+
+    h_fast = time_cell("bldnn_fast", lambda: run_dnn("fast"), DSTEPS)
+    h_ex = time_cell("bldnn_sharded", lambda: run_dnn("fast+sharded"),
+                     DSTEPS)
+    time_cell("bldnn_sharded_approx",
+              lambda: run_dnn("fast+sharded", exact=False), DSTEPS)
+    bw = h_ex.gaps == h_fast.gaps and h_ex.up_bits == h_fast.up_bits
+    print(f"BITWISE bldnn {bw}", flush=True)
 """
+
+
+@bench("engine_sharded")
+def engine_sharded():
+    """Round-engine aggregation grid: method {BL1, BL-DNN} × device count
+    {4, 8} × collective mode {exact fixed-order gather, exact=False ring
+    psum/pmean per the spec's ReducePlan}, each against the single-device
+    vmap baseline measured in the same subprocess (device count is locked
+    at first jax init, so each mesh size gets its own child).  Exact-mode
+    rows carry an ACTUAL bitwise-equality verdict, not an assumption.  On
+    one physical CPU the sharded backend pays collective + replication
+    overhead; these rows track that tax.  ``REPRO_BENCH_TINY=1`` shrinks
+    the grid (8-device BL1 only, tiny sizes) for CI smoke."""
+    import subprocess
+    import sys
+
+    tiny = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
     env = dict(os.environ, PYTHONPATH="src")
     # pin the child to CPU when the parent doesn't say otherwise — on images
     # with a TPU plugin an unpinned child burns minutes probing for hardware
     env.setdefault("JAX_PLATFORMS", "cpu")
-    proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                          text=True, timeout=900, env=env)
-    res = {}
-    for line in proc.stdout.splitlines():
-        if line.startswith("RESULT"):
-            _, backend, us, gap = line.split()
-            res[backend] = (float(us), gap)
-    if set(res) != {"fast", "fast+sharded"}:
-        raise RuntimeError(proc.stdout + proc.stderr[-2000:])
-    tax = res["fast+sharded"][0] / res["fast"][0]
-    return [
-        ("engine_bl1_fast_8clients", res["fast"][0],
-         f"per_round;gap@6={res['fast'][1]}"),
-        ("engine_bl1_sharded_8dev", res["fast+sharded"][0],
-         f"per_round;overhead_vs_fast={tax:.2f}x;bitwise_equal_histories"),
-    ]
+    rows = []
+    for ndev in ((8,) if tiny else (8, 4)):
+        script = (_ENGINE_GRID_SCRIPT.replace("@NDEV@", str(ndev))
+                  .replace("@TINY@", str(tiny)))
+        proc = subprocess.run([sys.executable, "-c", script],
+                              capture_output=True, text=True, timeout=900,
+                              env=env)
+        res, bitwise = {}, {}
+        for line in proc.stdout.splitlines():
+            if line.startswith("RESULT"):
+                _, tag, us = line.split()
+                res[tag] = float(us)
+            elif line.startswith("BITWISE"):
+                _, meth, flag = line.split()
+                bitwise[meth] = flag == "True"
+        want = {"bl1_fast", "bl1_sharded", "bl1_sharded_approx"}
+        if not tiny:
+            want |= {"bldnn_fast", "bldnn_sharded", "bldnn_sharded_approx"}
+        if set(res) != want:
+            raise RuntimeError(proc.stdout + proc.stderr[-2000:])
+        for meth in ("bl1",) if tiny else ("bl1", "bldnn"):
+            fast = res[f"{meth}_fast"]
+            if ndev == 8:   # one baseline row per method (mesh-independent)
+                rows.append((f"engine_{meth}_fast_8clients", fast,
+                             "per_round;single_device_baseline"))
+            for mode, suffix in (("sharded", ""), ("sharded_approx",
+                                                   "_approx")):
+                us = res[f"{meth}_{mode}"]
+                tax = us / fast
+                derived = (f"per_round;ndev={ndev}"
+                           f";overhead_vs_fast={tax:.2f}x")
+                extra = {"ndev": ndev, "overhead_vs_fast": tax}
+                if suffix:
+                    derived += ";exact=False"
+                else:
+                    derived += (";bitwise_equal_histories="
+                                f"{bitwise[meth]}")
+                    extra["bitwise_equal_histories"] = bitwise[meth]
+                rows.append((f"engine_{meth}_sharded_{ndev}dev{suffix}",
+                             us, derived, extra))
+    return rows
 
 
 # ---------------- kernel micro-benches --------------------------------------
@@ -391,6 +475,7 @@ def _write_json(json_dir, group, rows):
             for row in rows
         ],
     }
+    os.makedirs(json_dir, exist_ok=True)
     path = os.path.join(json_dir, f"BENCH_{group}.json")
     with open(path, "w") as f:
         json.dump(record, f, indent=2)

@@ -110,6 +110,7 @@ def fednl_bag(
     seed: int = 0,
     init_exact_hessian: bool = True,
     backend: str = "auto",
+    exact: bool = True,
 ) -> History:
     """FedNL with Bernoulli-lazy gradient aggregation (BAG — after arXiv
     2206.03588): the FedNL compressed Hessian-learning recursion plus a
@@ -130,7 +131,7 @@ def fednl_bag(
         return batched.fednl_bag_fast(
             clients, bases, hess_comp, x0, x_star, steps, alpha=alpha, q=q,
             eta=eta, mu=mu, seed=seed, init_exact_hessian=init_exact_hessian,
-            sharded=(backend == "fast+sharded"))
+            sharded=(backend == "fast+sharded"), exact=exact)
     except batched.FastPathUnavailable as e:
         # "auto" falls back to the reference loops everywhere else; with no
         # reference backend to fall back to, surface a clear error instead

@@ -173,12 +173,13 @@ def bl1_setup(clients, bases, hess_comp, model_comp, alpha=1.0, eta=1.0,
 
 def bl1_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
              alpha=1.0, eta=1.0, p=1.0, mu=None, seed=0,
-             init_exact_hessian=True, sharded=False, stream=None) -> History:
+             init_exact_hessian=True, sharded=False, exact=True,
+             stream=None) -> History:
     spec, batch, basisb = bl1_setup(
         clients, bases, hess_comp, model_comp, alpha=alpha, eta=eta, p=p,
         mu=mu, init_exact_hessian=init_exact_hessian)
     return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded,
-                stream=stream)
+                exact=exact, stream=stream)
 
 
 # ==========================================================================
@@ -201,12 +202,13 @@ def bl2_setup(clients, bases, hess_comp, model_comp, alpha=1.0, eta=1.0,
 
 def bl2_fast(clients, bases, hess_comp, model_comp, x0, x_star, steps,
              alpha=1.0, eta=1.0, p=1.0, tau=None, seed=0,
-             init_exact_hessian=True, sharded=False, stream=None) -> History:
+             init_exact_hessian=True, sharded=False, exact=True,
+             stream=None) -> History:
     spec, batch, basisb = bl2_setup(
         clients, bases, hess_comp, model_comp, alpha=alpha, eta=eta, p=p,
         tau=tau, init_exact_hessian=init_exact_hessian)
     return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded,
-                stream=stream)
+                exact=exact, stream=stream)
 
 
 # ==========================================================================
@@ -226,12 +228,12 @@ def bl3_setup(clients, hess_comp, model_comp, alpha=1.0, eta=1.0, p=1.0,
 
 def bl3_fast(clients, hess_comp, model_comp, x0, x_star, steps, alpha=1.0,
              eta=1.0, p=1.0, tau=None, c=1e-8, option=2, seed=0,
-             sharded=False, stream=None) -> History:
+             sharded=False, exact=True, stream=None) -> History:
     spec, batch, basisb = bl3_setup(
         clients, hess_comp, model_comp, alpha=alpha, eta=eta, p=p, tau=tau,
         c=c, option=option)
     return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded,
-                stream=stream)
+                exact=exact, stream=stream)
 
 
 # ==========================================================================
@@ -300,10 +302,11 @@ def fednl_bag_setup(clients, bases, hess_comp, alpha=1.0, q=0.5, eta=None,
 
 def fednl_bag_fast(clients, bases, hess_comp, x0, x_star, steps, alpha=1.0,
                    q=0.5, eta=None, mu=None, seed=0, init_exact_hessian=True,
-                   sharded=False) -> History:
+                   sharded=False, exact=True) -> History:
     """FedNL with Bernoulli gradient aggregation — see `specs.FedNLBAGSpec`.
     eta defaults to q: damping matched to the aggregation probability."""
     spec, batch, basisb = fednl_bag_setup(
         clients, bases, hess_comp, alpha=alpha, q=q, eta=eta, mu=mu,
         init_exact_hessian=init_exact_hessian)
-    return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded)
+    return _run(spec, batch, basisb, x0, x_star, steps, seed, sharded=sharded,
+                exact=exact)

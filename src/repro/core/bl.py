@@ -163,6 +163,7 @@ def bl1(
     seed: int = 0,
     init_exact_hessian: bool = True,
     backend: str = "auto",
+    exact: bool = True,
     stream=None,
 ) -> History:
     """Basis Learn with Bidirectional Compression (Algorithm 1).
@@ -191,6 +192,12 @@ def bl1(
       init_exact_hessian: ship exact initial coefficients (billed on the
         hess_up leg) instead of starting the learner at zero.
       backend: "auto" | "fast" | "fast+sharded" | "reference".
+      exact: aggregation parity of the sharded backend (see
+        `rounds.ShardMapReducer`): True (default) reduces via a fixed-order
+        gather — bitwise identical to the single-device fast path; False
+        uses ring collectives per the spec's `ReducePlan` — faster on real
+        interconnects, reductions associate in ring order (≈ulp drift).
+        Ignored off the "fast+sharded" backend.
       stream: optional `rounds.StreamHook` for mid-sweep progress emission
         (fast backends only; the reference loops ignore it).
 
@@ -206,8 +213,8 @@ def bl1(
               init_exact_hessian=init_exact_hessian)
     return _dispatch(
         backend,
-        lambda sharded: batched.bl1_fast(*args, sharded=sharded, stream=stream,
-                                         **kw),
+        lambda sharded: batched.bl1_fast(*args, sharded=sharded, exact=exact,
+                                         stream=stream, **kw),
         lambda: bl_reference.bl1_reference(*args, **kw),
     )
 
@@ -227,6 +234,7 @@ def bl2(
     seed: int = 0,
     init_exact_hessian: bool = True,
     backend: str = "auto",
+    exact: bool = True,
     stream=None,
 ) -> History:
     """Basis Learn with Bidirectional Compression and Partial Participation
@@ -247,8 +255,8 @@ def bl2(
               init_exact_hessian=init_exact_hessian)
     return _dispatch(
         backend,
-        lambda sharded: batched.bl2_fast(*args, sharded=sharded, stream=stream,
-                                         **kw),
+        lambda sharded: batched.bl2_fast(*args, sharded=sharded, exact=exact,
+                                         stream=stream, **kw),
         lambda: bl_reference.bl2_reference(*args, **kw),
     )
 
@@ -268,6 +276,7 @@ def bl3(
     option: int = 2,
     seed: int = 0,
     backend: str = "auto",
+    exact: bool = True,
     stream=None,
 ) -> History:
     """BL3 with the PSD basis of Example 5.1 (both β options, Algorithm 3).
@@ -285,7 +294,7 @@ def bl3(
     kw = dict(alpha=alpha, eta=eta, p=p, tau=tau, c=c, option=option, seed=seed)
     return _dispatch(
         backend,
-        lambda sharded: batched.bl3_fast(*args, sharded=sharded, stream=stream,
-                                         **kw),
+        lambda sharded: batched.bl3_fast(*args, sharded=sharded, exact=exact,
+                                         stream=stream, **kw),
         lambda: bl_reference.bl3_reference(*args, **kw),
     )

@@ -97,6 +97,23 @@ class Compressor:
         """
         raise NotImplementedError
 
+    def compress_sum(self, keys: Optional[jax.Array], x: jax.Array
+                     ) -> Tuple[jax.Array, comm.Counts, jax.Array]:
+        """Fused compress-then-reduce: `compress` plus the LOCAL sum of the
+        compressed stack over the client axis.
+
+        Returns ``(compressed, counts, local_sum)`` with ``local_sum ==
+        compressed.sum(axis=0)`` (payload-shaped).  The default is the
+        obvious two-pass composition; codecs with a fused kernel override
+        it (Top-K under ``REPRO_BL_PALLAS=1`` computes the selection
+        threshold and the partial sum in one pass — see
+        `repro.kernels.topk_threshold.topk_compress_sum`).  Consumers feed
+        the sum to `rounds.Reducer.tree_mean_presummed`, which lets the
+        bandwidth-optimal sharded path reduce the pre-summed payload
+        instead of gathering the dense stack."""
+        dense, counts = self.compress(keys, x)
+        return dense, counts, jnp.sum(dense, axis=0)
+
     def _require_keys(self, keys: Optional[jax.Array], n: int) -> Optional[jax.Array]:
         if keys is None:
             if self.stochastic:
@@ -216,6 +233,26 @@ class TopK(Compressor):
         out = jnp.where(topk_keep_mask(v, kk), v, 0.0).reshape(x.shape)
         c = _full(n, kk)
         return out, comm.Counts(floats=c, indices=c)
+
+    def compress_sum(self, keys, x):
+        # fused selection + local client-axis partial sum in one Pallas
+        # pass; the kernel's threshold/tie-break path is the bitwise-pinned
+        # one, so dense/counts/sum all match the two-pass default exactly
+        # (tests/test_pallas_parity.py).  f32 flat payloads only — the
+        # symmetrized matrix codec and f64 GLM streams take the default.
+        if (self.symmetrize or x.dtype != jnp.float32
+                or os.environ.get("REPRO_BL_PALLAS", "0") != "1"):
+            return super().compress_sum(keys, x)
+        from repro.kernels import ops
+        from repro.kernels.topk_threshold import topk_compress_sum
+
+        n = x.shape[0]
+        v = x.reshape(n, -1)
+        kk = min(self.k, v.shape[1])
+        out, s = topk_compress_sum(v, kk, interpret=ops.INTERPRET)
+        c = _full(n, kk)
+        return (out.reshape(x.shape), comm.Counts(floats=c, indices=c),
+                s.reshape(x.shape[1:]))
 
     @property
     def _delta_for(self):

@@ -27,29 +27,41 @@ into three pieces:
          `exact=True` (default) reduces by `all_gather` + the *identical*
          local reduction, which is bitwise-equal to the single-device
          backend (pinned by tests/test_sharding_multidev.py); `exact=False`
-         uses `lax.psum/pmean/pmax`, which is bandwidth-optimal but can
+         reduces per the method's `ReducePlan` (`lax.psum/pmean/pmax` of
+         locally pre-reduced partials), which is bandwidth-optimal but can
          differ in the last ulp (summation order).
+
+     Specs batch a round's uplink legs through `Reducer.reduce_tree` (one
+     collective per dtype instead of one per leg) and run server-only math
+     — eigendecompositions, Newton solves — under `Reducer.once` (computed
+     on shard 0 and broadcast by gather-and-select instead of replicated
+     on every shard).  Both are bitwise-neutral restructurings; together
+     they are what closed the sharded-vs-fast per-round gap.
 
   3. **Drivers** — jitted `lax.scan`s over rounds.  A `MethodSpec` (see
      `repro.core.specs`) supplies `prepare/init/step`; the drivers never
-     know which algorithm they are running.  Two entry points:
+     know which algorithm they are running.  ONE chunked scan program
+     underlies both entry points — the carry is an explicit, DONATED
+     input/output and per-round PRNG keys are explicit scan inputs:
 
-       * `run_rounds`  — the batch driver: one scan over a fixed round
-         budget, histories come back at the end (the figure path).
-       * `run_chunk` / `init_serve_carry` — the *service-loop* driver: the
-         scan carry is an explicit input/output, rounds run in bounded
-         chunks so control returns to the host between chunks (fault
-         injection, checkpointing — see `repro.launch.fed_serve`).  Per-
-         round PRNG keys are ``fold_in(root_key, t)`` of the absolute round
-         index, so a trajectory is invariant to how rounds are batched into
-         chunks — the crash-safe bit-exact-resume contract.
+       * `run_rounds`  — the batch driver (figure path): feeds its
+         pre-split key array through one chunk (or one chunk per
+         `StreamHook.every` rounds, emitting progress at chunk boundaries
+         from the host — which is why streaming works on both backends).
+       * `run_chunk` / `init_serve_carry` — the *service-loop* driver:
+         rounds run in bounded chunks so control returns to the host
+         between chunks (fault injection, checkpointing — see
+         `repro.launch.fed_serve`).  Per-round keys are
+         ``fold_in(root_key, t)`` of the absolute round index, so a
+         trajectory is invariant to how rounds are batched into chunks —
+         the crash-safe bit-exact-resume contract.
 
      The sharded backend wraps the same scan bodies in a single `shard_map`
      over the client mesh, so a whole sharded trajectory (or chunk) is
-     still one SPMD program.  For the chunked driver the carry itself
-     crosses the shard_map boundary; `carry_client_flags` derives which
-     carry leaves are client-stacked (the carry serialization contract —
-     see `init_serve_carry`).
+     still one SPMD program.  The carry itself crosses the shard_map
+     boundary; `carry_client_flags` derives which carry leaves are
+     client-stacked (the carry serialization contract — see
+     `init_serve_carry`).
 """
 from __future__ import annotations
 
@@ -59,6 +71,7 @@ from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.sharding.rules import CLIENT_AXIS
 
@@ -68,6 +81,59 @@ from . import client_batch, comm
 # ==========================================================================
 # Reducers — the pluggable aggregation backend
 # ==========================================================================
+#: collective modes a `ReducePlan` can assign to an uplink payload class
+_PLAN_MODES = ("gather", "psum", "pmean")
+#: ops `Reducer.reduce_tree` understands, per leaf
+_REDUCE_OPS = ("mean", "sum", "max")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReducePlan:
+    """Per-method collective-mode selection for the sharded reducer.
+
+    Active only when ``ShardMapReducer(exact=False)``: each uplink leaf is
+    classified by its payload rank (leaf shape minus the client axis —
+    0 → ``scalar``, 1 → ``vector``, ≥2 → ``dense``) and reduced with the
+    mode that class names:
+
+      * ``"psum"``   — local pre-reduce + `lax.psum` in the mesh's fixed
+        tree order (bandwidth-optimal; last-ulp summation-order drift);
+      * ``"pmean"``  — local pre-mean + `lax.pmean` (same wire cost as
+        psum; keeps magnitudes O(1) for f32 payloads);
+      * ``"gather"`` — the exact-mode dataflow for just that class
+        (all_gather + the identical local reduction, bitwise).
+
+    ``exact=True`` ignores the mode fields — every leg gathers, which is
+    what the cross-backend bitwise contract pins.  ``server_once`` gates
+    `Reducer.once` (compute server-only math on shard 0, broadcast);
+    ``fuse_uplink`` gates packing same-collective/same-dtype legs into one
+    collective in `Reducer.reduce_tree`.  Both are bitwise-neutral — they
+    are escape hatches for debugging, not parity knobs.
+
+    Specs attach a plan as the ``MethodSpec.reduce_plan`` class attribute;
+    the engine copies it onto the `ShardMapReducer` it builds."""
+
+    dense: str = "psum"
+    vector: str = "psum"
+    scalar: str = "psum"
+    server_once: bool = True
+    fuse_uplink: bool = True
+
+    def __post_init__(self):
+        for f in ("dense", "vector", "scalar"):
+            if getattr(self, f) not in _PLAN_MODES:
+                raise ValueError(
+                    f"ReducePlan.{f} must be one of {_PLAN_MODES}, "
+                    f"got {getattr(self, f)!r}")
+
+    def mode_for(self, payload_ndim: int) -> str:
+        if payload_ndim == 0:
+            return self.scalar
+        if payload_ndim == 1:
+            return self.vector
+        return self.dense
+
+
 @dataclasses.dataclass(frozen=True)
 class Reducer:
     """Cross-client reduction interface.  `n` is the GLOBAL client count;
@@ -102,10 +168,57 @@ class Reducer:
         """Per-client PRNG keys for this shard: (n_local, 2)."""
         return self.shard(jax.random.split(key, self.n))
 
+    def reduce_tree(self, tree, ops="mean"):
+        """Reduce a whole uplink pytree across the fleet in one shot.
+
+        ``ops`` is ``"mean" | "sum" | "max"`` applied to every leaf, or a
+        matching pytree of those strings (one op per leaf).  Semantically
+        identical to per-leaf `mean`/`sum`/`max` calls — bitwise so on the
+        single-device backend and on the exact sharded backend — but the
+        sharded reducer packs all leaves of the same (collective, dtype)
+        group into ONE collective instead of one per leaf, which is where
+        the per-round collective count collapses (see `ShardMapReducer`)."""
+        ops_tree = (jax.tree.map(lambda _: ops, tree)
+                    if isinstance(ops, str) else ops)
+
+        def red(x, op):
+            if op not in _REDUCE_OPS:
+                raise ValueError(
+                    f"reduce_tree op must be one of {_REDUCE_OPS}, got {op!r}")
+            return getattr(self, op)(x)
+
+        return jax.tree.map(red, tree, ops_tree)
+
     def tree_mean(self, tree):
         """`mean` mapped over a pytree of (n_local, ...) leaves — the
         cross-client reduction for pytree coefficient streams (BL-DNN)."""
-        return jax.tree.map(self.mean, tree)
+        return self.reduce_tree(tree, "mean")
+
+    def tree_mean_presummed(self, tree, local_sums):
+        """Fleet mean of client-stacked leaves given precomputed LOCAL
+        client-axis sums (`local_sums`, payload-shaped — the extra output
+        of a fused compress-then-reduce codec, see
+        `repro.core.compressors.Compressor.compress_sum`).
+
+        Backends that reduce exactly ignore ``local_sums`` and reduce
+        ``tree`` itself (bitwise-identical to `tree_mean`); the
+        bandwidth-optimal sharded path (``exact=False``) psums only the
+        pre-summed compressed payloads — the collective moves one
+        payload-sized tensor per dtype instead of the dense client stack."""
+        del local_sums
+        return self.tree_mean(tree)
+
+    def once(self, f: Callable, *args):
+        """Run server-only math ``f(*args)`` once per fleet.
+
+        On the single-device backend this is a plain call.  The sharded
+        backend computes ``f`` on shard 0 only (the other shards' cores sit
+        out instead of replicating the same eigendecomposition/solve ndev
+        times) and broadcasts the result by gather-and-select — pure data
+        movement, so the value every shard sees is bitwise the value the
+        replicated computation would have produced.  ``f`` must be
+        collective-free (inputs already reduced/replicated)."""
+        return f(*args)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,18 +242,31 @@ class VmapReducer(Reducer):
         return x
 
 
+#: per-op local reduction over a gathered (n, ...) stack — the SAME ops
+#: `VmapReducer` applies, which is what makes the exact path bitwise
+_LOCAL_REDUCE = {
+    "mean": lambda g: jnp.mean(g, axis=0),
+    "sum": lambda g: jnp.sum(g, axis=0),
+    "max": lambda g: jnp.max(g, axis=0),
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardMapReducer(Reducer):
     """Mesh backend: clients sharded over `axis` inside `shard_map`.
 
     exact=True reduces by `all_gather` + the same local reduction as
     `VmapReducer` — bitwise-identical trajectories to the single-device
-    fast path.  exact=False reduces with `lax.psum/pmean/pmax` (less wire
+    fast path; `reduce_tree` packs every leaf of a dtype into ONE tiled
+    gather (reshape/concat/split are pure data movement, so fusion is
+    bitwise-neutral).  exact=False reduces per the method's `ReducePlan`
+    (`lax.psum`/`pmean`/`pmax` of locally pre-reduced partials — less wire
     traffic, last-ulp summation-order differences)."""
 
     ndev: int = 1
     axis: str = CLIENT_AXIS
     exact: bool = True
+    plan: ReducePlan = ReducePlan()
 
     @property
     def n_local(self) -> int:
@@ -150,23 +276,128 @@ class ShardMapReducer(Reducer):
         return jax.lax.all_gather(x, self.axis, axis=0, tiled=True)
 
     def mean(self, x):
-        if self.exact:
-            return jnp.mean(self._gather(x), axis=0)
-        return jax.lax.pmean(jnp.sum(x, axis=0), self.axis) / self.n_local
+        return self.reduce_tree(x, "mean")
 
     def sum(self, x):
-        if self.exact:
-            return jnp.sum(self._gather(x), axis=0)
-        return jax.lax.psum(jnp.sum(x, axis=0), self.axis)
+        return self.reduce_tree(x, "sum")
 
     def max(self, x):
-        if self.exact:
-            return jnp.max(self._gather(x), axis=0)
-        return jax.lax.pmax(jnp.max(x, axis=0), self.axis)
+        return self.reduce_tree(x, "max")
 
     def shard(self, x):
         i = jax.lax.axis_index(self.axis)
         return jax.lax.dynamic_slice_in_dim(x, i * self.n_local, self.n_local, 0)
+
+    # -------------------------------------------------- fused collectives
+    def _gather_leaves(self, leaves):
+        """All-gather a list of (n_local, ...) leaves as one tiled gather
+        per dtype, returning the (n, ...) global stacks leaf-by-leaf.
+        Reshape → concat → gather → split → reshape moves bits without
+        arithmetic, so each returned stack is bitwise the stack a per-leaf
+        `_gather` would have produced."""
+        out = [None] * len(leaves)
+        if not self.plan.fuse_uplink:
+            for i, l in enumerate(leaves):
+                out[i] = self._gather(l)
+            return out
+        by_dtype = {}
+        for i, l in enumerate(leaves):
+            by_dtype.setdefault(l.dtype, []).append(i)
+        for idxs in by_dtype.values():
+            flats = [leaves[i].reshape(self.n_local, -1) for i in idxs]
+            widths = [f.shape[1] for f in flats]
+            cat = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=1)
+            g = self._gather(cat)
+            off = 0
+            for i, w in zip(idxs, widths):
+                out[i] = g[:, off:off + w].reshape(
+                    (self.n,) + leaves[i].shape[1:])
+                off += w
+        return out
+
+    def _fused_psum_like(self, entries):
+        """One `psum`/`pmean` per (collective, dtype) group over a list of
+        ``(index, collective, local_payload)`` entries; returns
+        {index: reduced_payload}."""
+        out = {}
+        groups = {}
+        for i, coll, v in entries:
+            key = ((coll, v.dtype) if self.plan.fuse_uplink
+                   else (coll, v.dtype, i))
+            groups.setdefault(key, []).append((i, v))
+        for key, items in groups.items():
+            coll = key[0]
+            flats = [v.reshape(-1) for _, v in items]
+            cat = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+            red = (jax.lax.pmean(cat, self.axis) if coll == "pmean"
+                   else jax.lax.psum(cat, self.axis))
+            off = 0
+            for (i, v), f in zip(items, flats):
+                out[i] = red[off:off + f.shape[0]].reshape(v.shape)
+                off += f.shape[0]
+        return out
+
+    def reduce_tree(self, tree, ops="mean"):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        op_list = ([ops] * len(leaves) if isinstance(ops, str)
+                   else treedef.flatten_up_to(ops))
+        for op in op_list:
+            if op not in _REDUCE_OPS:
+                raise ValueError(
+                    f"reduce_tree op must be one of {_REDUCE_OPS}, got {op!r}")
+        out = [None] * len(leaves)
+        if self.exact:
+            gathered = self._gather_leaves(leaves)
+            for i, (op, g) in enumerate(zip(op_list, gathered)):
+                out[i] = _LOCAL_REDUCE[op](g)
+            return treedef.unflatten(out)
+        entries, colls = [], {}
+        for i, (l, op) in enumerate(zip(leaves, op_list)):
+            if op == "max":
+                out[i] = jax.lax.pmax(jnp.max(l, axis=0), self.axis)
+                continue
+            mode = self.plan.mode_for(l.ndim - 1)
+            if mode == "gather":
+                out[i] = _LOCAL_REDUCE[op](self._gather(l))
+                continue
+            # pmean of equal-sized local means IS the global mean; sums (and
+            # means under a psum-mode plan) go up as local sums
+            colls[i] = "pmean" if (mode == "pmean" and op == "mean") else "psum"
+            loc = jnp.mean(l, axis=0) if colls[i] == "pmean" else jnp.sum(l, axis=0)
+            entries.append((i, colls[i], loc))
+        for i, red in self._fused_psum_like(entries).items():
+            if colls[i] == "psum" and op_list[i] == "mean":
+                red = red / self.n
+            out[i] = red
+        return treedef.unflatten(out)
+
+    def tree_mean_presummed(self, tree, local_sums):
+        if self.exact:
+            return self.reduce_tree(tree, "mean")
+        leaves, treedef = jax.tree_util.tree_flatten(local_sums)
+        entries = []
+        for i, s in enumerate(leaves):
+            if self.plan.mode_for(s.ndim) == "pmean":
+                entries.append((i, "pmean", s / self.n_local))
+            else:
+                entries.append((i, "psum", s))
+        red = self._fused_psum_like(entries)
+        out = [red[i] if coll == "pmean" else red[i] / self.n
+               for i, coll, _ in entries]
+        return treedef.unflatten(out)
+
+    def once(self, f: Callable, *args):
+        if not self.plan.server_once:
+            return f(*args)
+        shapes = jax.eval_shape(f, *args)
+        zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        on_shard0 = jax.lax.axis_index(self.axis) == 0
+        out = jax.lax.cond(on_shard0, lambda: f(*args), lambda: zeros)
+        # broadcast by gather-and-select, NOT psum of a one-hot stack:
+        # psum(x, 0, ..., 0) can flip the sign of -0.0, gather cannot
+        return jax.tree.map(
+            lambda o: jax.lax.all_gather(o, self.axis, axis=0,
+                                         tiled=False)[0], out)
 
 
 # ==========================================================================
@@ -249,6 +480,39 @@ def tree_shift_update(compress: Callable, target, shift,
     S = treedef.unflatten([o[0] for o in outs])
     new_shift = treedef.unflatten([o[1] for o in outs])
     return S, new_shift, tuple(o[2] for o in outs)
+
+
+def shift_update_sum(compress_sum: Callable, target: jax.Array,
+                     shift: jax.Array, alpha: float):
+    """`shift_update` through a fused compress-then-reduce codec.
+
+    ``compress_sum`` maps a client-stacked delta to ``(dense, aux,
+    local_sum)`` where ``local_sum == dense.sum(axis=0)`` (see
+    `repro.core.compressors.Compressor.compress_sum` — under
+    ``REPRO_BL_PALLAS=1`` Top-K fuses the selection and the partial sum
+    into one kernel pass).  Returns ``(S, new_shift, aux, local_sum)``;
+    feed the sum to `Reducer.tree_mean_presummed` so the bandwidth-optimal
+    sharded path reduces the pre-summed payload instead of the stack."""
+    S, aux, s_local = compress_sum(target - shift)
+    return S, shift + alpha * S, aux, s_local
+
+
+def tree_shift_update_sum(compress_sum: Callable, target, shift, alpha: float):
+    """`tree_shift_update` through fused compress-then-reduce codecs:
+    ``compress_sum(i, delta) -> (dense, aux, local_sum)`` per leaf.
+    Returns ``(S, new_shift, auxs, local_sums)`` — the first two and last
+    pytrees shaped like the inputs, auxs a tuple in leaf order."""
+    t_leaves, treedef = jax.tree_util.tree_flatten(target)
+    s_leaves = jax.tree_util.tree_leaves(shift)
+    if len(t_leaves) != len(s_leaves):
+        raise ValueError(
+            f"target/shift leaf mismatch: {len(t_leaves)} vs {len(s_leaves)}")
+    outs = [shift_update_sum(lambda d, i=i: compress_sum(i, d), t, s, alpha)
+            for i, (t, s) in enumerate(zip(t_leaves, s_leaves))]
+    S = treedef.unflatten([o[0] for o in outs])
+    new_shift = treedef.unflatten([o[1] for o in outs])
+    local_sums = treedef.unflatten([o[3] for o in outs])
+    return S, new_shift, tuple(o[2] for o in outs), local_sums
 
 
 def participation(R: Reducer, key: jax.Array, tau: int,
@@ -401,62 +665,28 @@ class Env:
 class StreamHook:
     """Mid-sweep instrumentation hook for long runs (`repro.exp` sweeps).
 
-    The engine emits ``callback(t, eval_x, ledger)`` from inside the scan via
-    `jax.debug.callback` every ``every`` rounds — ``t`` is the 0-based round
-    index, ``eval_x`` the round's evaluation iterate ``(d,)`` and ``ledger``
-    the cumulative per-leg `comm.CommLedger` at that round.  Emission is
-    asynchronous host-side instrumentation only: the recorded `History`
-    still comes from the full post-scan gap evaluation, so trajectories and
-    gap streams are unchanged by attaching a hook.  Only supported on the
-    single-device backend — a shard_map callback would fire once per device
-    with shard-local values, so `run_rounds(sharded=True, stream=...)`
-    raises `ValueError` at dispatch instead of failing deep inside the
-    sharded scan.
+    The batch driver (`run_rounds`) splits its round budget into chunks of
+    ``every`` rounds and emits ``callback(t, eval_x, ledger)`` from the
+    host at each chunk boundary — ``t`` is the 0-based round index of the
+    chunk's first round (so emissions land at t = 0, every, 2·every, ...),
+    ``eval_x`` that round's evaluation iterate and ``ledger`` the
+    cumulative per-leg `comm.CommLedger` at that round.  Because emission
+    happens between chunk programs on the host, it works identically on
+    BOTH aggregation backends — including `ShardMapReducer`, whose chunk
+    outputs are replicated fleet-wide values, not shard-local ones.
 
-    The hook is a *static* jit argument: each distinct hook instance
-    compiles its own engine program (stream-less runs keep sharing the
-    original cache), so attach hooks to long runs, not micro-benches.
-    """
+    Emission is instrumentation only: the recorded `History` still comes
+    from the full post-run gap evaluation, and chunking is bitwise-neutral
+    (the chunk-size-invariance contract of the serve driver), so
+    trajectories and gap streams are unchanged by attaching a hook.  Each
+    distinct ``every`` compiles its own chunk program, so attach hooks to
+    long runs, not micro-benches."""
 
     every: int
     callback: Callable
 
     def _emit(self, t, eval_x, ledger):
         self.callback(int(t), eval_x, ledger)
-
-
-def _engine(spec, R: Reducer, batch, basisb, x0, keys, stream=None):
-    env = Env(batch=batch, basisb=basisb, x0=x0,
-              extra=spec.prepare(R, batch, basisb, x0))
-    carry0 = spec.init(R, env)
-
-    def step(carry, xt):
-        t, key_t = xt
-        carry, ys = spec.step(R, env, carry, RoundCtx(key=key_t, t=t))
-        if stream is not None:
-            # only ship (t, eval_x, ledger) to the host on emitting rounds
-            jax.lax.cond(
-                t % stream.every == 0,
-                lambda: jax.debug.callback(stream._emit, t, ys[0], ys[1]),
-                lambda: None)
-        return carry, ys
-
-    ts = jnp.arange(keys.shape[0])
-    _, ys = jax.lax.scan(step, carry0, (ts, keys))
-    # ys = (eval_x (steps, d), CommLedger of (steps,) per-leg streams,
-    # events (steps,) int32 EVENT_* bitmasks — all-zero without a fault
-    # layer, so the batch path drops them).
-    # Specs emit the round's evaluation iterate, not the gap: loss
-    # evaluation is instrumentation, and computing it outside the scan
-    # (a) vectorizes it over all rounds and (b) keeps the gap stream
-    # bitwise-identical across aggregation backends (XLA fuses in-scan loss
-    # evaluation differently inside shard_map, wobbling the reported gap by
-    # an ulp even though the trajectory itself is bitwise-invariant).
-    return ys
-
-
-_engine_jit = functools.partial(
-    jax.jit, static_argnames=("spec", "R", "stream"))(_engine)
 
 
 @jax.jit
@@ -467,25 +697,6 @@ def default_gap_stream(batch, xs_t, f_star):
     Shared by both aggregation backends — same program + bitwise-identical
     iterates ⇒ bitwise-identical gap histories."""
     return jax.vmap(lambda x: jnp.mean(client_batch.losses(batch, x)))(xs_t) - f_star
-
-
-@functools.lru_cache(maxsize=None)
-def _sharded_engine(spec, R: ShardMapReducer, mesh):
-    """One jitted shard_map program per (spec, reducer, mesh) config.
-
-    Specs with ``basis_replicated = True`` (pytree bases shared by the
-    whole fleet, e.g. BL-DNN's `PerLayerSVDBasis`) get a replicated basis
-    in_spec; the default shards the basis's leading client axis like the
-    data batch."""
-    from jax.experimental.shard_map import shard_map
-
-    from repro.sharding.rules import client_engine_specs
-
-    in_specs, out_specs = client_engine_specs(
-        basis_replicated=getattr(spec, "basis_replicated", False))
-    body = functools.partial(_engine, spec, R)
-    return jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_rep=False))
 
 
 def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
@@ -501,29 +712,43 @@ def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
     sharded=False → `VmapReducer` on the default device.
     sharded=True  → `ShardMapReducer` over a 1-D client mesh spanning the
     most local devices that evenly divide the client count (a 1-device
-    world still exercises the shard_map code path).
+    world still exercises the shard_map code path).  ``exact`` selects the
+    bitwise gather path (default) vs the method's `ReducePlan` collectives.
 
-    stream — optional `StreamHook` emitting (round, eval_x, ledger) to the
-    host mid-scan (progress reporting for `repro.exp` sweeps).  Raises
-    `ValueError` on the sharded backend (see `StreamHook`)."""
-    if not sharded:
-        xs_t, leds, _events = _engine_jit(spec, VmapReducer(n=batch.n), batch,
-                                          basisb, x0, keys, stream=stream)
-    else:
+    stream — optional `StreamHook`: the run is chunked every
+    ``stream.every`` rounds and (round, eval_x, ledger) is emitted from
+    each chunk boundary on the host.  Works on both backends.
+
+    This is the chunked service-loop driver (`run_chunk`) under another
+    entry point — one init program plus one scan program per chunk length,
+    with per-round keys supplied explicitly (the batch path pre-splits
+    them; the serve path derives them by `fold_in`).  The scan carry is
+    DONATED between chunks, so per-chunk state never copies."""
+    steps = int(keys.shape[0])
+    init, chunk = _serve_backend(spec, batch, basisb, x0, sharded, exact)
+    carry = init(batch, basisb, x0)
+    chunk_len = steps if stream is None else max(1, int(stream.every))
+    parts = []
+    t = 0
+    while t < steps:
+        s = min(chunk_len, steps - t)
+        ts = jnp.arange(t, t + s)
+        avail = jnp.ones((s, batch.n), bool)
+        carry, ys = chunk(batch, basisb, x0, carry, ts, keys[t:t + s], avail)
         if stream is not None:
-            raise ValueError(
-                "StreamHook is unsupported on the sharded aggregation "
-                "backend (ShardMapReducer, backend='fast+sharded'): a "
-                "shard_map debug callback fires once per device with "
-                "shard-local values.  Run the cell on the single-device "
-                "backend (backend='fast') to stream progress, or disable "
-                "streaming (--progress-every 0).")
-        from repro.launch.mesh import make_client_mesh
-
-        mesh, ndev = make_client_mesh(batch.n)
-        R = ShardMapReducer(n=batch.n, ndev=ndev, exact=exact)
-        xs_t, leds, _events = _sharded_engine(spec, R, mesh)(
-            batch, basisb, x0, keys)
+            # row 0 of the chunk = round t's iterate + cumulative ledger
+            stream._emit(ts[0], ys[0][0], jax.tree.map(lambda a: a[0], ys[1]))
+        parts.append(ys)
+        t += s
+    if len(parts) == 1:
+        xs_t, leds, _events = parts[0]
+    else:
+        xs_t, leds, _events = jax.tree.map(
+            lambda *a: jnp.concatenate(a, axis=0), *parts)
+    # ys = (eval_x (steps, d), CommLedger of (steps,) per-leg streams,
+    # events (steps,) int32 EVENT_* bitmasks — all-zero without a fault
+    # layer, so the batch path drops them).
+    if sharded:
         # outputs come back committed to the client mesh; rehome them so the
         # gap evaluation below is the same default-device program on every
         # backend (this is what makes the histories bitwise-comparable)
@@ -587,29 +812,59 @@ def _flags_key(flags):
     return tuple(leaves), treedef
 
 
-def _chunk_body(spec, R: Reducer, batch, basisb, x0, carry, ts, root_key,
-                avail):
+def _abstract_sig(*trees):
+    """Hashable shape/dtype signature of arbitrary pytrees — everything
+    `carry_client_flags` (a pure shape evaluation) can depend on."""
+    leaves, treedef = jax.tree_util.tree_flatten(trees)
+    return treedef, tuple(
+        (np.shape(l), str(np.result_type(getattr(l, "dtype", type(l)))))
+        for l in leaves)
+
+
+# carry_client_flags costs two full Python traces of spec.init — ~15ms on a
+# mid-size GLM spec, which used to be paid per init_serve_carry AND per
+# run_chunk dispatch (it dwarfed the ~4ms compiled sharded program and was
+# most of the sharded backend's fixed per-call overhead).  The flags are a
+# pure function of (spec, abstract shapes), so memoize on that signature.
+_FLAGS_CACHE: dict = {}
+
+
+def _carry_flags_key_cached(spec, batch, basisb, x0):
+    key = (spec, _abstract_sig(batch, basisb, x0))
+    fk = _FLAGS_CACHE.get(key)
+    if fk is None:
+        fk = _FLAGS_CACHE[key] = _flags_key(
+            carry_client_flags(spec, batch, basisb, x0))
+    return fk
+
+
+def _chunk_body(spec, R: Reducer, batch, basisb, x0, carry, ts, keys, avail):
     env = Env(batch=batch, basisb=basisb, x0=x0,
               extra=spec.prepare(R, batch, basisb, x0))
 
     def step(carry, xt):
-        t, avail_t = xt
-        rc = RoundCtx(key=jax.random.fold_in(root_key, t), t=t,
-                      avail=avail_t)
-        return spec.step(R, env, carry, rc)
+        t, key_t, avail_t = xt
+        return spec.step(R, env, carry, RoundCtx(key=key_t, t=t,
+                                                 avail=avail_t))
 
-    return jax.lax.scan(step, carry, (ts, avail))
+    return jax.lax.scan(step, carry, (ts, keys, avail))
 
 
+# the carry is DONATED: its buffers are reused for the output carry, which
+# kills the per-chunk state copy.  Callers must treat the argument as
+# consumed and continue from the returned carry (every driver in this repo
+# reassigns `carry, ys = chunk(...)`).
 _chunk_jit = functools.partial(
-    jax.jit, static_argnames=("spec", "R"))(_chunk_body)
+    jax.jit, static_argnames=("spec", "R"),
+    donate_argnames=("carry",))(_chunk_body)
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_chunk_fns(spec, R: "ShardMapReducer", mesh, flags_key):
     """Jitted shard_map (init, chunk) programs whose carry crosses the
     shard_map boundary: client-stacked carry leaves shard over the mesh,
-    everything else is replicated (per `carry_client_flags`)."""
+    everything else is replicated (per `carry_client_flags`).  The chunk
+    program donates its carry argument like the vmap path."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -626,7 +881,8 @@ def _sharded_chunk_fns(spec, R: "ShardMapReducer", mesh, flags_key):
         in_specs=in_specs[:3], out_specs=carry_specs, check_rep=False))
     chunk = jax.jit(shard_map(
         functools.partial(_chunk_body, spec, R), mesh=mesh,
-        in_specs=in_specs, out_specs=out_specs, check_rep=False))
+        in_specs=in_specs, out_specs=out_specs, check_rep=False),
+        donate_argnums=(3,))  # (batch, basisb, x0, carry, ts, keys, avail)
     return init, chunk
 
 
@@ -638,9 +894,10 @@ def _serve_backend(spec, batch, basisb, x0, sharded: bool, exact: bool):
     from repro.launch.mesh import make_client_mesh
 
     mesh, ndev = make_client_mesh(batch.n)
-    R = ShardMapReducer(n=batch.n, ndev=ndev, exact=exact)
-    flags = carry_client_flags(spec, batch, basisb, x0)
-    init, chunk = _sharded_chunk_fns(spec, R, mesh, _flags_key(flags))
+    R = ShardMapReducer(n=batch.n, ndev=ndev, exact=exact,
+                        plan=getattr(spec, "reduce_plan", ReducePlan()))
+    fk = _carry_flags_key_cached(spec, batch, basisb, x0)
+    init, chunk = _sharded_chunk_fns(spec, R, mesh, fk)
     return init, chunk
 
 
@@ -671,10 +928,19 @@ def run_chunk(spec, batch, basisb, x0, carry, t0: int, steps: int, root_key,
     reach specs as `RoundCtx.avail`.  An all-ones schedule (the default) is
     bitwise-equivalent to no fault layer at all.
 
+    The input ``carry``'s buffers are DONATED to the chunk program: continue
+    (or checkpoint) from the returned carry, never the argument — reusing
+    the argument raises jax's deleted-buffer error.
+
     Chunk programs compile once per (spec, backend, chunk length); the
     service loop reuses one length for every full chunk, so only a trailing
     partial chunk costs a second compile."""
     ts = jnp.arange(t0, t0 + steps)
+    # the fold_in happens outside the scan (vmapped over the chunk's round
+    # indices — threefry is elementwise, so this is bitwise the in-scan
+    # per-round fold_in) so the scan body takes explicit keys: the batch
+    # driver feeds the same program its pre-split key array instead
+    keys = jax.vmap(lambda t: jax.random.fold_in(root_key, t))(ts)
     if avail is None:
         avail = jnp.ones((steps, batch.n), bool)
     avail = jnp.asarray(avail, bool)
@@ -683,4 +949,4 @@ def run_chunk(spec, batch, basisb, x0, carry, t0: int, steps: int, root_key,
             f"avail schedule must be (steps, n) = ({steps}, {batch.n}), "
             f"got {avail.shape}")
     _, chunk = _serve_backend(spec, batch, basisb, x0, sharded, exact)
-    return chunk(batch, basisb, x0, carry, ts, root_key, avail)
+    return chunk(batch, basisb, x0, carry, ts, keys, avail)

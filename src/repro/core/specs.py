@@ -48,12 +48,14 @@ from .rounds import (
     EVENT_DEGRADED,
     EVENT_NONE,
     Reducer,
+    ReducePlan,
     coeff_layout,
     downlink_broadcast,
     global_grad,
     participation,
     shift_update,
     tree_shift_update,
+    tree_shift_update_sum,
     xi_mask,
     xi_scalar,
 )
@@ -89,6 +91,12 @@ class MethodSpec:
     #: refuses to inject faults into them rather than silently ignoring
     #: the schedule.
     supports_faults = False
+
+    #: Collective-mode selection for the sharded reducer's exact=False path
+    #: (see `rounds.ReducePlan`).  The default psums every leg; specs with
+    #: f32 payloads (BL-DNN) override toward pmean to keep local partials
+    #: O(1).  Ignored entirely in exact mode.
+    reduce_plan = ReducePlan()
 
     def prepare(self, R: Reducer, batch, basisb, x0):
         return None
@@ -149,24 +157,34 @@ class BL1Spec(MethodSpec):
         lay = env.extra
         ys = (z, led, jnp.int32(EVENT_NONE))  # gap evaluated at z, post-scan
 
-        Hmu = proj_mu(H, self.mu)
-        # gradient leg (both branches evaluated, selected by ξ)
-        grad_z = global_grad(R, env.batch, z)
-        w_n = jnp.where(xi, z, w)
-        grad_w_n = jnp.where(xi, grad_z, grad_w)
-        g = jnp.where(xi, grad_z, Hmu @ (z - w) + grad_w)
-        led = led.add(grad_up=jnp.where(xi, self.grad_bits, 0.0))
-
-        # Hessian-coefficient learning, all clients at once
+        # client-side legs: gradients + Hessian-coefficient learning, then
+        # ONE fused uplink reduction for the round (gradient stack, Hessian
+        # shift reconstruction, and the bit accounting share a collective)
         k_h, k_m, k_xi = jax.random.split(key_t, 3)
         S, L_n, counts = shift_update(
             lambda delta: self.hess_comp.compress(R.client_keys(k_h), delta),
             lay.target_at(z), L, self.alpha)
-        H_n = H + R.mean(lay.recon(self.alpha * S))
-        led = led.add(hess_up=R.mean(comm.price(self.hess_comp.wire, counts)))
+        red = R.reduce_tree(
+            {"grad_z": client_batch.grads(env.batch, z),
+             "dH": lay.recon(self.alpha * S),
+             "sbits": comm.price(self.hess_comp.wire, counts)})
+        grad_z = red["grad_z"]
+        H_n = H + red["dH"]
+        led = led.add(grad_up=jnp.where(xi, self.grad_bits, 0.0),
+                      hess_up=red["sbits"])
 
-        # server model step + compressed broadcast
-        x_next = z - jnp.linalg.solve(Hmu, g)
+        # gradient leg (both branches evaluated, selected by ξ)
+        w_n = jnp.where(xi, z, w)
+        grad_w_n = jnp.where(xi, grad_z, grad_w)
+
+        # server model step (μ-projection + Newton solve computed once per
+        # fleet, not once per shard) + compressed broadcast
+        def server_step(H, grad_z, z, w, grad_w, xi):
+            Hmu = proj_mu(H, self.mu)
+            g = jnp.where(xi, grad_z, Hmu @ (z - w) + grad_w)
+            return z - jnp.linalg.solve(Hmu, g)
+
+        x_next = R.once(server_step, H, grad_z, z, w, grad_w, xi)
         v, vbits = self.model_comp(k_m, x_next - z)
         led = led.add(model_down=vbits)
         z_n = z + self.eta * v
@@ -216,10 +234,13 @@ class BL2Spec(MethodSpec):
         lay = env.extra
         I = jnp.eye(d, dtype=env.x0.dtype)
 
-        H = R.mean(Hi)
-        l_avg = R.mean(li)
-        g = R.mean(gi)
-        x_cur = jnp.linalg.solve((H + H.T) / 2.0 + l_avg * I, g)
+        # one fused uplink collective for the server system, one solve per
+        # fleet (shard 0) instead of one per shard
+        red = R.reduce_tree({"H": Hi, "l": li, "g": gi})
+        x_cur = R.once(
+            lambda H, l_avg, g: jnp.linalg.solve(
+                (H + H.T) / 2.0 + l_avg * I, g),
+            red["H"], red["l"], red["g"])
         ys = (x_cur, led)  # gap evaluated at x_cur, outside the scan
 
         k_part, k_m, k_h, k_xi = jax.random.split(key_t, 4)
@@ -250,8 +271,9 @@ class BL2Spec(MethodSpec):
         gi_n = jnp.where(xi[:, None], gi_fresh, gi_recon)
 
         g_bits = jnp.where(xi, d * FLOAT_BITS, FLOAT_BITS + 1.0)
-        led = led.add(hess_up=R.sum(jnp.where(part, sbits, 0.0)) / R.n,
-                      grad_up=R.sum(jnp.where(part, g_bits, 0.0)) / R.n)
+        bits = R.reduce_tree({"s": jnp.where(part, sbits, 0.0),
+                              "g": jnp.where(part, g_bits, 0.0)}, "sum")
+        led = led.add(hess_up=bits["s"] / R.n, grad_up=bits["g"] / R.n)
         return (z_n, w_n, L_n, Hi_n, li_n, gi_n, led), (*ys, pev)
 
 
@@ -299,10 +321,16 @@ class BL3Spec(MethodSpec):
         h_tilde = jax.vmap(_psd_h_tilde)
         recon_full = jax.vmap(_psd_reconstruct_full)
 
-        beta = R.max(beta_i)
-        Hk = beta * R.mean(A_i) - R.mean(C_i)
-        gk = beta * R.mean(g1) - R.mean(g2)
-        x_cur = jnp.linalg.solve(Hk, gk)
+        # four means + the β max fused into one uplink collective; the
+        # server system assembles and solves once per fleet (shard 0)
+        red = R.reduce_tree(
+            {"A": A_i, "C": C_i, "g1": g1, "g2": g2, "beta": beta_i},
+            {"A": "mean", "C": "mean", "g1": "mean", "g2": "mean",
+             "beta": "max"})
+        x_cur = R.once(
+            lambda beta, A, C, g1m, g2m: jnp.linalg.solve(
+                beta * A - C, beta * g1m - g2m),
+            red["beta"], red["A"], red["C"], red["g1"], red["g2"])
         ys = (x_cur, led)  # gap evaluated at x_cur, outside the scan
 
         k_part, k_m, k_h, k_xi = jax.random.split(key_t, 4)
@@ -349,9 +377,10 @@ class BL3Spec(MethodSpec):
         # every PARTICIPANT's β_i^{k+1} reaches the server (one float,
         # billed with the Hessian leg; silent clients send nothing)
         g_bits = jnp.where(xi, 2.0 * d * FLOAT_BITS, 2.0 * FLOAT_BITS + 1.0)
-        led = led.add(
-            hess_up=R.sum(jnp.where(part, sbits + FLOAT_BITS, 0.0)) / R.n,
-            grad_up=R.sum(jnp.where(part, g_bits, 0.0)) / R.n)
+        bits = R.reduce_tree(
+            {"s": jnp.where(part, sbits + FLOAT_BITS, 0.0),
+             "g": jnp.where(part, g_bits, 0.0)}, "sum")
+        led = led.add(hess_up=bits["s"] / R.n, grad_up=bits["g"] / R.n)
         carry_n = (z_n, w_n, zprev_n, L_n, gam_n, A_n, C_n, g1_n, g2_n,
                    beta_i_n, led)
         return carry_n, (*ys, pev)
@@ -389,10 +418,10 @@ class DianaSpec(MethodSpec):
         gi = client_batch.grads(env.batch, x)
         q, counts = self.comp.compress(R.client_keys(rc.key), gi - h)
         bits = comm.price(self.comp.wire, counts)
-        ghat = R.mean(h + q)
+        red = R.reduce_tree({"ghat": h + q, "bits": bits})
         h_n = h + self.alpha_h * q
-        x_n = x - self.lr * ghat
-        return ((x_n, h_n, led.add(grad_up=R.mean(bits))),
+        x_n = x - self.lr * red["ghat"]
+        return ((x_n, h_n, led.add(grad_up=red["bits"])),
                 (x, led, jnp.int32(EVENT_NONE)))
 
 
@@ -409,12 +438,13 @@ class NewtonSpec(MethodSpec):
         x, led = carry
         batch = env.batch
         if env.basisb is None:
-            H = R.mean(client_batch.hess(batch, x))
+            Hc = client_batch.hess(batch, x)
         else:
             coef = client_batch.hess_coeff_target(env.basisb, batch, x)
-            H = R.mean(env.basisb.server_reconstruct(coef, batch.lam))
-        g = global_grad(R, batch, x)
-        x_n = x - jnp.linalg.solve(H, g)
+            Hc = env.basisb.server_reconstruct(coef, batch.lam)
+        red = R.reduce_tree({"H": Hc, "g": client_batch.grads(batch, x)})
+        x_n = R.once(lambda H, g: x - jnp.linalg.solve(H, g),
+                     red["H"], red["g"])
         return ((x_n, led.add(hess_up=self.hess_bits,
                               grad_up=self.grad_bits)),
                 (x, led, jnp.int32(EVENT_NONE)))
@@ -483,20 +513,27 @@ class FedNLBAGSpec(MethodSpec):
         send = R.shard(send)
         ys = (z, led, ev)  # gap evaluated at z, outside the scan
         gtab_n = jnp.where(send[:, None], client_batch.grads(batch, z), gtab)
-        ghat = R.mean(gtab_n)
-        led = led.add(grad_up=R.sum(
-            jnp.where(send, batch.d * FLOAT_BITS, 0.0)) / R.n)
 
-        # FedNL Hessian-coefficient learning (same shift recursion as BL1)
+        # FedNL Hessian-coefficient learning (same shift recursion as BL1);
+        # both legs' payloads and bit accounting share one fused collective
         S, L_n, counts = shift_update(
             lambda delta: self.hess_comp.compress(R.client_keys(k_h), delta),
             lay.target_at(z), L, self.alpha)
-        H_n = H + R.mean(lay.recon(self.alpha * S))
-        led = led.add(hess_up=R.mean(comm.price(self.hess_comp.wire, counts)))
+        red = R.reduce_tree(
+            {"ghat": gtab_n, "dH": lay.recon(self.alpha * S),
+             "gbits": jnp.where(send, batch.d * FLOAT_BITS, 0.0),
+             "sbits": comm.price(self.hess_comp.wire, counts)},
+            {"ghat": "mean", "dH": "mean", "gbits": "sum", "sbits": "mean"})
+        led = led.add(grad_up=red["gbits"] / R.n, hess_up=red["sbits"])
+        H_n = H + red["dH"]
 
         # damped Newton step: η < 1 tempers the staleness feedback loop an
-        # aggressive q would otherwise excite (η = 1 recovers FedNL when q = 1)
-        z_n = z - self.eta * jnp.linalg.solve(proj_mu(H_n, self.mu), ghat)
+        # aggressive q would otherwise excite (η = 1 recovers FedNL when
+        # q = 1); projected + solved once per fleet (shard 0)
+        z_n = R.once(
+            lambda H_n, ghat: z - self.eta * jnp.linalg.solve(
+                proj_mu(H_n, self.mu), ghat),
+            H_n, red["ghat"])
         return (z_n, L_n, H_n, gtab_n, led), ys
 
 
@@ -550,6 +587,11 @@ class BLDNNSpec(MethodSpec):
 
     basis_replicated = True       # PerLayerSVDBasis is fleet-global
 
+    #: exact=False collectives: f32 coefficient/Fisher payloads travel as
+    #: pmean (local partials stay O(1) in f32); the f64 bit accounting
+    #: scalars psum (bit counts are integers in f64, so order-exact).
+    reduce_plan = ReducePlan(dense="pmean", vector="pmean", scalar="psum")
+
     WIRE_FLOAT_BITS = 32          # DNN tensors are f32 on the wire
 
     def _bill(self, comps, auxs):
@@ -589,36 +631,49 @@ class BLDNNSpec(MethodSpec):
             lambda i, delta: self.grad_comps[i].compress(
                 R.client_keys(gks[i]), delta),
             coeff, shift, self.alpha)
-        # the server mirrors every client's recursion, so the aggregated
-        # gradient estimate is the fleet mean of the UPDATED shifts
-        coeff_mean = R.tree_mean(shift_n)
-        g_hat = coeff_mean if basis is None else basis.unrotate(coeff_mean)
         gbits = self._bill(self.grad_comps, gauxs)
 
         if self.precondition:
             # the second-order leg: Fisher diagonal through the same
-            # recursion (diagonal curvature lives in the standard basis)
+            # recursion (diagonal curvature lives in the standard basis),
+            # driven through the fused compress-then-reduce codec — the
+            # compressor also emits the local client-axis partial sum, so
+            # the bandwidth-optimal sharded path reduces one payload-sized
+            # tensor per leaf instead of the dense client stack
             ftarget = jax.tree.map(lambda gi: gi.astype(jnp.float32) ** 2, g)
             fks = jax.random.split(k_f, n_leaves)
-            Fc, fshift_n, fauxs = tree_shift_update(
-                lambda i, delta: self.fisher_comps[i].compress(
+            Fc, fshift_n, fauxs, fsums = tree_shift_update_sum(
+                lambda i, delta: self.fisher_comps[i].compress_sum(
                     R.client_keys(fks[i]), delta),
                 ftarget, fshift, self.fisher_alpha)
+            fbits = self._bill(self.fisher_comps, fauxs)
+        else:
+            fshift_n = fshift
+            fbits = jnp.zeros((R.n_local,), jnp.float64)
+
+        # ONE fused uplink reduction for the round: every coefficient leaf
+        # plus both bit-accounting legs (per dtype: f32 coeffs, f64 bits).
+        # The server mirrors every client's recursion, so the aggregated
+        # gradient estimate is the fleet mean of the UPDATED shifts.
+        red = R.reduce_tree({"coeff": shift_n, "gbits": gbits,
+                             "fbits": fbits})
+        coeff_mean = red["coeff"]
+        g_hat = coeff_mean if basis is None else basis.unrotate(coeff_mean)
+
+        if self.precondition:
+            fmeans = R.tree_mean_presummed(Fc, fsums)
             server_f_n = jax.tree.map(
-                lambda sf, fc: sf + self.fisher_alpha * R.mean(fc),
-                server_f, Fc)
+                lambda sf, fm: sf + self.fisher_alpha * fm, server_f, fmeans)
             update = jax.tree.map(
                 lambda gh, sf: gh / (jnp.sqrt(jnp.maximum(sf, 0.0)) + self.eps),
                 g_hat, server_f_n)
-            fbits = self._bill(self.fisher_comps, fauxs)
         else:
-            fshift_n, server_f_n, update = fshift, server_f, g_hat
-            fbits = jnp.zeros((R.n_local,), jnp.float64)
+            server_f_n, update = server_f, g_hat
 
         params_n = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) - self.lr * u).astype(p.dtype),
             params, update)
-        led = led.add(grad_up=R.mean(gbits), hess_up=R.mean(fbits))
+        led = led.add(grad_up=red["gbits"], hess_up=red["fbits"])
         return (params_n, shift_n, fshift_n, server_f_n, led), ys
 
     def eval_streams(self, batch, xs_t, f_star):

@@ -10,9 +10,10 @@ sweeps (cell × seed), skips cells whose artifact already exists with a
 matching config digest (resume), and regenerates the figure CSVs from the
 artifacts — so CSVs are always consistent with the JSON records.
 
-Long cells can stream progress mid-scan: ``progress_every=N`` attaches a
-`repro.core.rounds.StreamHook` that reports (round, gap, Mbits/node) from
-inside the running scan for the BL methods on the single-device backend.
+Long cells can stream progress mid-sweep: ``progress_every=N`` attaches a
+`repro.core.rounds.StreamHook` that reports (round, gap, Mbits/node) at
+chunk boundaries for the BL methods — on the single-device AND sharded
+backends alike (the driver chunks the scan to the hook's cadence).
 """
 from __future__ import annotations
 
@@ -173,8 +174,8 @@ def run_cell(exp: Experiment, cell: MethodCell, prob: Problem, *,
       seed: sweep seed; a ``seed`` in ``cell.params`` takes precedence
         (cells that pin a seed reproduce one specific committed curve).
       backend: override the cell's engine backend.
-      stream: optional mid-scan progress hook (BL methods, single-device
-        backends only — see `repro.core.rounds.StreamHook`).
+      stream: optional mid-sweep progress hook (BL methods, any fast
+        backend — see `repro.core.rounds.StreamHook`).
     """
     m = cell.method
     steps = cell.steps if steps is None else steps
@@ -200,7 +201,7 @@ def run_cell(exp: Experiment, cell: MethodCell, prob: Problem, *,
         eng_backend = "fast" if backend == "auto" else backend
         return bldnn.run_bldnn(prob.loss_fn, prob.eval_fn, prob.params0,
                                prob.batch, steps, cfg, seed=run_seed,
-                               backend=eng_backend)
+                               backend=eng_backend, stream=stream)
 
     n, d = prob.n, prob.d
     clients, x0, xs = prob.clients, prob.x0, prob.x_star
@@ -308,15 +309,10 @@ def run_experiment(exp: Experiment, out_dir: str, artifacts_dir: str, *,
                     prob = build_problem(exp.problem)
                 stream = None
                 if progress_every and cell.method in ("bl1", "bl2", "bl3"):
-                    if cell.backend == "fast+sharded":
-                        # StreamHook is single-device only (see rounds.py);
-                        # don't pay the hook's fleet copy for a no-op
-                        log(f"  {exp.name}/{cell.name}: progress streaming "
-                            "unavailable on the sharded backend — will "
-                            "report at completion")
-                    else:
-                        stream = _progress_hook(exp, cell, prob,
-                                                progress_every, log)
+                    # chunk-boundary emission works on every fast backend,
+                    # sharded included (see rounds.StreamHook)
+                    stream = _progress_hook(exp, cell, prob,
+                                            progress_every, log)
                 t0 = time.perf_counter()
                 hist = run_cell(exp, cell, prob, steps=eff_steps, seed=seed,
                                 stream=stream)

@@ -231,8 +231,9 @@ def build_spec(loss_fn, eval_fn, params: Params,
 
 def run_bldnn(loss_fn, eval_fn, params0: Params, batch: TreeBatch,
               steps: int, cfg: BLDNNConfig = BLDNNConfig(), *,
-              seed: int = 0, backend: str = "fast",
-              basis: Optional[PerLayerSVDBasis] = None) -> History:
+              seed: int = 0, backend: str = "fast", exact: bool = True,
+              basis: Optional[PerLayerSVDBasis] = None,
+              stream=None) -> History:
     """Train `steps` BL-DNN rounds on the unified round engine.
 
     Args:
@@ -247,9 +248,16 @@ def run_bldnn(loss_fn, eval_fn, params0: Params, batch: TreeBatch,
       seed: PRNG seed (stochastic compressors, per-round keys).
       backend: ``"fast"`` (single-device `VmapReducer`) or
         ``"fast+sharded"`` (clients over the mesh `CLIENT_AXIS`) — bitwise
-        identical histories.
+        identical histories when ``exact``.
+      exact: sharded aggregation parity (see `rounds.ShardMapReducer`).
+        True gathers in fixed order (bitwise = single-device); False takes
+        `BLDNNSpec.reduce_plan`'s ring collectives (pmean per dense/vector
+        leg, psum for bit counters) — fewer bytes on the wire, reductions
+        associate in ring order.  Ignored on the "fast" backend.
       basis: override the `per_layer_svd` basis (defaults to building it
         from ``params0`` via the basis registry).
+      stream: optional `rounds.StreamHook` — chunk-boundary progress
+        emission on either backend.
 
     Returns:
       `History` — ``gaps`` is the training error rate, ``metrics["loss"]``
@@ -267,6 +275,6 @@ def run_bldnn(loss_fn, eval_fn, params0: Params, batch: TreeBatch,
     keys = jax.random.split(jax.random.PRNGKey(seed), steps)
     evals, leds = rounds.run_rounds(
         spec, batch, basis, params0, 0.0, keys,
-        sharded=(backend == "fast+sharded"))
+        sharded=(backend == "fast+sharded"), exact=exact, stream=stream)
     return batched._history(evals, leds)
 

@@ -80,6 +80,54 @@ def topk_row_threshold(a32: jax.Array, k: int, *,
     )(a32)
 
 
+def _compress_sum_kernel(v_ref, out_ref, s_ref, *, k: int):
+    """Fused compress-then-reduce over a whole (n, T) client stack in VMEM:
+    per-row threshold search (the same 31-pass bitwise binary search as
+    `_threshold_kernel`, vectorized over rows), the shared tie-break mask,
+    the dense masked values, AND the local cross-client partial sum — one
+    pass, one kernel."""
+    v = v_ref[...]                                     # (n, T) f32 values
+    a = jnp.abs(v)
+    keys = jax.lax.bitcast_convert_type(a, jnp.int32)  # monotone for a ≥ 0
+
+    def body(i, t):
+        cand = t | (jnp.int32(1) << (jnp.int32(30) - i))
+        cnt = jnp.sum((keys >= cand).astype(jnp.int32), axis=1, keepdims=True)
+        return jnp.where(cnt >= k, cand, t)
+
+    t = jax.lax.fori_loop(0, 31, body, jnp.zeros((v.shape[0], 1), jnp.int32))
+    tf = jax.lax.bitcast_convert_type(t, jnp.float32)
+    out = jnp.where(keep_mask(a, tf, k), v, jnp.zeros_like(v))
+    out_ref[...] = out
+    s_ref[...] = jnp.sum(out, axis=0)                  # client-axis partial
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_compress_sum(v: jax.Array, k: int, *, interpret: bool = True):
+    """Exact |·|-Top-K of each row of f32 `v` (n, T) fused with the sum of
+    the compressed rows: returns ``(dense (n, T), col_sum (T,))`` with
+    ``col_sum == dense.sum(axis=0)``.
+
+    The threshold/tie-break path is shared with `topk_row_threshold` /
+    `keep_mask`, so ``dense`` is bitwise the two-pass selection's output
+    and ``col_sum`` is bitwise the XLA reduction of it — the fusion saves
+    a pass over the stack, not an ulp (pinned by
+    tests/test_pallas_parity.py).  k is clamped to [1, T] like
+    `topk_row_threshold`."""
+    if v.dtype != jnp.float32:
+        raise TypeError(
+            f"topk_compress_sum runs its bitwise search on f32 bit "
+            f"patterns, got {v.dtype}")
+    n, T = v.shape
+    kk = max(1, min(k, T))
+    return pl.pallas_call(
+        functools.partial(_compress_sum_kernel, k=kk),
+        out_shape=(jax.ShapeDtypeStruct((n, T), jnp.float32),
+                   jax.ShapeDtypeStruct((T,), jnp.float32)),
+        interpret=interpret,
+    )(v)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def topk_threshold(x: jax.Array, k: int, *, interpret: bool = True):
     """Global exact Top-K over a whole tensor (flattened): returns

@@ -222,6 +222,8 @@ def serve(*, exp_name: str, cell_name: str, seed: int = 0, chunk: int = 25,
             avail, waited = None, 0.0
         else:
             avail, waited = plan.schedule(t, steps)
+        # run_chunk DONATES the carry (its buffers back the next chunk's
+        # output) — reassign, and only ever checkpoint the returned carry
         carry, ys = rounds.run_chunk(spec, batch, basisb, x0, carry, t,
                                      steps, root_key, avail=avail,
                                      sharded=sharded)

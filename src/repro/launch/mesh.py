@@ -6,6 +6,8 @@ XLA_FLAGS before first jax init while smoke tests want a 1-device world.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
 
@@ -22,6 +24,7 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+@functools.lru_cache(maxsize=None)
 def make_client_mesh(n_clients: int):
     """1-D client mesh (axis = sharding.rules.CLIENT_AXIS) for the round
     engine (`repro.core.rounds`).
@@ -30,6 +33,9 @@ def make_client_mesh(n_clients: int):
     every shard holds the same number of clients (the engine's bitwise
     parity contract needs equal shards).  Returns (mesh, n_devices); a
     1-device world yields a trivial mesh that still exercises shard_map.
+    Cached: the device world is locked at first jax init, so the mesh for a
+    given client count never changes within a process (and Mesh identity
+    keeps the downstream jitted-program caches hot).
     """
     import numpy as np
     from jax.sharding import Mesh

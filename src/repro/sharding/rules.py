@@ -27,39 +27,27 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 CLIENT_AXIS = "data"
 
 
-def client_engine_specs(basis_replicated: bool = False):
-    """shard_map specs for the unified round engine's scan body.
+def client_chunk_specs(carry_specs, basis_replicated: bool = False):
+    """shard_map specs for the unified chunked round driver's body
+    (`repro.core.rounds._chunk_body` — the one scan program behind both
+    `run_rounds` and `run_chunk`).
 
-    Positional layout is (batch, basisb, x0, keys): the client-stacked
-    pytrees (`ClientBatch`, `BatchedBasis`, `TreeBatch`) shard their
-    leading client axis over CLIENT_AXIS; the server iterate (a (d,)
-    vector or a whole parameter pytree) and per-round PRNG keys are
-    replicated; the history streams — eval iterates, the `CommLedger`
-    pytree of per-leg bit streams, and the per-round degradation-event
-    codes — come back replicated (the second P() is a pytree prefix
+    Positional layout is (batch, basisb, x0, carry, ts, keys, avail) →
+    (carry, (eval_x, ledger, events)).  The client-stacked pytrees
+    (`ClientBatch`, `BatchedBasis`, `TreeBatch`) shard their leading
+    client axis over CLIENT_AXIS; the scan carry crosses the shard_map
+    boundary: ``carry_specs`` is the per-leaf spec pytree derived from
+    `rounds.carry_client_flags` (client-stacked leaves shard over
+    CLIENT_AXIS, server state is replicated).  Per-round keys and the
+    fault-availability schedule ``avail`` (fleet-wide (steps, n)) are
+    replicated, exactly like the participation draws; the history streams
+    come back replicated (the P()s in the output tuple are pytree prefixes
     covering every ledger leg).
 
     ``basis_replicated=True`` replicates the basis argument instead of
     sharding it — pytree bases (`PerLayerSVDBasis`) are fleet-global with
     no client axis to shard (specs opt in via
-    `MethodSpec.basis_replicated`).
-    """
-    sharded = P(CLIENT_AXIS)
-    return ((sharded, P() if basis_replicated else sharded, P(), P()),
-            (P(), P(), P()))
-
-
-def client_chunk_specs(carry_specs, basis_replicated: bool = False):
-    """shard_map specs for the chunked serve driver's body
-    (`repro.core.rounds.run_chunk`).
-
-    Positional layout is (batch, basisb, x0, carry, ts, root_key, avail) →
-    (carry, (eval_x, ledger, events)).  Unlike the batch engine, the scan
-    carry crosses the shard_map boundary here: ``carry_specs`` is the
-    per-leaf spec pytree derived from `rounds.carry_client_flags`
-    (client-stacked leaves shard over CLIENT_AXIS, server state is
-    replicated).  The fault-availability schedule ``avail`` is fleet-wide
-    (steps, n) and replicated, exactly like the participation draws."""
+    `MethodSpec.basis_replicated`)."""
     sharded = P(CLIENT_AXIS)
     in_specs = (sharded, P() if basis_replicated else sharded, P(),
                 carry_specs, P(), P(), P())

@@ -174,18 +174,25 @@ def test_stream_hook_fires_and_preserves_trajectory():
     assert h1.gaps == h0.gaps and h1.up_bits == h0.up_bits
 
 
-def test_stream_hook_raises_on_sharded_backend():
-    """StreamHook is single-device-only; attaching one under the
-    ShardMapReducer used to die obscurely deep inside shard_map — the
-    engine now refuses at dispatch with an actionable message."""
+def test_stream_hook_works_on_sharded_backend():
+    """Attaching a StreamHook under the ShardMapReducer used to be refused
+    at dispatch; the chunked driver now emits at chunk boundaries on every
+    fast backend — same cadence, bitwise-identical history."""
+    import jax
+
     from repro.core.rounds import StreamHook
 
     exp = get_experiment("fig1r1")
     prob = build_problem(exp.problem)
-    hook = StreamHook(every=1, callback=lambda *_: None)
-    with pytest.raises(ValueError, match="sharded"):
-        run_cell(exp, exp.cell("BL1"), prob, steps=3,
-                 backend="fast+sharded", stream=hook)
+    seen = []
+    hook = StreamHook(every=1, callback=lambda t, x, led: seen.append(int(t)))
+    h1 = run_cell(exp, exp.cell("BL1"), prob, steps=3,
+                  backend="fast+sharded", stream=hook)
+    jax.effects_barrier()
+    h0 = run_cell(exp, exp.cell("BL1"), prob, steps=3,
+                  backend="fast+sharded")
+    assert seen == [0, 1, 2]
+    assert h1.gaps == h0.gaps and h1.up_bits == h0.up_bits
 
 
 def test_bits_to_tol_reached_flag():

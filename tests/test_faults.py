@@ -2,8 +2,8 @@
 
 Covers the `rounds.participation` τ validation/clamping contract and its
 availability-masked fallback path, the determinism/chunk-invariance of
-`repro.core.faults` schedules, and the StreamHook sharded-dispatch error
-message (pinned verbatim: the CLI workaround it names must stay real)."""
+`repro.core.faults` schedules, and chunk-boundary StreamHook emission on
+the sharded backend (cadence + trajectory non-perturbation)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -190,10 +190,11 @@ def test_straggler_validation():
         faults.StragglerModel(slow_frac=1.5)
 
 
-# ------------------------------------------------ StreamHook dispatch error
-def test_streamhook_sharded_error_names_backend_and_workaround():
-    """The dispatch error must name the offending backend and the CLI
-    workaround — both pinned so they cannot silently rot."""
+# ---------------------------------------------- StreamHook on ShardMapReducer
+def test_streamhook_works_on_sharded_backend():
+    """Sharded streaming used to be refused at dispatch; the chunked driver
+    now emits at chunk boundaries under the ShardMapReducer too — the hook
+    must fire on cadence AND leave the trajectory bitwise unperturbed."""
     from repro.core import batched, glm
 
     clients = glm.make_synthetic(seed=0, n_clients=4, m=10, d=6, r=3,
@@ -201,19 +202,18 @@ def test_streamhook_sharded_error_names_backend_and_workaround():
     spec, batch, basisb = batched.bl3_setup(
         clients, [batched.Identity() for _ in clients],
         [batched.Identity() for _ in clients], tau=4)
-    hook = rounds.StreamHook(every=1, callback=lambda *a: None)
+    seen = []
+    hook = rounds.StreamHook(every=1,
+                             callback=lambda t, x, led: seen.append(int(t)))
     x0 = jnp.zeros(6, jnp.float64)
-    with pytest.raises(ValueError) as exc:
-        rounds.run_rounds(spec, batch, basisb, x0, 0.0,
-                          jax.random.split(jax.random.PRNGKey(0), 3),
-                          sharded=True, stream=hook)
-    msg = str(exc.value)
-    assert "ShardMapReducer" in msg
-    assert "backend='fast+sharded'" in msg
-    assert "--progress-every 0" in msg
-    # the named workaround flag must actually exist on the exp CLI
-    import inspect
-
-    from repro.exp import __main__ as exp_cli
-
-    assert "--progress-every" in inspect.getsource(exp_cli)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    evals, leds = rounds.run_rounds(spec, batch, basisb, x0, 0.0, keys,
+                                    sharded=True, stream=hook)
+    jax.effects_barrier()
+    assert seen == [0, 1, 2]
+    ref_evals, ref_leds = rounds.run_rounds(spec, batch, basisb, x0, 0.0,
+                                            keys, sharded=True)
+    np.testing.assert_array_equal(np.asarray(evals["gap"]),
+                                  np.asarray(ref_evals["gap"]))
+    np.testing.assert_array_equal(np.asarray(leds.hess_up),
+                                  np.asarray(ref_leds.hess_up))

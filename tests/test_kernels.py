@@ -168,6 +168,28 @@ def test_topk_threshold_ties_and_zeros():
     assert int(keptz) == 0 and float(jnp.sum(jnp.abs(outz))) == 0.0
 
 
+def test_topk_compress_sum_fuses_bitwise():
+    """The fused compress-then-reduce kernel == the two-pass path (threshold
+    → mask → XLA column sum) BITWISE, for edge and interior k — the property
+    that lets the sharded engine's uplink pre-reduction ride the flag."""
+    from repro.kernels.topk_threshold import (
+        keep_mask, topk_compress_sum, topk_row_threshold)
+
+    rng = np.random.default_rng(11)
+    v = jnp.asarray(rng.standard_normal((6, 257)), jnp.float32)
+    for k in (1, 13, 256, 257, 400):
+        dense, s = topk_compress_sum(v, k)
+        a = jnp.abs(v)
+        kk = max(1, min(k, v.shape[1]))
+        t = topk_row_threshold(a, kk)
+        want = jnp.where(keep_mask(a, t, kk), v, jnp.zeros_like(v))
+        np.testing.assert_array_equal(np.asarray(dense), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(s),
+                                      np.asarray(jnp.sum(want, axis=0)))
+    with pytest.raises(TypeError, match="f32"):
+        topk_compress_sum(v.astype(jnp.bfloat16), 3)
+
+
 def test_topk_contraction_property():
     """Kernel output satisfies the paper's contraction inequality (Eq. 6)."""
     x = jnp.asarray(np.random.default_rng(1).standard_normal((64, 64)), jnp.float32)

@@ -37,10 +37,23 @@ h = bl.bl1(clients, bases, [TopK(k=r)] * 6, Identity(), x0, xs, 12,
            backend="fast")
 h2 = bl.bl1(clients, bases, [ntopk(2 * r)] * 6, Identity(), x0, xs, 8,
             seed=5, backend="fast")
+
+# fused compress-then-reduce: under the flag TopK.compress_sum takes the
+# one-pass Pallas kernel (f32, non-symmetrized inputs); with it off, the
+# two-pass compress + XLA sum.  Dense payload, counts AND the local
+# partial sum must agree bitwise across backends.
+comp = TopK(k=9)
+Xc = jnp.asarray(np.random.default_rng(7).standard_normal((5, 33, 17)),
+                 jnp.float32)
+dense, counts, s = comp.compress_sum(jax.random.split(jax.random.PRNGKey(0), 5), Xc)
 print("RESULT", json.dumps({
     "masks": masks,
     "gaps": h.gaps, "up": h.up_bits, "legs": h.legs,
     "gaps2": h2.gaps, "up2": h2.up_bits,
+    "cs_dense": np.asarray(dense).tolist(),
+    "cs_sum": np.asarray(s).tolist(),
+    "cs_counts": [np.asarray(counts.floats).tolist(),
+                  np.asarray(counts.indices).tolist()],
 }))
 """
 
@@ -65,3 +78,6 @@ def test_pallas_selection_bitwise_matches_xla_path():
     assert pallas["legs"] == xla["legs"]
     assert pallas["gaps2"] == xla["gaps2"]
     assert pallas["up2"] == xla["up2"]
+    assert pallas["cs_dense"] == xla["cs_dense"]
+    assert pallas["cs_sum"] == xla["cs_sum"]
+    assert pallas["cs_counts"] == xla["cs_counts"]

@@ -80,6 +80,9 @@ def test_checkpoint_roundtrip_resume_bitwise(problem, tmp_path, sharded):
     _, ref = _chunks(spec, batch, basisb, x0, c0, plan, 0, 14, 14, root, **kw)
 
     # run 6 rounds, checkpoint through the artifact layer, restore, finish
+    # (fresh carry: run_chunk DONATES its carry argument, so c0's buffers
+    # died inside the reference run above)
+    c0 = rounds.init_serve_carry(spec, batch, basisb, x0, **kw)
     mid, head = _chunks(spec, batch, basisb, x0, c0, plan, 0, 6, 3, root, **kw)
     artifacts.save_checkpoint(
         str(tmp_path), t=6,

@@ -185,6 +185,87 @@ print("SERVE_CHUNKED_MULTIDEV_OK")
 """
 
 
+SCRIPT_APPROX = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import baselines, bl, glm
+from repro.core.basis import orth_basis_from_data
+from repro.core.compressors import Identity, TopK
+
+clients = glm.make_synthetic(seed=0, n_clients=8, m=30, d=40, r=12, lam=1e-3)
+x0 = jnp.zeros(40, jnp.float64)
+xs = glm.newton_solve(clients, x0, 20)
+bases = [orth_basis_from_data(c.A) for c in clients]
+r = bases[0].r
+n = 8
+assert len(jax.devices()) == 8
+
+runs = {
+    "bl1": lambda **kw: bl.bl1(clients, bases, [TopK(k=r)] * n, Identity(),
+                               x0, xs, 12, **kw),
+    "bl2pp": lambda **kw: bl.bl2(clients, bases, [TopK(k=2 * r)] * n,
+                                 [Identity()] * n, x0, xs, 12, tau=3, seed=2,
+                                 **kw),
+    "bl3": lambda **kw: bl.bl3(clients, [Identity()] * n, [Identity()] * n,
+                               x0, xs, 10, **kw),
+    "bag": lambda **kw: baselines.fednl_bag(clients, bases, [TopK(k=r)] * n,
+                                            x0, xs, 12, q=0.5, seed=1, **kw),
+}
+# exact=False swaps the fixed-order gather for ring collectives (psum /
+# pmean per the spec's ReducePlan): reductions associate in ring order, so
+# trajectories may drift by ulps — but over a pinned short horizon they
+# must stay inside a tight envelope of the exact run, and the bit
+# ACCOUNTING (sums of exactly-representable bit prices) must not move.
+for name, run in runs.items():
+    h_ex = run(backend="fast+sharded")               # exact=True default
+    h_ap = run(backend="fast+sharded", exact=False)  # ring collectives
+    np.testing.assert_allclose(h_ap.gaps, h_ex.gaps, rtol=1e-6, atol=1e-12,
+                               err_msg=name)
+    np.testing.assert_allclose(h_ap.up_bits, h_ex.up_bits, rtol=1e-9,
+                               err_msg=name)
+    np.testing.assert_allclose(h_ap.down_bits, h_ex.down_bits, rtol=1e-9,
+                               err_msg=name)
+print("APPROX_ENVELOPE_OK")
+"""
+
+
+SCRIPT_STREAM = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import bl, glm
+from repro.core.basis import orth_basis_from_data
+from repro.core.compressors import Identity, TopK
+from repro.core.rounds import StreamHook
+
+clients = glm.make_synthetic(seed=0, n_clients=8, m=24, d=20, r=8, lam=1e-3)
+x0 = jnp.zeros(20, jnp.float64)
+xs = glm.newton_solve(clients, x0, 20)
+bases = [orth_basis_from_data(c.A) for c in clients]
+assert len(jax.devices()) == 8
+
+seen = []
+def cb(t, x, led):
+    # host callback sees fully-gathered server state: the round index, the
+    # replicated iterate, and the cumulative ledger
+    seen.append((int(t), np.asarray(x).shape, float(np.asarray(led.hess_up))))
+
+hook = StreamHook(every=2, callback=cb)
+h1 = bl.bl1(clients, bases, [TopK(k=8)] * 8, Identity(), x0, xs, 5,
+            backend="fast+sharded", stream=hook)
+jax.effects_barrier()
+h0 = bl.bl1(clients, bases, [TopK(k=8)] * 8, Identity(), x0, xs, 5,
+            backend="fast+sharded")
+assert [t for t, _, _ in seen] == [0, 2, 4], seen
+assert all(shape == (20,) for _, shape, _ in seen), seen
+hb = [b for _, _, b in seen]
+assert hb == sorted(hb), seen             # cumulative ledger is monotone
+assert h1.gaps == h0.gaps and h1.up_bits == h0.up_bits
+print("STREAM_SHARDED_OK")
+"""
+
+
 def _run(script):
     # JAX_PLATFORMS=cpu: on images with an accelerator plugin an unpinned
     # subprocess burns minutes probing for hardware before falling back
@@ -218,3 +299,21 @@ def test_serve_chunked_driver_multidev_bitwise():
     single-device single-chunk run under a non-trivial fault plan."""
     r = _run(SCRIPT_SERVE_CHUNKED)
     assert "SERVE_CHUNKED_MULTIDEV_OK" in r.stdout, r.stdout + r.stderr[-3000:]
+
+
+def test_nonexact_collectives_stay_in_parity_envelope():
+    """exact=False (ring psum/pmean per the spec's ReducePlan) on 8 devices
+    tracks the exact fixed-order run within a ≤1e-6 relative envelope over
+    a pinned horizon, for BL1/BL2/BL3 and FedNL-BAG, with unchanged bit
+    accounting."""
+    r = _run(SCRIPT_APPROX)
+    assert "APPROX_ENVELOPE_OK" in r.stdout, r.stdout + r.stderr[-3000:]
+
+
+def test_streamhook_mid_run_emission_on_8_devices():
+    """The acceptance scenario for sharded streaming: a StreamHook attached
+    to backend='fast+sharded' on 8 devices fires mid-run at its cadence
+    with gathered server state, and the history it rode along is bitwise
+    the hook-free run."""
+    r = _run(SCRIPT_STREAM)
+    assert "STREAM_SHARDED_OK" in r.stdout, r.stdout + r.stderr[-3000:]
