@@ -415,6 +415,127 @@ def engine_sharded():
     return rows
 
 
+_COHORT_STREAM_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+import time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import cohort, client_batch, rounds, compressors, specs
+
+TINY = @TINY@
+d, m = 24, 8
+COHORT = 64 if TINY else 256
+RPC = 4
+ROUNDS = 8 if TINY else 16
+NS = (512, 2048) if TINY else (1000, 10000, 100000)
+N_PARITY = 64 if TINY else 256
+x0 = jnp.zeros(d, jnp.float64)
+key = jax.random.PRNGKey(0)
+
+def bl2(n, tau):
+    bb = cohort.standard_basisb(d, n)
+    return specs.BL2Spec(
+        hess_comp=compressors.TopK(k=2 * d),
+        model_comp=compressors.Identity(),
+        alpha=1.0, eta=1.0, p=1.0, tau=tau, init_exact=True,
+        init_hess_bits=bb.init_coeff_bits_mean(True),
+        basis_bits=bb.transmission_bits_mean(), block=False)
+
+# flat-in-n: the SAME cohort/epoch geometry at every fleet size, so the
+# jitted chunk program (shapes keyed on the cohort capacity) is shared and
+# the only n-dependence left is the engine's host plane
+for n in NS:
+    store = client_batch.synthetic_store(0, n, m, d, lam=1e-3)
+    eng = cohort.CohortEngine(bl2(n, COHORT // 2), store, x0, cohort=COHORT,
+                              rounds_per_cohort=RPC, root_key=key,
+                              basis="standard")
+    jax.block_until_ready(eng.run_chunk(0, ROUNDS))       # warm/compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(eng.run_chunk(ROUNDS, ROUNDS))
+    us = (time.perf_counter() - t0) / ROUNDS * 1e6
+    print(f"RESULT n{n} {us:.1f}", flush=True)
+    print(f"OVERLAP n{n} {eng.prefetch_overlap:.4f}", flush=True)
+    eng.close()
+
+# cohort==fleet bitwise parity vs the stacked engine, both reducers
+for sharded, tag in ((False, "vmap"), (True, "sharded")):
+    n = N_PARITY
+    spec = bl2(n, n // 2)
+    store = client_batch.synthetic_store(0, n, m, d, lam=1e-3)
+    batch = store.gather_batch(np.arange(n))
+    bb = cohort.standard_basisb(d, n)
+    c0 = rounds.init_serve_carry(spec, batch, bb, x0, sharded=sharded)
+    _, ys1 = rounds.run_chunk(spec, batch, bb, x0, c0, 0, 6, key,
+                              sharded=sharded)
+    eng = cohort.CohortEngine(spec, store, x0, cohort=n, rounds_per_cohort=2,
+                              root_key=key, basis="standard", sharded=sharded)
+    ys2 = eng.run_chunk(0, 6)
+    eng.close()
+    eq = all(np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(jax.tree_util.tree_leaves(ys1),
+                             jax.tree_util.tree_leaves(ys2)))
+    print(f"BITWISE {tag} {eq}", flush=True)
+"""
+
+
+@bench("cohort_stream")
+def cohort_stream():
+    """Cohort-streaming engine (`repro.core.cohort`): per-round wall time
+    vs fleet size at FIXED cohort geometry — the tentpole headline is that
+    rounds are flat in n (the device only ever sees the cohort; the host
+    plane is O(cohort) per epoch), pinned at ≤1.15× from the smallest to
+    the largest fleet.  Also records the measured prefetch overlap (the
+    fraction of next-epoch gather+H2D hidden behind the chunk scan) and an
+    ACTUAL cohort==fleet bitwise-parity verdict against the stacked engine
+    on both reducers.  ``REPRO_BENCH_TINY=1`` shrinks fleets for CI smoke
+    (subprocess: the sharded parity leg needs the 8-device mesh, and the
+    device count is locked at first jax init)."""
+    import subprocess
+    import sys
+
+    tiny = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
+    env = dict(os.environ, PYTHONPATH="src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    script = _COHORT_STREAM_SCRIPT.replace("@TINY@", str(tiny))
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    res, overlap, bitwise = {}, {}, {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT"):
+            _, tag, us = line.split()
+            res[tag] = float(us)
+        elif line.startswith("OVERLAP"):
+            _, tag, frac = line.split()
+            overlap[tag] = float(frac)
+        elif line.startswith("BITWISE"):
+            _, tag, flag = line.split()
+            bitwise[tag] = flag == "True"
+    ns = (512, 2048) if tiny else (1000, 10000, 100000)
+    if set(res) != {f"n{n}" for n in ns} or set(bitwise) != {"vmap",
+                                                             "sharded"}:
+        raise RuntimeError(proc.stdout + proc.stderr[-2000:])
+    rows = []
+    for n in ns:
+        rows.append((f"cohort_stream_n{n}", res[f"n{n}"],
+                     f"per_round;fleet={n};prefetch_overlap="
+                     f"{overlap[f'n{n}']:.2f}",
+                     {"n_clients": n,
+                      "prefetch_overlap": overlap[f"n{n}"]}))
+    flat = res[f"n{ns[-1]}"] / res[f"n{ns[0]}"]
+    rows.append((
+        "cohort_stream_flatness", 0.0,
+        f"per_round_ratio_n{ns[-1]}_vs_n{ns[0]}={flat:.3f}x"
+        f";bitwise_vmap={bitwise['vmap']}"
+        f";bitwise_sharded={bitwise['sharded']}",
+        {"flatness_ratio": flat, "n_small": ns[0], "n_large": ns[-1],
+         "bitwise_equal_histories_vmap": bitwise["vmap"],
+         "bitwise_equal_histories_sharded": bitwise["sharded"]}))
+    return rows
+
+
 # ---------------- kernel micro-benches --------------------------------------
 @bench("kernel_matmul")
 def kmatmul():

@@ -31,6 +31,7 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import glm
 from .basis import (
@@ -56,6 +57,25 @@ class ClientBatch:
     A: jax.Array  # (n, m, d)
     b: jax.Array  # (n, m)
     lam: float    # shared ridge coefficient (static)
+
+    def __post_init__(self):
+        # runs on every pytree unflatten too (jit/scan/shard_map rebuild the
+        # dataclass), so only validate when both leaves look like arrays —
+        # tracers and ShapeDtypeStructs carry .shape/.ndim, placeholder
+        # objects used by some tree utilities don't
+        A, b = self.A, self.b
+        if not (hasattr(A, "ndim") and hasattr(b, "ndim")):
+            return
+        if A.ndim != 3:
+            raise ValueError(
+                "ClientBatch.A must be client-stacked (n, m, d); got shape "
+                f"{tuple(A.shape)}")
+        if tuple(b.shape) != tuple(A.shape[:2]):
+            raise ValueError(
+                "ClientBatch.b must have shape (n, m) = A.shape[:2] = "
+                f"{tuple(A.shape[:2])}; got {tuple(b.shape)} — a mis-shaped "
+                "label array would silently broadcast into wrong per-client "
+                "math")
 
     @property
     def n(self) -> int:
@@ -93,6 +113,27 @@ class TreeBatch:
 
     data: object          # pytree; every leaf (n_clients, ...)
     n_clients: int        # static
+
+    def __post_init__(self):
+        # validate MUTUAL agreement of the stacked leaves' leading axis, not
+        # agreement with the static n_clients: inside shard_map the leaves
+        # are the (n_local, ...) shard while n_clients stays global, so a
+        # check against n_clients would reject every sharded unflatten
+        shaped = [leaf for leaf in jax.tree_util.tree_leaves(self.data)
+                  if hasattr(leaf, "ndim")]
+        if not shaped:
+            return
+        bad = [tuple(leaf.shape) for leaf in shaped if leaf.ndim < 1]
+        if bad:
+            raise ValueError(
+                f"every TreeBatch leaf needs a leading client axis; got "
+                f"scalar leaf shape(s) {bad}")
+        leads = {leaf.shape[0] for leaf in shaped}
+        if len(leads) > 1:
+            raise ValueError(
+                "TreeBatch leaves disagree on the leading client axis: got "
+                f"sizes {sorted(leads, key=str)} across leaf shapes "
+                f"{[tuple(leaf.shape) for leaf in shaped]}")
 
     @property
     def n(self) -> int:
@@ -265,8 +306,6 @@ def from_clients(clients: Sequence[glm.ClientData]) -> Optional[ClientBatch]:
 
 def stack_bases(bases: Sequence[MatrixBasis]) -> Optional[BatchedBasis]:
     """Stack a homogeneous-kind basis list; None if mixed kinds (fall back)."""
-    import numpy as np
-
     bases = list(bases)
     if not bases:
         return None
@@ -305,6 +344,91 @@ def stack_bases(bases: Sequence[MatrixBasis]) -> Optional[BatchedBasis]:
         )
         return BatchedBasis(kind="data_outer", d=b0.d, rs=rs, V=V)
     return None
+
+
+# --------------------------------------------------------------------------
+# host-resident client store (cohort streaming)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ClientStore:
+    """The full fleet's data and per-client carry state, host-resident.
+
+    The stacked engine puts all n clients on device, which bounds n by HBM
+    (fig1-xl tops out at 512 clients).  The cohort-streaming engine
+    (`repro.core.cohort`) instead keeps the fleet here — numpy arrays in
+    host RAM — and per epoch gathers only the sampled cohort's rows onto
+    the device.  `state` holds the client-stacked carry leaves (shifts
+    z_i/w_i, Hessian estimates, ...) between the rounds a client is
+    sampled; per Alg. 2–3 an absent client's state stays frozen, which is
+    exactly what "rows not gathered this epoch don't move" gives us.
+
+    NOT a pytree on purpose: the store never crosses the jit boundary —
+    only gathered cohorts do.
+    """
+
+    A: np.ndarray             # (n, m, d) float64, host
+    b: np.ndarray             # (n, m) float64, host
+    lam: float
+    state: dict = dataclasses.field(default_factory=dict)  # name -> (n, ...)
+
+    @property
+    def n(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.A.shape[1]
+
+    @property
+    def d(self) -> int:
+        return self.A.shape[2]
+
+    # ---- data plane -------------------------------------------------------
+    def gather_data(self, idx: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side cohort gather: (A[idx], b[idx]) as fresh numpy arrays.
+        Split from `gather_batch` so the prefetch thread can do the O(c·m·d)
+        copy (and the H2D transfer) off the critical path."""
+        return self.A[idx], self.b[idx]
+
+    def gather_batch(self, idx: np.ndarray) -> ClientBatch:
+        """Materialize the cohort's `ClientBatch` on device."""
+        A, b = self.gather_data(idx)
+        return ClientBatch(A=jnp.asarray(A), b=jnp.asarray(b), lam=self.lam)
+
+    # ---- state plane ------------------------------------------------------
+    def gather_state(self, idx: np.ndarray) -> dict:
+        """Cohort rows of every carry leaf (fresh arrays, safe to mutate)."""
+        return {name: leaf[idx] for name, leaf in self.state.items()}
+
+    def scatter_state(self, idx: np.ndarray, updates: dict) -> None:
+        """Write a cohort's updated carry rows back into the fleet store."""
+        for name, rows in updates.items():
+            self.state[name][idx] = rows
+
+    def state_sums(self, names: Sequence[str]) -> dict:
+        """Float64 fleet-wide sums of the named leaves (O(n), used once at
+        init to seed the incrementally-maintained aggregate totals)."""
+        return {name: np.sum(np.asarray(self.state[name], np.float64), axis=0)
+                for name in names}
+
+
+def synthetic_store(seed: int, n_clients: int, m: int, d: int,
+                    lam: float = 1e-3, noise: float = 0.1) -> ClientStore:
+    """Vectorized synthetic logistic-regression fleet for the streaming
+    engine — same planted-model-with-flip-noise label scheme as
+    `glm.make_synthetic`, but built in one shot with no per-client Python
+    loop (the stacked builder's per-client QR is infeasible at n ≥ 100k).
+    Rows are full-rank (the stream path runs the standard basis, so §2.3's
+    low-rank row structure buys nothing here)."""
+    rng = np.random.default_rng(seed)
+    x_true = rng.standard_normal(d) / np.sqrt(d)
+    A = rng.standard_normal((n_clients, m, d)) / np.sqrt(d)
+    logits = A @ x_true
+    p = 1.0 / (1.0 + np.exp(-logits))
+    b = np.where(rng.random((n_clients, m)) < (1 - noise) * p + noise * 0.5,
+                 1.0, -1.0)
+    return ClientStore(A=np.asarray(A, np.float64),
+                       b=np.asarray(b, np.float64), lam=lam)
 
 
 # --------------------------------------------------------------------------

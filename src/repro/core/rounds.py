@@ -146,6 +146,16 @@ class Reducer:
     def n_local(self) -> int:
         raise NotImplementedError
 
+    @property
+    def n_total(self) -> int:
+        """The FLEET size — the denominator for per-node bit accounting.
+
+        Equal to `n` on the stacked backends (every client is materialized),
+        but under cohort streaming (`CohortReducer`) `n` is the cohort
+        capacity while `n_total` stays the global client count: per-node
+        costs are amortized over the whole fleet, not the sampled cohort."""
+        return self.n
+
     def mean(self, x: jax.Array) -> jax.Array:
         """(n_local, ...) → (...): mean over the global client axis."""
         raise NotImplementedError
@@ -400,6 +410,166 @@ class ShardMapReducer(Reducer):
                                          tiled=False)[0], out)
 
 
+class CohortReducer:
+    """Reducer view of a sampled cohort standing in for the whole fleet.
+
+    Built INSIDE the cohort chunk program (it holds traced arrays, so it is
+    never a jit argument): wraps an inner stacked `Reducer` sized to the
+    cohort *capacity* c and presents the fleet to spec code so `MethodSpec.
+    step` bodies run nearly verbatim:
+
+      * ``n`` / ``n_local`` / ``shard`` / ``client_keys`` / ``once`` — the
+        cohort axis (draw shapes, sharding) delegates to the inner reducer;
+      * ``n_total`` — the GLOBAL fleet size, so ledger divisions and
+        participation probabilities stay fleet-denominated;
+      * ``idx`` — each slot's global client index (shard-local ``(n_local,)``
+        int32), ``real`` — padding mask (capacity is padded to a multiple of
+        the device count; padded slots hold garbage and must never reduce);
+      * ``reduce_tree`` — fleet-wide aggregate from cohort rows plus the
+        host-maintained ``frozen`` sums/maxes of the ABSENT clients' state
+        (Alg. 2–3: a non-sampled client's shift state is frozen, so its
+        contribution to Σᵢ Hᵢ etc. is exactly its epoch-start value, which
+        the streaming engine maintains incrementally — see
+        `repro.core.cohort`).  A ``mean`` aggregate with no frozen entry is
+        delta-style (absent clients contribute exactly 0): only the cohort
+        sum lands, still divided by ``n_total``.
+
+    Bare ``mean``/``max`` are refused — an unnamed fleet reduction cannot
+    be matched to a frozen statistic, and silently reducing over the cohort
+    would be wrong math; cohort-capable specs route every fleet reduction
+    through named `reduce_tree` dicts (or `once`-guarded server math).
+    """
+
+    is_cohort = True
+
+    def __init__(self, inner: Reducer, idx: jax.Array, real: jax.Array,
+                 frozen: dict, n_global: int):
+        self.inner = inner
+        self.idx = idx
+        self.real = real
+        self.frozen = frozen
+        self.n_global = int(n_global)
+
+    # ---- cohort axis (delegated) ------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.inner.n
+
+    @property
+    def n_local(self) -> int:
+        return self.inner.n_local
+
+    @property
+    def n_total(self) -> int:
+        return self.n_global
+
+    def shard(self, x):
+        return self.inner.shard(x)
+
+    def client_keys(self, key):
+        return self.inner.client_keys(key)
+
+    def once(self, f: Callable, *args):
+        return self.inner.once(f, *args)
+
+    # ---- fleet reductions --------------------------------------------------
+    def _mask(self, x, fill):
+        r = self.real.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(r, x, jnp.asarray(fill, x.dtype))
+
+    def sum(self, x):
+        """Fleet sum of a cohort-supported quantity (absent clients are 0 by
+        construction — participation masks, bit counts)."""
+        return self.inner.sum(self._mask(x, 0))
+
+    def mean(self, x):
+        raise NotImplementedError(
+            "CohortReducer cannot take an unnamed fleet mean — absent "
+            "clients' contributions live in named frozen sums; use "
+            "reduce_tree({'name': x}) (supports_cohort specs do)")
+
+    def max(self, x):
+        raise NotImplementedError(
+            "CohortReducer cannot take an unnamed fleet max — use "
+            "reduce_tree with a named leaf and a frozen fleet stat")
+
+    def reduce_tree(self, tree, ops="mean"):
+        if not isinstance(tree, dict):
+            raise NotImplementedError(
+                "CohortReducer.reduce_tree needs a flat {name: leaf} dict "
+                f"(frozen fleet stats are matched by name); got {type(tree)}")
+        ops_d = ({name: ops for name in tree} if isinstance(ops, str)
+                 else dict(ops))
+        masked, inner_ops = {}, {}
+        for name, leaf in tree.items():
+            op = ops_d[name]
+            if op not in _REDUCE_OPS:
+                raise ValueError(
+                    f"reduce_tree op must be one of {_REDUCE_OPS}, got {op!r}")
+            masked[name] = self._mask(leaf, -jnp.inf if op == "max" else 0)
+            inner_ops[name] = "max" if op == "max" else "sum"
+        red = self.inner.reduce_tree(masked, inner_ops)
+        out = {}
+        for name, leaf in tree.items():
+            op = ops_d[name]
+            if op == "sum":
+                out[name] = red[name]
+            elif op == "mean":
+                froz = self.frozen.get(name)
+                s = red[name] if froz is None else froz + red[name]
+                out[name] = s / self.n_total
+            else:  # max
+                if name not in self.frozen:
+                    raise ValueError(
+                        f"max-aggregate {name!r} needs a frozen fleet stat "
+                        "(the absent clients' max) — the cohort engine "
+                        "computes one per epoch")
+                out[name] = jnp.maximum(self.frozen[name], red[name])
+        return out
+
+    def tree_mean(self, tree):
+        raise NotImplementedError(
+            "pytree coefficient streams (BL-DNN) are not cohort-capable yet")
+
+    def tree_mean_presummed(self, tree, local_sums):
+        raise NotImplementedError(
+            "pytree coefficient streams (BL-DNN) are not cohort-capable yet")
+
+
+def _cohort_participation(R: "CohortReducer", key: jax.Array, tau: int,
+                          avail) -> Tuple[jax.Array, jax.Array]:
+    """Participation over a sampled cohort: per-slot Bernoulli(τ/n_total)
+    keyed by each slot's GLOBAL client index, so a client's draw for round t
+    depends only on (round key, client id) — not its cohort slot, the
+    cohort composition, or chunk boundaries.  Distributionally identical to
+    the stacked fleet-wide draw restricted to the cohort, at O(c) cost.
+
+    The force-one-client fallback picks the real slot with the minimum
+    global index (a deterministic choice that is slot-order invariant).
+    Fault injection is refused: availability masks are fleet-indexed and
+    the streaming engine has no fleet on device to mask."""
+    if avail is not None:
+        raise ValueError(
+            "cohort streaming does not support fault injection (avail must "
+            "be None) — fault plans address the stacked fleet by index")
+    tau = min(tau, R.n_total)
+    k_mask, _ = jax.random.split(key)
+    keys_i = jax.vmap(lambda i: jax.random.fold_in(k_mask, i))(R.idx)
+    p = tau / R.n_total
+    drawn = jax.vmap(lambda k: jax.random.bernoulli(k, p, ()))(keys_i)
+    drawn = drawn & R.real
+    n_surv = R.sum(drawn.astype(jnp.int32))
+    # forced fallback: the real slot with the minimum global index, computed
+    # as −max(−idx) (the reducer interface carries max, not min)
+    big = jnp.iinfo(jnp.int32).max
+    masked_idx = jnp.where(R.real, R.idx, big)
+    gmin = -R.inner.reduce_tree({"i": -masked_idx}, "max")["i"]
+    need = n_surv == 0
+    part = drawn | (need & R.real & (R.idx == gmin))
+    event = jnp.where(need, EVENT_FORCED, EVENT_NONE)
+    return part, event.astype(jnp.int32)
+
+
 # ==========================================================================
 # Round context + degradation events
 # ==========================================================================
@@ -547,6 +717,8 @@ def participation(R: Reducer, key: jax.Array, tau: int,
         raise ValueError(
             f"participation needs τ ≥ 1 expected clients per round, got "
             f"τ={tau} — pass τ in [1, n] (τ=n is full participation)")
+    if getattr(R, "is_cohort", False):
+        return _cohort_participation(R, key, tau, avail)
     tau = min(tau, R.n)
     k_mask, k_idx = jax.random.split(key)
     drawn = jax.random.bernoulli(k_mask, tau / R.n, (R.n,))
@@ -592,7 +764,7 @@ def downlink_broadcast(R: Reducer, comp, key: jax.Array, z: jax.Array,
     v, counts = comp.compress(R.client_keys(key), x_target[None, :] - z)
     vbits = comm.price(comp.wire, counts)
     z_n = jnp.where(part[:, None], z + eta * v, z)
-    return z_n, R.sum(jnp.where(part, vbits, 0.0)) / R.n
+    return z_n, R.sum(jnp.where(part, vbits, 0.0)) / R.n_total
 
 
 def global_grad(R: Reducer, batch, x: jax.Array) -> jax.Array:
@@ -950,3 +1122,85 @@ def run_chunk(spec, batch, basisb, x0, carry, t0: int, steps: int, root_key,
             f"got {avail.shape}")
     _, chunk = _serve_backend(spec, batch, basisb, x0, sharded, exact)
     return chunk(batch, basisb, x0, carry, ts, keys, avail)
+
+
+# ==========================================================================
+# Cohort-streaming chunk programs (repro.core.cohort)
+# ==========================================================================
+def _cohort_chunk_body(spec, R, n_global, batch, basisb, x0, carry, ts, keys,
+                       cidx, creal, frozen):
+    """One epoch-aligned chunk of cohort rounds: same scan skeleton as
+    `_chunk_body`, but spec code sees a `CohortReducer` wrapping the
+    cohort-capacity reducer `R`.  ``cidx``/``creal``/``frozen`` are
+    constant for the chunk (the cohort engine cuts chunks at epoch
+    boundaries), so they ride in as plain traced inputs, not scan xs."""
+    CR = CohortReducer(inner=R, idx=cidx, real=creal, frozen=frozen,
+                       n_global=n_global)
+    env = Env(batch=batch, basisb=basisb, x0=x0,
+              extra=spec.prepare(CR, batch, basisb, x0))
+
+    def step(carry, xt):
+        t, key_t = xt
+        return spec.step(CR, env, carry, RoundCtx(key=key_t, t=t, avail=None))
+
+    return jax.lax.scan(step, carry, (ts, keys))
+
+
+_cohort_chunk_jit = functools.partial(
+    jax.jit, static_argnames=("spec", "R", "n_global"),
+    donate_argnames=("carry",))(_cohort_chunk_body)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_cohort_chunk_fns(spec, R: "ShardMapReducer", mesh, flags_key,
+                              n_global):
+    """The cohort chunk program under shard_map: the COHORT axis shards
+    over the client mesh (cidx/creal shard with it; frozen fleet stats are
+    replicated like the server state)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.rules import CLIENT_AXIS, cohort_chunk_specs
+
+    leaves, treedef = flags_key
+    carry_specs = jax.tree_util.tree_unflatten(
+        treedef, [P(CLIENT_AXIS) if f else P() for f in leaves])
+    in_specs, out_specs = cohort_chunk_specs(
+        carry_specs,
+        basis_replicated=getattr(spec, "basis_replicated", False))
+    chunk = jax.jit(shard_map(
+        functools.partial(_cohort_chunk_body, spec, R, n_global), mesh=mesh,
+        in_specs=in_specs, out_specs=out_specs, check_rep=False),
+        donate_argnums=(3,))
+    # (batch, basisb, x0, carry, ts, keys, cidx, creal, frozen) — carry is 3
+    return chunk
+
+
+def run_cohort_chunk(spec, batch, basisb, x0, carry, t0: int, steps: int,
+                     root_key, *, cidx, creal, frozen, n_global: int,
+                     sharded: bool = False, exact: bool = True):
+    """Run `steps` cohort rounds starting at absolute round `t0`.
+
+    ``batch`` is the COHORT's `ClientBatch` (capacity c rows gathered from
+    the `ClientStore`), ``carry`` the cohort-capacity carry, ``cidx`` the
+    slots' global client indices (c,) int32, ``creal`` the padding mask
+    (c,) bool, ``frozen`` the dict of fleet aggregate statistics for the
+    epoch's ABSENT clients.  Per-round keys are ``fold_in(root_key, t)``
+    exactly like `run_chunk`, so cohort trajectories share the serve
+    driver's chunk-boundary invariance.  The carry is DONATED."""
+    ts = jnp.arange(t0, t0 + steps)
+    keys = jax.vmap(lambda t: jax.random.fold_in(root_key, t))(ts)
+    cidx = jnp.asarray(cidx, jnp.int32)
+    creal = jnp.asarray(creal, bool)
+    if not sharded:
+        R = VmapReducer(n=batch.n)
+        return _cohort_chunk_jit(spec, R, int(n_global), batch, basisb, x0,
+                                 carry, ts, keys, cidx, creal, frozen)
+    from repro.launch.mesh import make_client_mesh
+
+    mesh, ndev = make_client_mesh(batch.n)
+    R = ShardMapReducer(n=batch.n, ndev=ndev, exact=exact,
+                        plan=getattr(spec, "reduce_plan", ReducePlan()))
+    fk = _carry_flags_key_cached(spec, batch, basisb, x0)
+    chunk = _sharded_cohort_chunk_fns(spec, R, mesh, fk, int(n_global))
+    return chunk(batch, basisb, x0, carry, ts, keys, cidx, creal, frozen)

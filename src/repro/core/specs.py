@@ -98,6 +98,45 @@ class MethodSpec:
     #: O(1).  Ignored entirely in exact mode.
     reduce_plan = ReducePlan()
 
+    #: True for specs whose `step` runs correctly under the cohort-streaming
+    #: engine (`repro.core.cohort`): every fleet reduction goes through a
+    #: NAMED `reduce_tree` dict declared in `cohort_aggregates`, so the
+    #: engine can maintain the absent clients' frozen contributions.  The
+    #: natural cohort methods are the partial-participation ones (BL2/BL3,
+    #: Alg. 2–3) and the Bernoulli-lazy uplink (FedNL-BAG).
+    supports_cohort = False
+
+    #: Names for the TOP-LEVEL elements of the carry tuple, in order — the
+    #: streaming engine's handle for splitting the carry into host-resident
+    #: client state (`ClientStore.state`) and resident server state, and for
+    #: matching `cohort_aggregates` entries to carry leaves.
+    carry_names: Tuple[str, ...] = ()
+
+    def cohort_aggregates(self):
+        """Fleet aggregates this spec's `step` reduces over RAW carry
+        leaves: ``{aggregate_name: (carry_leaf_name, op)}`` with op in
+        {"mean", "max"}.  For each ``mean`` entry the streaming engine
+        incrementally maintains the fleet-wide sum of that carry leaf and
+        hands the chunk program ``frozen[name] = sum over absent clients``;
+        for ``max`` it computes the absent clients' max per epoch.
+        Delta-style mean aggregates (absent clients contribute exactly 0)
+        are NOT declared — a missing frozen entry is an implicit zero."""
+        return {}
+
+    def cohort_init_extras(self, R: Reducer, env, carry):
+        """Per-client stacked arrays whose FLEET SUM feeds a derived piece
+        of server init state (``{name: (n_local, ...) array}``).  The
+        engine evaluates this slab-by-slab at fleet init, accumulates the
+        sums, and passes them to `cohort_server_init`."""
+        return {}
+
+    def cohort_server_init(self, env, sums, n_total: int, carry):
+        """Server carry elements that depend on a fleet reduction at init:
+        ``{carry_name: value}`` computed from the accumulated
+        `cohort_init_extras` sums.  Everything not named here keeps its
+        per-slab `init` value (which must then be fleet-independent)."""
+        return {}
+
     def prepare(self, R: Reducer, batch, basisb, x0):
         return None
 
@@ -209,6 +248,14 @@ class BL2Spec(MethodSpec):
     block: bool
 
     supports_faults = True        # partial participation absorbs dropouts
+    supports_cohort = True        # Alg. 2: absent clients' state freezes
+    carry_names = ("z", "w", "L", "Hi", "li", "gi", "led")
+
+    def cohort_aggregates(self):
+        # the server system is assembled from RAW per-client carry state
+        # every round, so absent clients' frozen rows must keep
+        # contributing their epoch-start values
+        return {"H": ("Hi", "mean"), "l": ("li", "mean"), "g": ("gi", "mean")}
 
     def prepare(self, R, batch, basisb, x0):
         return coeff_layout(R, batch, basisb, x0, self.block)
@@ -273,7 +320,8 @@ class BL2Spec(MethodSpec):
         g_bits = jnp.where(xi, d * FLOAT_BITS, FLOAT_BITS + 1.0)
         bits = R.reduce_tree({"s": jnp.where(part, sbits, 0.0),
                               "g": jnp.where(part, g_bits, 0.0)}, "sum")
-        led = led.add(hess_up=bits["s"] / R.n, grad_up=bits["g"] / R.n)
+        led = led.add(hess_up=bits["s"] / R.n_total,
+                      grad_up=bits["g"] / R.n_total)
         return (z_n, w_n, L_n, Hi_n, li_n, gi_n, led), (*ys, pev)
 
 
@@ -292,6 +340,13 @@ class BL3Spec(MethodSpec):
     option: int
 
     supports_faults = True        # partial participation absorbs dropouts
+    supports_cohort = True        # Alg. 3: absent clients' state freezes
+    carry_names = ("z", "w", "zprev", "L", "gam", "A", "C", "g1", "g2",
+                   "beta", "led")
+
+    def cohort_aggregates(self):
+        return {"A": ("A", "mean"), "C": ("C", "mean"), "g1": ("g1", "mean"),
+                "g2": ("g2", "mean"), "beta": ("beta", "max")}
 
     def prepare(self, R, batch, basisb, x0):
         return _psd_sum_matrix(batch.d, x0.dtype)
@@ -380,7 +435,8 @@ class BL3Spec(MethodSpec):
         bits = R.reduce_tree(
             {"s": jnp.where(part, sbits + FLOAT_BITS, 0.0),
              "g": jnp.where(part, g_bits, 0.0)}, "sum")
-        led = led.add(hess_up=bits["s"] / R.n, grad_up=bits["g"] / R.n)
+        led = led.add(hess_up=bits["s"] / R.n_total,
+                      grad_up=bits["g"] / R.n_total)
         carry_n = (z_n, w_n, zprev_n, L_n, gam_n, A_n, C_n, g1_n, g2_n,
                    beta_i_n, led)
         return carry_n, (*ys, pev)
@@ -476,6 +532,23 @@ class FedNLBAGSpec(MethodSpec):
     block: bool
 
     supports_faults = True        # lazy table reuses silent clients' rows
+    supports_cohort = True        # the lazy table IS frozen absent state
+    carry_names = ("z", "L", "H", "gtab", "led")
+
+    def cohort_aggregates(self):
+        # ĝ is the mean of the RAW gradient table; absent clients' stale
+        # rows keep contributing (exactly the BAG mechanism).  dH/sbits are
+        # delta-style (absent clients contribute 0) — undeclared on purpose.
+        return {"ghat": ("gtab", "mean")}
+
+    def cohort_init_extras(self, R, env, carry):
+        # H⁰ = mean_i recon(L⁰_i) + ridge is a fleet reduction; hand the
+        # engine the per-client reconstructions to sum across slabs
+        _, L0, _, _, _ = carry
+        return {"recL": env.extra.recon(L0)}
+
+    def cohort_server_init(self, env, sums, n_total, carry):
+        return {"H": sums["recL"] / n_total + env.extra.ridge}
 
     def prepare(self, R, batch, basisb, x0):
         return coeff_layout(R, batch, basisb, x0, self.block)
@@ -524,7 +597,7 @@ class FedNLBAGSpec(MethodSpec):
              "gbits": jnp.where(send, batch.d * FLOAT_BITS, 0.0),
              "sbits": comm.price(self.hess_comp.wire, counts)},
             {"ghat": "mean", "dH": "mean", "gbits": "sum", "sbits": "mean"})
-        led = led.add(grad_up=red["gbits"] / R.n, hess_up=red["sbits"])
+        led = led.add(grad_up=red["gbits"] / R.n_total, hess_up=red["sbits"])
         H_n = H + red["dH"]
 
         # damped Newton step: η < 1 tempers the staleness feedback loop an

@@ -147,7 +147,13 @@ def csv_path(out_dir: str, exp_name: str, cell_name: str) -> str:
 # walks checkpoints newest-first and falls back past any whose payload is
 # missing, torn, or fails the digest — so the latest *valid* checkpoint
 # wins even after a worst-case crash.
-CKPT_SCHEMA_VERSION = 1
+# @2 adds the optional host_state plane (the cohort-streaming engine's
+# host-resident client store / fleet totals / frozen epoch stats — see
+# repro.core.cohort).  Stacked serves write the same payload as @1 plus an
+# empty host_state manifest list; @1 checkpoints are walked past by the
+# schema check below (an old run restarts from round 0 rather than crashing
+# or resuming state the new engine can't interpret).
+CKPT_SCHEMA_VERSION = 2
 CKPT_SCHEMA = f"repro.exp/ckpt@{CKPT_SCHEMA_VERSION}"
 
 SERVE_SCHEMA_VERSION = 1
@@ -180,21 +186,29 @@ def _atomic_replace(tmp: str, dst: str) -> None:
 
 
 def save_checkpoint(ckpt_dir: str, *, t: int, carry_leaves, streams: dict,
-                    root_key, config_digest: str, keep: int = 3) -> str:
+                    root_key, config_digest: str, keep: int = 3,
+                    host_state: Optional[dict] = None) -> str:
     """Atomically write the service loop's full server state at round ``t``.
 
     ``carry_leaves`` is the flattened scan carry (numpy/JAX arrays, in the
     engine's canonical leaf order); ``streams`` maps stream name →
     accumulated (t, ...) array (eval iterates, per-leg ledger bit streams,
     events); ``root_key`` is the raw PRNG key data.  ``config_digest`` keys
-    the checkpoint to one serve configuration.  Keeps the newest ``keep``
-    checkpoints and prunes the rest.  Returns the manifest path."""
+    the checkpoint to one serve configuration.  ``host_state`` (ckpt@2) is
+    an optional dict of named host-side arrays — the cohort-streaming
+    engine's client store / fleet totals / frozen epoch stats
+    (`CohortEngine.checkpoint_payload`); stacked serves omit it.  Keeps the
+    newest ``keep`` checkpoints and prunes the rest.  Returns the manifest
+    path."""
     os.makedirs(ckpt_dir, exist_ok=True)
     base = _ckpt_base(ckpt_dir, t)
+    host_state = host_state or {}
     payload = {f"carry/{i}": np.asarray(leaf)
                for i, leaf in enumerate(carry_leaves)}
     for name, arr in streams.items():
         payload[f"stream/{name}"] = np.asarray(arr)
+    for name, arr in host_state.items():
+        payload[f"host/{name}"] = np.asarray(arr)
     payload["root_key"] = np.asarray(root_key)
     tmp = base + ".npz.tmp"
     with open(tmp, "wb") as f:
@@ -211,6 +225,7 @@ def save_checkpoint(ckpt_dir: str, *, t: int, carry_leaves, streams: dict,
                           "dtype": str(np.asarray(x).dtype)}
                          for x in carry_leaves],
         "streams": sorted(streams),
+        "host_state": sorted(host_state),
         "payload_sha256": _sha256_file(base + ".npz"),
     }
     tmp = base + ".json.tmp"
@@ -250,12 +265,15 @@ def prune_checkpoints(ckpt_dir: str, keep: int) -> None:
 
 def load_checkpoint(ckpt_dir: str, *, config_digest: Optional[str] = None):
     """The newest valid checkpoint as a dict
-    ``{t, carry_leaves, streams, root_key, manifest}`` — or None.
+    ``{t, carry_leaves, streams, root_key, host_state, manifest}`` — or
+    None.
 
     Walks newest-first, skipping checkpoints whose manifest or payload is
-    torn/corrupt (digest mismatch) or that belong to a different serve
-    config — a crash during `save_checkpoint` therefore falls back to the
-    previous intact checkpoint instead of resuming garbage."""
+    torn/corrupt (digest mismatch), that belong to a different serve
+    config, or that carry an older schema tag (a ckpt@1 directory restarts
+    from round 0 instead of crashing) — a crash during `save_checkpoint`
+    therefore falls back to the previous intact checkpoint instead of
+    resuming garbage."""
     for t, manifest_path in reversed(list_checkpoints(ckpt_dir)):
         manifest = load_json(manifest_path)
         if manifest is None or manifest.get("schema") != CKPT_SCHEMA:
@@ -274,12 +292,14 @@ def load_checkpoint(ckpt_dir: str, *, config_digest: Optional[str] = None):
                 carry = [z[f"carry/{i}"] for i in range(n)]
                 streams = {name: z[f"stream/{name}"]
                            for name in manifest["streams"]}
+                host_state = {name: z[f"host/{name}"]
+                              for name in manifest.get("host_state", [])}
                 root_key = z["root_key"]
         except (OSError, KeyError, ValueError, zipfile.BadZipFile):
             continue
         return {"t": manifest["t"], "carry_leaves": carry,
                 "streams": streams, "root_key": root_key,
-                "manifest": manifest}
+                "host_state": host_state, "manifest": manifest}
     return None
 
 

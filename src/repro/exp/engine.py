@@ -112,6 +112,28 @@ class DNNProblem:
         return self.batch.n
 
 
+@dataclasses.dataclass
+class StreamProblem:
+    """A built kind="synthetic_stream" regime: the fleet lives in a
+    host-resident `client_batch.ClientStore` (never stacked on device) and
+    the reference optimum comes from the slab-wise host Newton solver —
+    the problem form the cohort-streaming engine (`repro.core.cohort`)
+    consumes.  ≥100k clients fit where a stacked `Problem` would not."""
+
+    spec: ProblemSpec
+    store: object                    # client_batch.ClientStore
+    x0: jax.Array
+    x_star: np.ndarray
+
+    @property
+    def d(self) -> int:
+        return int(self.x0.shape[0])
+
+    @property
+    def n(self) -> int:
+        return self.store.n
+
+
 @functools.lru_cache(maxsize=None)
 def build_problem(spec: ProblemSpec) -> Problem:
     """Materialize a `ProblemSpec` or `DNNProblemSpec` (memoized — figures
@@ -126,6 +148,15 @@ def build_problem(spec: ProblemSpec) -> Problem:
         return DNNProblem(spec=spec, batch=batch, params0=params0,
                           loss_fn=bldnn.make_loss_fn(spec.classes),
                           eval_fn=bldnn.make_eval_fn())
+    if spec.kind == "synthetic_stream":
+        from repro.core import cohort
+
+        store = client_batch.synthetic_store(
+            spec.seed, spec.n_clients, spec.m, spec.d, lam=spec.lam)
+        x0 = jnp.zeros(spec.d, jnp.float64)
+        x_star = cohort.store_newton_solve(store, np.zeros(spec.d),
+                                           iters=spec.newton_iters)
+        return StreamProblem(spec=spec, store=store, x0=x0, x_star=x_star)
     if spec.kind == "table2":
         clients = glm.make_table2(spec.name, seed=spec.seed, lam=spec.lam)
     elif spec.kind == "synthetic":
@@ -159,6 +190,89 @@ def _comp(cfg: Optional[CompressorCfg], d: int, what: str):
     return build_compressor(cfg, d)
 
 
+def build_stream_spec(cell: MethodCell, d: int, n: int, lam: float,
+                      params: dict):
+    """`MethodSpec` + basis kind for a store-backed streaming cell, built
+    directly from the cell config (the stacked setups in
+    `repro.core.batched` start from per-client lists, which a streaming
+    fleet never materializes).  Field values mirror bl2_setup / bl3_setup /
+    fednl_bag_setup exactly — same defaults, same ledger bit accounting.
+    Pops the engine-level params (cohort, rounds_per_cohort, seed) from
+    ``params`` and returns ``(spec, basis, cohort, rounds_per_cohort,
+    seed)``."""
+    from repro.core import cohort, specs
+
+    m = cell.method
+    cohort_size = int(params.pop("cohort", n))
+    rpc = int(params.pop("rounds_per_cohort", 1))
+    seed = int(params.pop("seed", 0))
+    hc = _comp(cell.hess_comp, d, "hessian")
+    if m == "bl2":
+        mc = _comp(cell.model_comp, d, "model")
+        bb = cohort.standard_basisb(d, n)
+        init_exact = bool(params.pop("init_exact_hessian", True))
+        spec = specs.BL2Spec(
+            hess_comp=hc, model_comp=mc,
+            alpha=params.pop("alpha", 1.0), eta=params.pop("eta", 1.0),
+            p=params.pop("p", 1.0), tau=int(params.pop("tau", n)),
+            init_exact=init_exact,
+            init_hess_bits=bb.init_coeff_bits_mean(init_exact),
+            basis_bits=bb.transmission_bits_mean(), block=False)
+        basis = "standard"
+    elif m == "bl3":
+        mc = _comp(cell.model_comp, d, "model")
+        spec = specs.BL3Spec(
+            hess_comp=hc, model_comp=mc,
+            alpha=params.pop("alpha", 1.0), eta=params.pop("eta", 1.0),
+            p=params.pop("p", 1.0), tau=int(params.pop("tau", n)),
+            c=params.pop("c", 1e-8), option=int(params.pop("option", 2)))
+        basis = None
+    elif m == "fednl_bag":
+        bb = cohort.standard_basisb(d, n)
+        init_exact = bool(params.pop("init_exact_hessian", True))
+        q = params.pop("q", 0.5)
+        eta = params.pop("eta", None)
+        mu = params.pop("mu", None)
+        spec = specs.FedNLBAGSpec(
+            hess_comp=hc, alpha=params.pop("alpha", 1.0), q=q,
+            eta=q if eta is None else eta, mu=lam if mu is None else mu,
+            init_exact=init_exact,
+            init_hess_bits=bb.init_coeff_bits_mean(init_exact),
+            basis_bits=bb.transmission_bits_mean(), block=False)
+        basis = "standard"
+    else:
+        raise ValueError(
+            f"method {m!r} has no cohort-streaming path (bl2, bl3 and "
+            "fednl_bag stream — see MethodSpec.supports_cohort)")
+    if params:
+        raise ValueError(
+            f"unused streaming cell params {sorted(params)} for {m!r}")
+    return spec, basis, cohort_size, rpc, seed
+
+
+def _run_stream_cell(cell: MethodCell, prob: StreamProblem, steps: int,
+                     params: dict, backend: str) -> bl.History:
+    from repro.core import batched, cohort
+
+    spec, basis, csize, rpc, seed = build_stream_spec(
+        cell, prob.d, prob.n, prob.store.lam, params)
+    eng = cohort.CohortEngine(
+        spec, prob.store, prob.x0, cohort=csize, rounds_per_cohort=rpc,
+        root_key=jax.random.PRNGKey(seed), basis=basis,
+        sharded=backend.endswith("+sharded"))
+    try:
+        eval_x, leds, _events = eng.run_chunk(0, steps)
+    finally:
+        eng.close()
+    # fleet gaps evaluate slab-wise on the host — the device never holds
+    # more than the cohort, so the stacked eval program has no input here
+    xs = np.asarray(eval_x)
+    f_star = cohort.store_loss(prob.store, prob.x_star)
+    gaps = np.array([cohort.store_loss(prob.store, xs[t]) - f_star
+                     for t in range(xs.shape[0])])
+    return batched._history({"gap": gaps}, leds)
+
+
 def run_cell(exp: Experiment, cell: MethodCell, prob: Problem, *,
              steps: Optional[int] = None, seed: Optional[int] = None,
              backend: Optional[str] = None,
@@ -183,6 +297,15 @@ def run_cell(exp: Experiment, cell: MethodCell, prob: Problem, *,
     params = cell.params_dict()
     if seed is not None and m in _SEEDED_METHODS:
         params.setdefault("seed", seed)
+
+    if isinstance(prob, StreamProblem):
+        if backend == "auto":
+            backend = "cohort"
+        if backend not in ("cohort", "cohort+sharded"):
+            raise ValueError(
+                f"cell {cell.name!r}: a synthetic_stream problem runs on "
+                f"the cohort backends, got backend={backend!r}")
+        return _run_stream_cell(cell, prob, steps, params, backend)
 
     if m == "bldnn":
         from repro.fed import bldnn

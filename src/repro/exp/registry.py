@@ -19,6 +19,10 @@ Registered experiments (``available_experiments()``):
   * ``fig1-xl``  — a beyond-paper scaled scenario: 512 clients at d=1200
     through the client-sharded shard_map backend with §2.3 block-mode
     coefficient state — a regime the original op-by-op code cannot touch.
+  * ``fig1-xxl`` — the cohort-streaming regime: 131072 clients in a
+    host-resident `ClientStore`, 512-client cohorts per round through
+    `repro.core.cohort.CohortEngine` (per-round cost flat in fleet size);
+    ``cohort-smoke`` is its minutes-scale test scenario.
   * ``fig1-bag`` — FedNL + Bernoulli-lazy gradient aggregation
     (`specs.FedNLBAGSpec`, after arXiv 2206.03588) vs FedNL, giving the
     BAG follow-up a reproducible experiment path.
@@ -53,7 +57,11 @@ class ProblemSpec:
     `client_batch.newton_solve_fused` (one Gram contraction, no (n, d, d)
     intermediate — required at fig1-xl scale)."""
 
-    kind: str = "synthetic"          # "synthetic" | "table2"
+    kind: str = "synthetic"          # "synthetic" | "table2" |
+    #                                  "synthetic_stream" (host-resident
+    #                                  ClientStore fleet for the cohort-
+    #                                  streaming engine; solver is the
+    #                                  slab-wise host Newton)
     name: Optional[str] = None       # TABLE2 regime name for kind="table2"
     seed: int = 0
     n_clients: int = 10
@@ -368,6 +376,62 @@ register_experiment(Experiment(
                    model_comp=_IDENT, backend="fast+sharded"),
     ),
     tags=("xl",),
+))
+
+# fig1-xxl: the cohort-streaming regime — a fleet two-plus orders of
+# magnitude past fig1-xl (131072 clients) whose data/shift state lives in a
+# host-resident ClientStore; each round touches only a 512-client cohort
+# (`repro.core.cohort.CohortEngine`), so per-round wall time is flat in the
+# total fleet size (benchmarks/run.py cohort_stream pins ≤1.15× from n=1k
+# to n=100k).  Small per-client shapes on purpose: the scale axis here is
+# n, not d — fig1-xl already owns the big-d regime.
+_XXL = ProblemSpec(kind="synthetic_stream", seed=0, n_clients=131072, m=8,
+                   d=24, r=24, lam=1e-3, newton_iters=12, solver="fused")
+
+register_experiment(Experiment(
+    name="fig1-xxl",
+    figure="extra",
+    title="FedNL-PP at fleet scale: 131072 clients, 512-client cohorts, "
+          "streaming engine (beyond paper)",
+    paper_ref="engine demonstration (no paper counterpart)",
+    problem=_XXL,
+    cells=(
+        MethodCell("BL2", "bl2", 16, basis="standard",
+                   hess_comp=CompressorCfg(kind="topk", k=2 * _XXL.d),
+                   model_comp=_IDENT, backend="cohort",
+                   params=(("tau", 256), ("cohort", 512),
+                           ("rounds_per_cohort", 4))),
+        MethodCell("FedNL-BAG", "fednl_bag", 16, basis="standard",
+                   hess_comp=CompressorCfg(kind="topk", k=2 * _XXL.d),
+                   backend="cohort",
+                   params=(("q", 0.5), ("cohort", 512),
+                           ("rounds_per_cohort", 4))),
+    ),
+    tags=("xl", "stream"),
+))
+
+# cohort-smoke: a minutes-scale streaming scenario for the fault-tolerance
+# and resume tests (tests/test_cohort.py kill-9s a serve of this through
+# ckpt@2) and for CI — same engine path as fig1-xxl at a fleet small
+# enough to also run stacked for parity.
+_COHORT_SMOKE = ProblemSpec(kind="synthetic_stream", seed=3, n_clients=96,
+                            m=8, d=8, r=8, lam=1e-3, newton_iters=12,
+                            solver="fused")
+
+register_experiment(Experiment(
+    name="cohort-smoke",
+    figure="extra",
+    title="Cohort-streaming smoke: 96 clients, 16-client cohorts",
+    paper_ref="engine test scenario (no paper counterpart)",
+    problem=_COHORT_SMOKE,
+    cells=(
+        MethodCell("BL2", "bl2", 12, basis="standard",
+                   hess_comp=CompressorCfg(kind="topk", k=2 * 8),
+                   model_comp=_IDENT, backend="cohort",
+                   params=(("tau", 24), ("cohort", 16),
+                           ("rounds_per_cohort", 2))),
+    ),
+    tags=("stream",),
 ))
 
 # fig-dnn: the BL-DNN deep-network workload on the pytree round engine —

@@ -53,7 +53,12 @@ import numpy as np
 
 from repro.core import batched, comm, faults, rounds
 from repro.exp import artifacts
-from repro.exp.engine import _comp, build_problem
+from repro.exp.engine import (
+    StreamProblem,
+    _comp,
+    build_problem,
+    build_stream_spec,
+)
 from repro.exp.registry import get_experiment
 
 #: methods the serve loop can drive (GLM specs; the DNN spec's pytree
@@ -124,6 +129,18 @@ def _resolve_backend(cell, override: Optional[str]) -> str:
     return backend
 
 
+def _resolve_cohort_backend(cell, override: Optional[str]) -> str:
+    backend = override or cell.backend
+    if backend == "auto":
+        backend = "cohort"
+    if backend not in ("cohort", "cohort+sharded"):
+        raise SystemExit(
+            f"a synthetic_stream cell serves on the 'cohort' or "
+            f"'cohort+sharded' backends, not {backend!r} (the stacked "
+            "backends would materialize the whole fleet on device)")
+    return backend
+
+
 def _empty_streams(d: int) -> dict:
     z64 = lambda: np.zeros((0,), np.float64)
     return {"eval_x": np.zeros((0, d), np.float64),
@@ -163,6 +180,130 @@ def _restore_carry(ck: dict, template) -> object:
         treedef, [jnp.asarray(g) for g in got])
 
 
+def _serve_cohort(exp, cell, prob: StreamProblem, *, seed: int, chunk: int,
+                  max_rounds: int, ckpt_dir: str, backend: Optional[str],
+                  keep: int, plan: Optional[faults.FaultPlan],
+                  crash_after_round: Optional[int],
+                  result_path: Optional[str], log) -> dict:
+    """The serve loop over the cohort-streaming engine: same chunked
+    checkpoint/resume/crash contract as the stacked path, with the engine's
+    host plane (client store, fleet totals, frozen epoch stats) riding in
+    the ckpt@2 ``host_state`` payload.  The trajectory stays chunk-boundary
+    invariant — per-round keys are ``fold_in(root_key, t)`` and the cohort
+    schedule is a pure function of the absolute epoch index — so kill -9 +
+    rerun is bit-exact here too (tests/test_cohort.py)."""
+    from repro.core import cohort
+
+    plan = plan if plan is not None else faults.FaultPlan(n=prob.n)
+    if not plan.trivial:
+        raise SystemExit(
+            "cohort streaming does not take an injected fault schedule: "
+            "client absence is the engine's own per-round participation "
+            "draw over the global fleet (Alg. 2-3 partial participation); "
+            "drop the fault flags or serve a stacked cell")
+    backend = _resolve_cohort_backend(cell, backend)
+    crash = (faults.CrashInjector(crash_after_round)
+             if crash_after_round is not None else None)
+    params = cell.params_dict()
+    params.pop("seed", None)        # the serve PRNG root comes from --seed
+    spec, basis, csize, rpc, _ = build_stream_spec(
+        cell, prob.d, prob.n, prob.store.lam, params)
+    config = serve_config(exp, cell, seed, backend, plan)
+    digest = artifacts.config_digest(config)
+    root_key = jax.random.PRNGKey(seed)
+    eng = cohort.CohortEngine(
+        spec, prob.store, prob.x0, cohort=csize, rounds_per_cohort=rpc,
+        root_key=root_key, basis=basis,
+        sharded=backend == "cohort+sharded")
+    template = eng.carry_template()
+    ck = artifacts.load_checkpoint(ckpt_dir, config_digest=digest)
+    resumed_from = None
+    if ck is not None:
+        t = int(ck["t"])
+        carry = _restore_carry(ck, template)
+        eng.restore(t, carry, ck.get("host_state"))
+        streams = {name: np.asarray(ck["streams"][name])
+                   for name in _STREAMS}
+        resumed_from = t
+        log(f"[serve] {exp.name}/{cell.name}: resumed from checkpoint at "
+            f"round {t} (config {digest})")
+    else:
+        t = 0
+        streams = _empty_streams(prob.d)
+        log(f"[serve] {exp.name}/{cell.name}: fresh run (config {digest}, "
+            f"cohort {eng.cohort}/{eng.n})")
+
+    t0_wall = time.perf_counter()
+    chunks_run = 0
+    try:
+        while t < max_rounds:
+            steps = min(chunk, max_rounds - t)
+            ys = eng.run_chunk(t, steps)
+            streams = _append_chunk(streams, ys)
+            t += steps
+            chunks_run += 1
+            log(f"[serve] rounds {t - steps}..{t - 1} done "
+                f"(epoch {(t - 1) // rpc})")
+            if crash is not None:
+                crash.maybe_crash(t - 1)
+            leaves, host_state = eng.checkpoint_payload()
+            artifacts.save_checkpoint(
+                ckpt_dir, t=t, carry_leaves=leaves, streams=streams,
+                root_key=np.asarray(root_key), config_digest=digest,
+                keep=keep, host_state=host_state)
+    finally:
+        eng.close()
+
+    # fleet gaps evaluate slab-wise on the host (the device never holds
+    # more than the cohort)
+    xs = np.asarray(streams["eval_x"])
+    f_star = cohort.store_loss(prob.store, prob.x_star)
+    evals = {"gap": np.array([cohort.store_loss(prob.store, xs[i]) - f_star
+                              for i in range(xs.shape[0])])}
+    led_streams = comm.CommLedger(
+        *(jnp.asarray(streams[f"led_{leg}"])
+          for leg in comm.CommLedger.LEGS))
+    hist = batched._history(evals, led_streams)
+    hist.events = [int(e) for e in streams["events"]]
+    record = {
+        "schema": artifacts.SERVE_SCHEMA,
+        "experiment": exp.name,
+        "cell": cell.name,
+        "seed": seed,
+        "config_digest": digest,
+        "config": config,
+        "rounds": t,
+        "history": {
+            "gaps": [float(g) for g in hist.gaps],
+            "up_bits": [float(b) for b in hist.up_bits],
+            "down_bits": [float(b) for b in hist.down_bits],
+            "legs": {leg: [float(v) for v in hist.legs[leg]]
+                     for leg in comm.CommLedger.LEGS},
+            "events": hist.events,
+        },
+        "degraded_rounds": int(np.count_nonzero(streams["events"])),
+        "meta": {
+            "backend": backend,
+            "chunk": chunk,
+            "chunks_run": chunks_run,
+            "resumed_from": resumed_from,
+            "straggler_wait_s": 0.0,
+            "runtime_s": time.perf_counter() - t0_wall,
+            "cohort": eng.cohort,
+            "rounds_per_cohort": rpc,
+            "n_clients": eng.n,
+            "prefetch_overlap": eng.prefetch_overlap,
+            "prefetch": dict(eng.metrics),
+        },
+    }
+    if result_path:
+        artifacts.write_json(result_path, record)
+        log(f"[serve] result → {result_path}")
+    log(f"[serve] {t} rounds, final gap {record['history']['gaps'][-1]:.3e}, "
+        f"prefetch overlap {eng.prefetch_overlap:.0%}")
+    return record
+
+
 def serve(*, exp_name: str, cell_name: str, seed: int = 0, chunk: int = 25,
           max_rounds: int = 200, ckpt_dir: str, backend: Optional[str] = None,
           keep: int = 3, plan: Optional[faults.FaultPlan] = None,
@@ -175,6 +316,12 @@ def serve(*, exp_name: str, cell_name: str, seed: int = 0, chunk: int = 25,
     exp = get_experiment(exp_name)
     cell = exp.cell(cell_name)
     prob = build_problem(exp.problem)
+    if isinstance(prob, StreamProblem):
+        return _serve_cohort(
+            exp, cell, prob, seed=seed, chunk=chunk, max_rounds=max_rounds,
+            ckpt_dir=ckpt_dir, backend=backend, keep=keep, plan=plan,
+            crash_after_round=crash_after_round, result_path=result_path,
+            log=log)
     spec, batch, basisb = build_setup(exp, cell, prob)
     plan = plan if plan is not None else faults.FaultPlan(n=batch.n)
     if plan.n != batch.n:
@@ -319,8 +466,11 @@ def main(argv=None):
                     help="serve until this many total rounds")
     ap.add_argument("--ckpt-dir", default="runs/serve",
                     help="checkpoint directory (resume looks here)")
-    ap.add_argument("--backend", choices=("fast", "fast+sharded"),
-                    default=None, help="override the cell's engine backend")
+    ap.add_argument("--backend",
+                    choices=("fast", "fast+sharded", "cohort",
+                             "cohort+sharded"),
+                    default=None, help="override the cell's engine backend "
+                    "(cohort* for synthetic_stream cells)")
     ap.add_argument("--keep", type=int, default=3,
                     help="checkpoints retained after pruning")
     ap.add_argument("--result", default=None,

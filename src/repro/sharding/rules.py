@@ -54,6 +54,23 @@ def client_chunk_specs(carry_specs, basis_replicated: bool = False):
     return in_specs, (carry_specs, (P(), P(), P()))
 
 
+def cohort_chunk_specs(carry_specs, basis_replicated: bool = False):
+    """shard_map specs for the cohort-streaming chunk body
+    (`repro.core.rounds._cohort_chunk_body`).
+
+    Positional layout is (batch, basisb, x0, carry, ts, keys, cidx, creal,
+    frozen) → (carry, (eval_x, ledger, events)).  The COHORT axis takes the
+    client axis's place across the shard_map boundary: the gathered cohort
+    batch, the cohort-capacity carry's client-stacked leaves, and the
+    per-slot global-index/padding-mask vectors all shard over CLIENT_AXIS,
+    while the frozen fleet aggregates are replicated server state (every
+    shard needs them to finish a fleet mean/max)."""
+    sharded = P(CLIENT_AXIS)
+    in_specs = (sharded, P() if basis_replicated else sharded, P(),
+                carry_specs, P(), P(), sharded, sharded, P())
+    return in_specs, (carry_specs, (P(), P(), P()))
+
+
 @dataclasses.dataclass
 class Rules:
     mesh: Mesh

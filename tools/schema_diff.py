@@ -27,8 +27,11 @@ import os
 import sys
 import zipfile
 
-CKPT_SCHEMA = "repro.exp/ckpt@1"
+CKPT_SCHEMA = "repro.exp/ckpt@2"
 SERVE_SCHEMA = "repro.exp/serve@1"
+# host_state (the @2 addition — cohort-streaming host plane) is validated
+# when present but deliberately NOT required: stacked serves write
+# host_state=[] and pre-@2 tooling may re-check old directories.
 _MANIFEST_KEYS = {"schema", "config_digest", "t", "n_carry_leaves",
                   "carry_leaves", "streams", "payload_sha256"}
 _SERVE_HISTORY_KEYS = {"gaps", "up_bits", "down_bits", "legs", "events"}
@@ -89,6 +92,7 @@ def check_ckpt_dir(ckpt_dir):
             continue
         want = ({f"carry/{i}.npy" for i in range(m["n_carry_leaves"])}
                 | {f"stream/{s}.npy" for s in m["streams"]}
+                | {f"host/{h}.npy" for h in m.get("host_state", [])}
                 | {"root_key.npy"})
         if not want <= names:
             problems.append(
