@@ -192,6 +192,50 @@ def basis_matrix():
     return rows
 
 
+@bench("basis_ship")
+def basis_ship():
+    """The ISSUE's headline grid: basis × shipment wire × refresh period →
+    bits-to-tol on the fig-dnn problem.  The question the grid answers is
+    whether the per-layer SVD basis can HOLD its rounds-to-accuracy win
+    once the one-time (U_ℓ, V_ℓ) shipment is billed: compressed wires
+    (bf16/int8) shrink the basis_ship leg 2–4×, amortized refresh re-bills
+    it on a drift trigger, and the structured DCT/Hadamard rotations ship
+    zero floats by construction.  Each row records total Mbits-to-tol plus
+    the basis_ship share so the trade is auditable.  ``REPRO_BENCH_TINY=1``
+    shrinks to 3 cells at smoke depth for CI."""
+    from repro.exp import build_problem, get_experiment
+    from repro.fed import bldnn as B
+
+    prob = build_problem(get_experiment("fig-dnn").problem)
+    tiny = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
+    STEPS = 6 if tiny else 40
+    TOL = 0.1   # fig-dnn's tolerance: training error ≤ 10%
+    cells = [
+        ("topk_nobasis", dict(use_basis=False)),
+        ("svd_f32", {}),
+        ("svd_bf16", dict(ship_float_bits=16)),
+        ("svd_int8", dict(ship_float_bits=8)),
+        ("svd_int8_T5", dict(ship_float_bits=8, rounds_per_refresh=5,
+                             drift_threshold=0.05)),
+        ("dct_tree", dict(basis_kind="dct_tree")),
+        ("hadamard_tree", dict(basis_kind="hadamard_tree")),
+    ]
+    if tiny:
+        cells = [cells[0], cells[3], cells[5]]
+    rows = []
+    for tag, kw in cells:
+        cfg = B.BLDNNConfig(lr=0.05, top_k_frac=0.1, **kw)
+        h = B.run_bldnn(prob.loss_fn, prob.eval_fn, prob.params0,
+                        prob.batch, STEPS, cfg)
+        derived, extra = _mbits(h, tol=TOL)
+        ship = h.legs["basis_ship"][-1] / 1e6
+        extra.update(basis_ship_mbits=ship, gap_end=float(h.gaps[-1]))
+        rows.append((f"basis_ship_{tag}", 0.0,
+                     f"{derived};basis_ship_Mbits={ship:.3f}"
+                     f";gap@{STEPS}={h.gaps[-1]:.3f}", extra))
+    return rows
+
+
 #: per-round cost of the retired hand-rolled BL-DNN shard_map loop
 #: (`fed.bldnn.make_fed_train_step`, one jitted step dispatched per round
 #: over an 8-virtual-device mesh), measured on the fig-dnn problem in the

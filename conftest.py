@@ -13,10 +13,13 @@ population is auditable:
     pytest -m requires_hypothesis --collect-only -q   # list them
     pytest -rs                                        # see the reason
 
-As of this writing that population is exactly the 10 ``@given`` tests in
+As of this writing that population is exactly the 18 ``@given`` tests in
 tests/{test_core_bl,test_basis_registry,test_core_compressors,
-test_kernels,test_faults}.py (tests/test_cohort.py adds a chunk-boundary
-property when hypothesis is available).  Nothing else in tier-1 skips: a
+test_kernels,test_faults,test_comm_properties,test_cohort}.py.  Every
+``@given`` property in tests/test_comm_properties.py and the basis-ship
+additions keeps a deterministic ``_check_*`` battery companion, so the
+algebra is still exercised where hypothesis is absent.  Nothing else in
+tier-1 skips: a
 new skip showing up under ``-rs`` without this marker is a regression to
 investigate, not environment noise.
 """

@@ -32,6 +32,17 @@ under string names and built per-fleet with `make_bases(name, clients,
                       shipped once like ``eigen``.  Registered with
                       ``pytree=True`` — it transforms parameter pytrees,
                       not d×d matrices (see `PerLayerSVDBasis`).
+  * ``dct_tree``, ``hadamard_tree`` — free *structured* pytree bases
+                      (`StructuredTreeBasis`): per-leaf DCT-II /
+                      Walsh–Hadamard rotations generated from leaf shapes
+                      by both sides — the same rotation machinery as
+                      ``per_layer_svd`` at zero shipment cost.
+
+Shipped bases (``eigen``'s Q, ``per_layer_svd``'s leaf factors) can travel
+COMPRESSED: `quantize_ship_factor` applies a `comm.BasisShipSpec` (bf16 /
+int8 quantization, top-|·| column sparsification) to the factors the
+receiver actually rotates with, and prices the shipment through the same
+`comm.price` algebra as every other leg.
 
 For DataOuterBasis, coefficient matrices are r×r embedded in the top-left of
 a d×d array padded with exact zeros, so the same compressor machinery
@@ -45,12 +56,14 @@ round-trip contract tests (tests/test_basis_registry.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import comm
 from .comm import FLOAT_BITS
 
 
@@ -219,6 +232,17 @@ class EigenBasis(RotationBasis):
     the fleet's data — so it ships once (d² floats, `basis_transmission_bits`)
     and the comm ledger bills it on the ``basis_ship`` leg."""
 
+    def shipped(self, ship: comm.BasisShipSpec
+                ) -> Tuple["EigenBasis", float]:
+        """The basis as it arrives after a compressed shipment: Q quantized
+        per `ship`, plus the exact bits that shipment cost (priced through
+        `comm.price` on the shipment wire).  The receiver rotates with the
+        QUANTIZED Q — a narrow wire trades reconstruction fidelity for
+        bits, and both sides of that trade are observable (the bf16
+        envelope is pinned in tests/test_basis_registry.py)."""
+        Q, bits = quantize_ship_factor(self.Q, ship)
+        return EigenBasis(Q=Q), bits
+
 
 class DCTBasis(RotationBasis):
     """Fixed orthonormal DCT-II rotation: the same machinery as `EigenBasis`
@@ -232,6 +256,68 @@ class DCTBasis(RotationBasis):
         C = np.sqrt(2.0 / d) * np.cos(np.pi * (t + 0.5) * j / d)
         C[0] *= np.sqrt(0.5)           # orthonormalize the DC row
         super().__init__(Q=jnp.asarray(C.T))  # columns = DCT basis vectors
+
+
+# --------------------------------------------------------------------------
+# compressed basis shipment: quantize the factors that actually travel
+# --------------------------------------------------------------------------
+def quantize_ship_factor(M: jax.Array, ship: comm.BasisShipSpec
+                         ) -> Tuple[jax.Array, float]:
+    """One shipped (rows, cols) basis factor after the wire: quantized
+    values and the exact bits they cost.
+
+    The quantization is what the receiver actually rotates with — not just
+    an accounting fiction:
+
+      * ``col_frac < 1`` zeroes everything but each column's top
+        ``⌈col_frac·rows⌉`` magnitudes (selection via the shared
+        `compressors.topk_keep_mask` backend, so REPRO_BL_PALLAS=1 swaps
+        the search kernel without changing the kept set);
+      * ``float_bits = 16`` is a bfloat16 round-trip; ``8`` is symmetric
+        per-column int8 (scale = max|col|/127, one f32 scale per column);
+        ``32``/``64`` are plain casts (identity for factors already that
+        wide).
+
+    Bits are priced by `comm.price` on `ship.wire` with
+    `ship.factor_counts` — the same Counts→bits algebra every other leg
+    uses.  Returns the factor in its original dtype (every quantized value
+    is exactly representable there) and the bits as a python float, so
+    shipment billing stays configuration-static."""
+    M = jnp.asarray(M)
+    if M.ndim != 2:
+        raise ValueError(f"shipped basis factors are 2-D, got {M.shape}")
+    rows, cols = int(M.shape[0]), int(M.shape[1])
+    W = M if ship.float_bits == 64 else M.astype(jnp.float32)
+    if not ship.dense:
+        from . import compressors  # local import: compressors imports comm
+
+        k = max(1, min(rows, int(np.ceil(ship.col_frac * rows))))
+        keep = compressors.topk_keep_mask(W.T, k).T
+        W = jnp.where(keep, W, jnp.zeros_like(W))
+    if ship.float_bits == 16:
+        W = W.astype(jnp.bfloat16).astype(jnp.float32)
+    elif ship.float_bits == 8:
+        scale = jnp.max(jnp.abs(W), axis=0, keepdims=True) / 127.0
+        scale = jnp.where(scale > 0.0, scale, 1.0)
+        W = jnp.clip(jnp.round(W / scale), -127.0, 127.0) * scale
+    counts = ship.factor_counts(rows, cols)
+    bits = float(comm.price(ship.wire, counts))
+    return W.astype(M.dtype), bits
+
+
+def _two_sided(A: jax.Array, g: jax.Array, B: jax.Array) -> jax.Array:
+    """One rotated leaf: ``A @ g @ B`` (left-associated, matching python
+    ``@``).  Client-stacked f32 leaves route through the fused Pallas
+    transform kernel under ``REPRO_BL_PALLAS=1`` — bitwise the XLA batched
+    matmul in interpret mode (kernels/basis_transform.py), so the flag
+    never perturbs trajectories."""
+    if (g.ndim == 3 and g.dtype == jnp.float32
+            and A.dtype == jnp.float32 and B.dtype == jnp.float32
+            and os.environ.get("REPRO_BL_PALLAS", "0") == "1"):
+        from repro.kernels import ops
+
+        return ops.basis_transform(A, g, B)
+    return A @ g @ B
 
 
 @jax.tree_util.register_pytree_node_class
@@ -283,13 +369,14 @@ class PerLayerSVDBasis:
         coefficient tensor keeps the leaf's own shape).  Leaves may carry
         leading batch/client axes — matrix products broadcast over them."""
         return self._map(
-            lambda U, V, g: jnp.swapaxes(U, -1, -2) @ g.astype(U.dtype) @ V,
+            lambda U, V, g: _two_sided(jnp.swapaxes(U, -1, -2),
+                                       g.astype(U.dtype), V),
             tree)
 
     def unrotate(self, tree):
         """Exact inverse of `rotate`: U_ℓ c V_ℓᵀ per rotated leaf."""
         return self._map(
-            lambda U, V, c: U @ c @ jnp.swapaxes(V, -1, -2), tree)
+            lambda U, V, c: _two_sided(U, c, jnp.swapaxes(V, -1, -2)), tree)
 
     def ship_floats(self) -> float:
         """One-time basis shipment size in floats (Σ_ℓ |U_ℓ| + |V_ℓ| — the
@@ -297,6 +384,24 @@ class PerLayerSVDBasis:
         shipping wire's float width)."""
         return float(sum(uv[0].size + uv[1].size
                          for uv in self.UV if uv is not None))
+
+    def shipped(self, ship: comm.BasisShipSpec
+                ) -> Tuple["PerLayerSVDBasis", float]:
+        """The basis as it arrives after a compressed shipment: every
+        rotated leaf's (U_ℓ, V_ℓ) quantized per `ship`
+        (`quantize_ship_factor`) and the summed exact bits of the shipment.
+        The default spec (f32, dense) is the identity on these f32 factors
+        and prices exactly ``ship_floats() × 32`` — legacy billing."""
+        new_uv, bits = [], 0.0
+        for uv in self.UV:
+            if uv is None:
+                new_uv.append(None)
+                continue
+            U, bu = quantize_ship_factor(uv[0], ship)
+            V, bv = quantize_ship_factor(uv[1], ship)
+            new_uv.append((U, V))
+            bits += bu + bv
+        return type(self)(UV=tuple(new_uv)), bits
 
 
 def per_layer_svd_basis(params, use_basis: bool = True,
@@ -317,6 +422,71 @@ def per_layer_svd_basis(params, use_basis: bool = True,
         else:
             out.append(None)
     return PerLayerSVDBasis(UV=tuple(out))
+
+
+@jax.tree_util.register_pytree_node_class
+class StructuredTreeBasis(PerLayerSVDBasis):
+    """Pytree basis whose per-leaf rotations are CONVENTIONS (DCT-II or
+    Walsh–Hadamard), generalizing the d×d `DCTBasis` to parameter trees:
+    the same `PerLayerSVDBasis` rotation machinery (and the same Pallas
+    transform kernel under ``REPRO_BL_PALLAS=1``), but both sides generate
+    the factors from the leaf shapes alone — nothing data-dependent ever
+    travels, so ``ship_floats() == 0`` and `shipped` is the identity at
+    zero bits.  The decorrelation-vs-adaptivity control of the BL-DNN
+    grid: how much of the per-layer-SVD win survives when the basis is
+    free?"""
+
+    def ship_floats(self) -> float:
+        return 0.0
+
+    def shipped(self, ship: comm.BasisShipSpec
+                ) -> Tuple["StructuredTreeBasis", float]:
+        """Conventions don't travel: the factors are never on the wire, so
+        quantizing them would model a cost (and a fidelity loss) that
+        doesn't exist.  Identity, zero bits."""
+        return self, 0.0
+
+
+def _dct_matrix(d: int) -> jax.Array:
+    """Orthonormal DCT-II factor (columns = basis vectors), f32 — the same
+    construction as `DCTBasis` at any dimension."""
+    j = np.arange(d)[:, None]
+    t = np.arange(d)[None, :]
+    C = np.sqrt(2.0 / d) * np.cos(np.pi * (t + 0.5) * j / d)
+    C[0] *= np.sqrt(0.5)
+    return jnp.asarray(C.T, jnp.float32)
+
+
+def _hadamard_matrix(d: int) -> jax.Array:
+    """Normalized Walsh–Hadamard factor H_d/√d for power-of-two d; identity
+    otherwise (Sylvester's construction only exists at powers of two — a
+    non-pow2 leaf axis simply passes through unrotated on that side)."""
+    if d & (d - 1):
+        return jnp.eye(d, dtype=jnp.float32)
+    H = np.array([[1.0]])
+    while H.shape[0] < d:
+        H = np.block([[H, H], [H, -H]])
+    return jnp.asarray(H / np.sqrt(d), jnp.float32)
+
+
+def structured_tree_basis(params, kind: str = "dct",
+                          min_dim: int = 2) -> StructuredTreeBasis:
+    """Build the free structured basis of a parameter pytree: every 2-D
+    leaf with both dims ≥ `min_dim` gets fixed orthogonal (U, V) factors
+    from its SHAPE alone (``kind`` ∈ {"dct", "hadamard"}); other leaves
+    pass through.  Zero shipment by construction."""
+    factories = {"dct": _dct_matrix, "hadamard": _hadamard_matrix}
+    if kind not in factories:
+        raise KeyError(f"unknown structured-basis kind {kind!r}; "
+                       f"one of {sorted(factories)}")
+    make = factories[kind]
+    out = []
+    for p in jax.tree_util.tree_leaves(params):
+        if p.ndim == 2 and min(p.shape) >= min_dim:
+            out.append((make(int(p.shape[0])), make(int(p.shape[1]))))
+        else:
+            out.append(None)
+    return StructuredTreeBasis(UV=tuple(out))
 
 
 def orth_basis_from_data(A_data: jax.Array, rcond: float = 1e-10) -> DataOuterBasis:
@@ -471,3 +641,18 @@ def _per_layer_svd_bases(params, x0=None, use_basis: bool = True):
     complete per-layer SVD rotation per 2-D weight, shared by the whole
     fleet.  Shipment (Σ_ℓ |U_ℓ|+|V_ℓ| floats) bills on ``basis_ship``."""
     return per_layer_svd_basis(params, use_basis=use_basis)
+
+
+@register_basis("dct_tree", pytree=True)
+def _dct_tree_bases(params, x0=None, min_dim: int = 2):
+    """Free structured pytree basis: per-leaf DCT-II rotations generated
+    from leaf shapes by both sides — zero ``basis_ship`` bits."""
+    return structured_tree_basis(params, kind="dct", min_dim=min_dim)
+
+
+@register_basis("hadamard_tree", pytree=True)
+def _hadamard_tree_bases(params, x0=None, min_dim: int = 2):
+    """Free structured pytree basis: per-leaf normalized Walsh–Hadamard
+    rotations (power-of-two axes; identity otherwise) — zero
+    ``basis_ship`` bits."""
+    return structured_tree_basis(params, kind="hadamard", min_dim=min_dim)

@@ -26,6 +26,7 @@ for nested codecs.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import NamedTuple, Union
 
 import jax
@@ -105,6 +106,78 @@ def with_float_bits(wire: WireTree, float_bits: int) -> WireTree:
     if isinstance(wire, tuple):
         return tuple(with_float_bits(w, float_bits) for w in wire)
     return dataclasses.replace(wire, float_bits=float_bits)
+
+
+#: float widths a shipped basis may quantize to: f64/f32 casts, bf16
+#: round-trip, or int8 with per-column f32 scales (see `BasisShipSpec`).
+_SHIP_FLOAT_BITS = (8, 16, 32, 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class BasisShipSpec:
+    """How a shipped basis travels the wire (the ``basis_ship`` leg).
+
+    The shipment leg goes through the SAME pricing machinery as every other
+    leg: the spec derives a `WireFormat` (`.wire`) and the basis layer
+    reports `Counts` of what its quantized factors actually carry
+    (`repro.core.basis` — ``EigenBasis.shipped`` / ``PerLayerSVDBasis.
+    shipped``), priced by `price`.  Quantization is REAL, not just billed:
+    the rotation machinery afterwards uses the quantized factors, so the
+    convergence impact of a narrow shipment is measurable
+    (tests/test_basis_registry.py pins the bf16 envelope).
+
+      * ``float_bits`` — per-value width: 64/32 are plain casts, 16 is a
+        bfloat16 round-trip, 8 is symmetric int8 with one f32 scale per
+        basis column (the scale floats are billed at 32 bits; the packed
+        int8 values ride the wire's ``entry_bits``).
+      * ``col_frac`` — top-|·| sparsification of each basis column: every
+        column keeps its ``ceil(col_frac · rows)`` largest-magnitude
+        entries (selection via the shared `compressors.topk_keep_mask`
+        backend) and ships kept values + their row indices.
+
+    The default (f32, dense) reproduces the legacy billing exactly:
+    f32 factors pass through untouched and the priced bits equal
+    ``ship_floats() × 32``."""
+
+    float_bits: int = 32
+    col_frac: float = 1.0
+
+    def __post_init__(self):
+        if self.float_bits not in _SHIP_FLOAT_BITS:
+            raise ValueError(
+                f"BasisShipSpec.float_bits must be one of {_SHIP_FLOAT_BITS}"
+                f" (f64/f32 cast, bf16, int8+scales), got {self.float_bits}")
+        if not 0.0 < self.col_frac <= 1.0:
+            raise ValueError(
+                f"BasisShipSpec.col_frac must be in (0, 1], got "
+                f"{self.col_frac}")
+
+    @property
+    def dense(self) -> bool:
+        return self.col_frac >= 1.0
+
+    @property
+    def wire(self) -> "WireFormat":
+        """The shipment leg's wire.  int8 shipments price their packed
+        values as 8-bit `Counts.entries` and their per-column scales as
+        32-bit floats; every other width prices values as floats at
+        ``float_bits``.  Sparsified columns ship kept-row indices at the
+        standard index width."""
+        if self.float_bits == 8:
+            return WireFormat(float_bits=32, index_bits=INDEX_BITS,
+                              entry_bits=8)
+        return WireFormat(float_bits=self.float_bits, index_bits=INDEX_BITS)
+
+    def factor_counts(self, rows: int, cols: int) -> "Counts":
+        """Message `Counts` for shipping one (rows, cols) basis factor
+        under this spec — static configuration counts (python floats), so
+        shipment bits price at setup time, outside any scan."""
+        kept_per_col = max(1, min(rows, int(math.ceil(self.col_frac * rows))))
+        kept = float(kept_per_col * cols)
+        idx = 0.0 if self.dense else kept
+        if self.float_bits == 8:
+            return Counts(floats=float(cols), indices=idx, entries=kept)
+        return Counts(floats=kept, indices=idx)
 
 
 def _f64(x):

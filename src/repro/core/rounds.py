@@ -599,6 +599,23 @@ class RoundCtx:
     avail: "jax.Array | None" = None
 
 
+def refresh_due(t, rounds_per_refresh: int):
+    """Basis-refresh boundary predicate: True at rounds where an amortized
+    basis shipment MAY re-ship (``t % T == 0`` for ``T ≥ 1``; never for
+    ``T ≤ 0``, the ship-once policy).
+
+    Deliberately a pure function of the ABSOLUTE round index `t` (a traced
+    ``RoundCtx.t``), never of chunk-local position or wall clock — the same
+    invariance contract as the per-round keys (``fold_in(root_key, t)``):
+    fed_serve chunk boundaries and checkpoint resume cannot move a refresh
+    round (pinned in tests/test_basis_ship.py, mirroring the cohort
+    epoch-invariance pin)."""
+    T = int(rounds_per_refresh)
+    if T <= 0:
+        return jnp.asarray(False)
+    return (jnp.asarray(t) % T) == 0
+
+
 # ==========================================================================
 # Round-step combinators
 # ==========================================================================

@@ -34,7 +34,7 @@ that exists to demonstrate that a new method is a ~50-line spec.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +53,7 @@ from .rounds import (
     downlink_broadcast,
     global_grad,
     participation,
+    refresh_due,
     shift_update,
     tree_shift_update,
     tree_shift_update_sum,
@@ -616,6 +617,44 @@ class FedNLBAGSpec(MethodSpec):
 # public entry point, model builders and the experiment wiring)
 # ==========================================================================
 @dataclasses.dataclass(frozen=True)
+class BasisRefreshPolicy:
+    """Amortized basis shipment for specs that bill a shipped basis.
+
+    ``rounds_per_refresh = 0`` (default) is the legacy ship-once policy:
+    one shipment billed at round 0, reused forever.  ``T ≥ 1`` amortizes:
+    the round-0 shipment is still billed in full, and at every later
+    boundary (``rounds.refresh_due``: ``t % T == 0``, pure in the ABSOLUTE
+    round index so chunking and checkpoint resume can't move it) the
+    shipment is re-billed ONLY when the drift trigger fires — the previous
+    round's fleet-mean rotated-coefficient energy leakage
+    (1 − ‖compressed‖²/‖target‖² on the gradient leg) has reached
+    ``drift_threshold``.  A threshold of 0 re-ships at every boundary
+    (``T = 1`` then bills every round); a threshold > 1 never re-ships.
+
+    Accounting-only by construction: the basis is numerically FIXED for
+    the run (every client derives it from the shared initialization, so a
+    "re-shipment" carries the same factors), which is what makes
+    trajectories invariant to the policy — only the ``basis_ship`` ledger
+    leg and the drift carry leaf change (pinned bitwise on both reducers
+    in tests/test_basis_ship.py)."""
+
+    rounds_per_refresh: int = 0
+    drift_threshold: float = 0.0
+
+    @property
+    def amortized(self) -> bool:
+        return self.rounds_per_refresh > 0
+
+    def __post_init__(self):
+        if self.rounds_per_refresh < 0:
+            raise ValueError("rounds_per_refresh must be >= 0 "
+                             f"(0 = ship once), got {self.rounds_per_refresh}")
+        if self.drift_threshold < 0.0:
+            raise ValueError("drift_threshold must be >= 0, got "
+                             f"{self.drift_threshold}")
+
+
+@dataclasses.dataclass(frozen=True)
 class BLDNNSpec(MethodSpec):
     """Basis Learn + compressed-shift learning applied per layer of a DNN.
 
@@ -637,8 +676,11 @@ class BLDNNSpec(MethodSpec):
 
     DNN tensors ship as f32, so every leg is priced through
     `comm.with_float_bits(comp.wire, 32)` (index/entry widths untouched)
-    and the one-time (U_ℓ, V_ℓ) shipment bills 32 bits/float on
-    ``basis_ship``.
+    and the (U_ℓ, V_ℓ) shipment bills on ``basis_ship`` — by default once
+    at 32 bits/float, or at a compressed price via ``basis_ship_bits``
+    (the `comm.price` of the quantized factors the engine actually
+    rotates with), re-billed on the `BasisRefreshPolicy` schedule when
+    ``refresh`` amortizes the shipment.
 
     ``loss_fn(params, client_data) -> scalar`` is the per-client loss;
     ``eval_fn(params, data) -> {"gap": ..., ...}`` produces the post-scan
@@ -657,6 +699,15 @@ class BLDNNSpec(MethodSpec):
     lr: float = 1e-3
     eps: float = 1e-2
     precondition: bool = True
+    #: bits one basis shipment costs on the wire.  None derives the legacy
+    #: dense-f32 price (``ship_floats() × 32``); compressed shipments pass
+    #: the `comm.price` of the quantized factors (see
+    #: `basis.PerLayerSVDBasis.shipped` — `repro.fed.bldnn.run_bldnn`
+    #: wires both sides: the quantized basis into the engine AND its exact
+    #: price in here).
+    basis_ship_bits: Optional[float] = None
+    #: amortized re-shipment schedule; default is the legacy ship-once.
+    refresh: BasisRefreshPolicy = BasisRefreshPolicy()
 
     basis_replicated = True       # PerLayerSVDBasis is fleet-global
 
@@ -674,6 +725,14 @@ class BLDNNSpec(MethodSpec):
             comm.price(comm.with_float_bits(c.wire, self.WIRE_FLOAT_BITS), a)
             for c, a in zip(comps, auxs))
 
+    def _ship_bits(self, env) -> float:
+        """Bits of ONE basis shipment (round 0 and every fired refresh)."""
+        if env.basisb is None:
+            return 0.0
+        if self.basis_ship_bits is not None:
+            return float(self.basis_ship_bits)
+        return env.basisb.ship_floats() * self.WIRE_FLOAT_BITS
+
     def init(self, R, env):
         params = env.x0
         stacked = lambda p: jnp.zeros((R.n_local,) + p.shape, jnp.float32)
@@ -681,14 +740,22 @@ class BLDNNSpec(MethodSpec):
         fshift = jax.tree.map(stacked, params)  # shapes == param shapes
         server_f = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                 params)
-        ship = (0.0 if env.basisb is None
-                else env.basisb.ship_floats() * self.WIRE_FLOAT_BITS)
-        led0 = CommLedger.create(basis_ship=ship)
-        return (params, shift, fshift, server_f, led0)
+        led0 = CommLedger.create(basis_ship=self._ship_bits(env))
+        carry = (params, shift, fshift, server_f, led0)
+        if self.refresh.amortized:
+            # last round's fleet-mean rotated-coefficient energy leakage —
+            # the drift trigger's input, replicated (no client axis) so it
+            # checkpoints with the server state
+            carry = carry + (jnp.zeros((), jnp.float64),)
+        return carry
 
     def step(self, R, env, carry, rc):
         key_t = rc.key
-        params, shift, fshift, server_f, led = carry
+        amortized = self.refresh.amortized
+        if amortized:
+            params, shift, fshift, server_f, led, drift = carry
+        else:
+            params, shift, fshift, server_f, led = carry
         ys = (params, led, jnp.int32(EVENT_NONE))  # evaluated post-scan
         data = env.batch.data                     # leaves (n_local, ...)
         basis = env.basisb
@@ -728,8 +795,23 @@ class BLDNNSpec(MethodSpec):
         # plus both bit-accounting legs (per dtype: f32 coeffs, f64 bits).
         # The server mirrors every client's recursion, so the aggregated
         # gradient estimate is the fleet mean of the UPDATED shifts.
-        red = R.reduce_tree({"coeff": shift_n, "gbits": gbits,
-                             "fbits": fbits})
+        agg = {"coeff": shift_n, "gbits": gbits, "fbits": fbits}
+        if amortized:
+            # per-client rotated-coefficient energy leakage of this round's
+            # gradient leg (1 − ‖C(Δ)‖²/‖Δ‖², clipped at 0 for unbiased
+            # codecs that can overshoot); its fleet mean rides the SAME
+            # fused collective as the bit legs, so both reducers produce
+            # the identical drift scalar
+            sq = lambda x: jnp.sum(jnp.square(x.astype(jnp.float64)),
+                                   axis=tuple(range(1, x.ndim)))
+            kept = sum(sq(s) for s in jax.tree_util.tree_leaves(S))
+            total = sum(sq(c - s0)
+                        for c, s0 in zip(jax.tree_util.tree_leaves(coeff),
+                                         jax.tree_util.tree_leaves(shift)))
+            safe = jnp.where(total > 0.0, total, 1.0)
+            agg["drift"] = jnp.maximum(
+                jnp.where(total > 0.0, 1.0 - kept / safe, 0.0), 0.0)
+        red = R.reduce_tree(agg)
         coeff_mean = red["coeff"]
         g_hat = coeff_mean if basis is None else basis.unrotate(coeff_mean)
 
@@ -746,6 +828,18 @@ class BLDNNSpec(MethodSpec):
         params_n = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) - self.lr * u).astype(p.dtype),
             params, update)
+        if amortized:
+            # re-ship at refresh boundaries (pure in the absolute round
+            # index — see rounds.refresh_due) when LAST round's drift has
+            # reached the trigger; round 0's shipment is billed by init
+            fire = (refresh_due(rc.t, self.refresh.rounds_per_refresh)
+                    & (rc.t > 0)
+                    & (drift >= self.refresh.drift_threshold))
+            led = led.add(grad_up=red["gbits"], hess_up=red["fbits"],
+                          basis_ship=jnp.where(fire, self._ship_bits(env),
+                                               0.0))
+            return (params_n, shift_n, fshift_n, server_f_n, led,
+                    red["drift"]), ys
         led = led.add(grad_up=red["gbits"], hess_up=red["fbits"])
         return (params_n, shift_n, fshift_n, server_f_n, led), ys
 

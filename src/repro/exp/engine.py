@@ -317,8 +317,16 @@ def run_cell(exp: Experiment, cell: MethodCell, prob: Problem, *,
             raise ValueError("bldnn cells configure the (gradient+Fisher) "
                              "compressor via hess_comp")
         run_seed = params.pop("seed", 0)
+        from repro.core.basis import is_pytree_basis
+
+        if cell.basis is not None and not is_pytree_basis(cell.basis):
+            raise ValueError(
+                f"cell {cell.name!r}: bldnn needs a pytree basis "
+                f"(per_layer_svd / dct_tree / hadamard_tree), got "
+                f"{cell.basis!r}")
         cfg = bldnn.BLDNNConfig(compressor=cell.hess_comp.kind,
-                                use_basis=cell.basis == "per_layer_svd",
+                                use_basis=cell.basis is not None,
+                                basis_kind=cell.basis or "per_layer_svd",
                                 **params)
         # "auto" on a DNN cell means the engine's single-device fast path
         eng_backend = "fast" if backend == "auto" else backend

@@ -467,6 +467,47 @@ register_experiment(Experiment(
     ),
 ))
 
+# fig-dnn-ship: make the basis pay for itself.  fig-dnn shows the per-layer
+# SVD basis winning ROUNDS-to-90% (10 vs 13) but losing the BITS headline
+# to no-basis TopK because its dense-f32 shipment costs 0.69 Mbit.  This
+# grid attacks the shipment leg itself: the same basis shipped bf16 / int8
+# (quantized factors are what the engine rotates with — fidelity loss
+# included), plus the FREE structured pytree bases (per-leaf DCT /
+# Walsh–Hadamard rotations, zero floats shipped).  Same problem, compressor
+# and tolerance as fig-dnn, so bits-to-tol columns compare directly.
+register_experiment(Experiment(
+    name="fig-dnn-ship",
+    figure="extra",
+    title="BL-DNN basis shipment: compressed / free bases vs no-basis Top-K "
+          "(beyond paper)",
+    paper_ref="Table 1 basis_ship leg carried to the DNN workload "
+              "(no paper counterpart)",
+    problem=_DNN,
+    tol=0.1,                             # error rate < 0.1 ⇔ 90% accuracy
+    cells=(
+        MethodCell("TopK", "bldnn", 40,
+                   hess_comp=_DNN_TOPK,
+                   params=(("top_k_frac", 0.1), ("lr", 0.05))),
+        MethodCell("BLDNN_f32", "bldnn", 40, basis="per_layer_svd",
+                   hess_comp=_DNN_TOPK,
+                   params=(("top_k_frac", 0.1), ("lr", 0.05))),
+        MethodCell("BLDNN_bf16", "bldnn", 40, basis="per_layer_svd",
+                   hess_comp=_DNN_TOPK,
+                   params=(("top_k_frac", 0.1), ("lr", 0.05),
+                           ("ship_float_bits", 16))),
+        MethodCell("BLDNN_int8", "bldnn", 40, basis="per_layer_svd",
+                   hess_comp=_DNN_TOPK,
+                   params=(("top_k_frac", 0.1), ("lr", 0.05),
+                           ("ship_float_bits", 8))),
+        MethodCell("BLDNN_dct", "bldnn", 40, basis="dct_tree",
+                   hess_comp=_DNN_TOPK,
+                   params=(("top_k_frac", 0.1), ("lr", 0.05))),
+        MethodCell("BLDNN_hadamard", "bldnn", 40, basis="hadamard_tree",
+                   hess_comp=_DNN_TOPK,
+                   params=(("top_k_frac", 0.1), ("lr", 0.05))),
+    ),
+))
+
 # fig1-bag: FedNL-BAG (Bernoulli-lazy gradient aggregation, arXiv
 # 2206.03588) vs FedNL — the follow-up method's first reproducible
 # experiment path in this repo.

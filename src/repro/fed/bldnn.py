@@ -46,8 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import batched, rounds, specs
-from repro.core.basis import PerLayerSVDBasis, make_bases
+from repro.core import batched, comm, rounds, specs
+from repro.core.basis import PerLayerSVDBasis, is_pytree_basis, make_bases
 from repro.core.bl import History
 from repro.core.client_batch import TreeBatch, tree_batch
 from repro.core.compressors import Compressor, Identity, TopK, rtopk
@@ -70,6 +70,18 @@ class BLDNNConfig:
     fisher_alpha: float = 0.1
     eps: float = 1e-2
     use_basis: bool = True
+    #: which registered pytree basis (``per_layer_svd`` | ``dct_tree`` |
+    #: ``hadamard_tree`` — the structured kinds ship zero floats)
+    basis_kind: str = "per_layer_svd"
+    #: shipment wire for the basis factors (comm.BasisShipSpec): per-float
+    #: width (32/16 bf16/8 int8+scales) and top-|·| column sparsification
+    ship_float_bits: int = 32
+    ship_col_frac: float = 1.0
+    #: amortized re-shipment (specs.BasisRefreshPolicy): 0 ships once;
+    #: T ≥ 1 re-bills the shipment at t % T == 0 boundaries when the
+    #: drift trigger (energy-leakage ≥ threshold) fires
+    rounds_per_refresh: int = 0
+    drift_threshold: float = 0.0
 
 
 # --------------------------------------------------------------------------
@@ -218,15 +230,23 @@ def leaf_compressors(kind: str, frac: float,
     return tuple(comps)
 
 
-def build_spec(loss_fn, eval_fn, params: Params,
-               cfg: BLDNNConfig) -> specs.BLDNNSpec:
-    """`BLDNNSpec` for a parameter tree under one `BLDNNConfig`."""
+def build_spec(loss_fn, eval_fn, params: Params, cfg: BLDNNConfig, *,
+               basis_ship_bits: Optional[float] = None) -> specs.BLDNNSpec:
+    """`BLDNNSpec` for a parameter tree under one `BLDNNConfig`.
+
+    ``basis_ship_bits`` is the exact priced cost of one (possibly
+    quantized) basis shipment; None keeps the legacy dense-f32 derivation
+    from ``ship_floats()``."""
     comps = leaf_compressors(cfg.compressor, cfg.top_k_frac, params)
     return specs.BLDNNSpec(
         loss_fn=loss_fn, eval_fn=eval_fn,
         grad_comps=comps, fisher_comps=comps,
         alpha=cfg.alpha, fisher_alpha=cfg.fisher_alpha,
-        lr=cfg.lr, eps=cfg.eps, precondition=cfg.precondition)
+        lr=cfg.lr, eps=cfg.eps, precondition=cfg.precondition,
+        basis_ship_bits=basis_ship_bits,
+        refresh=specs.BasisRefreshPolicy(
+            rounds_per_refresh=cfg.rounds_per_refresh,
+            drift_threshold=cfg.drift_threshold))
 
 
 def run_bldnn(loss_fn, eval_fn, params0: Params, batch: TreeBatch,
@@ -268,10 +288,24 @@ def run_bldnn(loss_fn, eval_fn, params0: Params, batch: TreeBatch,
     if backend not in _BACKENDS:
         raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
     if cfg.use_basis and basis is None:
-        basis = make_bases("per_layer_svd", params0)
+        if not is_pytree_basis(cfg.basis_kind):
+            raise ValueError(
+                f"BL-DNN needs a pytree basis, {cfg.basis_kind!r} is a "
+                "d×d matrix basis (see basis.available_bases())")
+        basis = make_bases(cfg.basis_kind, params0)
     if not cfg.use_basis:
         basis = None
-    spec = build_spec(loss_fn, eval_fn, params0, cfg)
+    ship_bits = None
+    if basis is not None:
+        # the engine rotates with the basis AS SHIPPED: quantize the
+        # factors per the shipment wire and bill their exact priced cost
+        # (the default f32-dense spec is the identity at the legacy price;
+        # structured zero-ship bases pass through at 0 bits)
+        ship = comm.BasisShipSpec(float_bits=cfg.ship_float_bits,
+                                  col_frac=cfg.ship_col_frac)
+        basis, ship_bits = basis.shipped(ship)
+    spec = build_spec(loss_fn, eval_fn, params0, cfg,
+                      basis_ship_bits=ship_bits)
     keys = jax.random.split(jax.random.PRNGKey(seed), steps)
     evals, leds = rounds.run_rounds(
         spec, batch, basis, params0, 0.0, keys,

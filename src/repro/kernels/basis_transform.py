@@ -1,0 +1,67 @@
+"""Two-sided basis transform A · gᵢ · B over a client stack as a Pallas
+kernel (the BL-DNN rotation hot spot).
+
+The pytree bases (`repro.core.basis.PerLayerSVDBasis` and the structured
+DCT/Hadamard kinds) rotate every 2-D weight leaf of every client's gradient:
+``(n, d1, d2)`` stacks hit ``Uᵀ g V`` (forward) and ``U c Vᵀ`` (backward)
+each round.  XLA's batched matmul handles this fine on CPU; on TPU the two
+products want to stay fused in VMEM — one grid step per client, both
+``jnp.dot`` contractions on the MXU without spilling the (d1, d2)
+intermediate.
+
+Parity contract: the kernel computes ``(A @ gᵢ) @ B`` in the SAME
+association order as the engine's default ``A @ g @ B`` (python ``@`` is
+left-associative), and in interpret mode each grid step lowers to the same
+CPU gemms — the outputs are bitwise-identical to the XLA path (pinned by
+tests/test_basis_ship.py), so ``REPRO_BL_PALLAS=1`` swaps rotation backends
+without perturbing trajectories.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _transform_kernel(a_ref, g_ref, b_ref, o_ref):
+    a = a_ref[...]                       # (da, d1) left factor, whole
+    g = g_ref[0]                         # (d1, d2) one client's leaf
+    b = b_ref[...]                       # (d2, db) right factor, whole
+    t = jnp.dot(a, g, preferred_element_type=jnp.float32)
+    o_ref[0] = jnp.dot(t, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def basis_transform(A: jax.Array, g: jax.Array, B: jax.Array, *,
+                    interpret: bool = True) -> jax.Array:
+    """``A @ g[i] @ B`` for every client i: (da, d1) × (n, d1, d2) ×
+    (d2, db) → (n, da, db), one grid step per client with both factors
+    VMEM-resident.  f32 only — the bitwise-parity contract is pinned
+    against the f32 XLA batched matmul."""
+    if g.ndim != 3:
+        raise ValueError(f"expected a client-stacked (n, d1, d2) leaf, "
+                         f"got shape {g.shape}")
+    for name, x in (("A", A), ("g", g), ("B", B)):
+        if x.dtype != jnp.float32:
+            raise TypeError(f"basis_transform is f32-only, {name} is "
+                            f"{x.dtype}")
+    n, d1, d2 = g.shape
+    da, db = A.shape[0], B.shape[1]
+    if A.shape[1] != d1 or B.shape[0] != d2:
+        raise ValueError(
+            f"factor/leaf shape mismatch: A {A.shape} · g {g.shape} · "
+            f"B {B.shape}")
+    return pl.pallas_call(
+        _transform_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((da, d1), lambda i: (0, 0)),
+            pl.BlockSpec((1, d1, d2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((d2, db), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, da, db), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, da, db), jnp.float32),
+        interpret=interpret,
+    )(A, g, B)

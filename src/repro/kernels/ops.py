@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .basis_transform import basis_transform as _basis_transform
 from .flash_attention import flash_attention as _flash
 from .ssd_scan import ssd_scan as _ssd
 from .tiled_matmul import matmul as _matmul
@@ -45,6 +46,14 @@ def basis_project(V, A, **tiles):
         return jax.vmap(_one)(V, A)
     T = matmul(A, V, **tiles)          # (d, r)
     return matmul(V.T, T, **tiles)     # (r, r)
+
+
+def basis_transform(A, g, B):
+    """A · gᵢ · B over a client-stacked (n, d1, d2) leaf — the pytree-basis
+    rotation (Uᵀ g V / U c Vᵀ), one fused grid step per client.  Interpret
+    mode is bitwise the XLA batched-matmul default (see
+    kernels/basis_transform.py's parity contract)."""
+    return _basis_transform(A, g, B, interpret=INTERPRET)
 
 
 def glm_hessian(A, w, lam, **tiles):

@@ -2,6 +2,7 @@
 registered basis (including the new eigen/DCT rotations), registry lookup,
 batched-kind agreement, shipment billing, and the two new bases running
 end-to-end through BL1/BL2 with per-leg ledger output."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -12,15 +13,19 @@ from repro.core.basis import (
     DCTBasis,
     EigenBasis,
     PerLayerSVDBasis,
+    StructuredTreeBasis,
     available_bases,
     basis_transmission_bits,
     is_pytree_basis,
     make_bases,
+    quantize_ship_factor,
 )
+from repro.core.comm import BasisShipSpec
 from repro.core.compressors import Identity, TopK
 
 EXPECTED = {"standard", "symmetric", "psd", "data_outer", "eigen", "dct",
-            "per_layer_svd"}
+            "per_layer_svd", "dct_tree", "hadamard_tree"}
+PYTREE_KINDS = ("per_layer_svd", "dct_tree", "hadamard_tree")
 
 
 def _matrix_bases():
@@ -151,3 +156,153 @@ def test_new_bases_end_to_end_bl1_bl2(problem, name):
         ship = 30 * 30 * 64 if name == "eigen" else 0.0
         assert h.legs["basis_ship"] == [ship] * 12
         assert h.legs["hess_up"][-1] > 0
+
+
+# --------------------------------------------------------------------------
+# pytree bases: DCT/Hadamard structured rotations + compressed shipment
+# --------------------------------------------------------------------------
+def _dnn_params(seed=0, d_in=12, width=8, d_out=7):
+    rng = np.random.default_rng(seed)
+    return {"w1": jnp.asarray(rng.standard_normal((d_in, width)) * 0.3,
+                              jnp.float32),
+            "b1": jnp.asarray(rng.standard_normal((width,)), jnp.float32),
+            "w2": jnp.asarray(rng.standard_normal((width, d_out)) * 0.3,
+                              jnp.float32)}
+
+
+def _check_pytree_roundtrip(kind, seed):
+    params = _dnn_params(seed)
+    basis = make_bases(kind, params)
+    tree = jax.tree.map(
+        lambda x: jnp.asarray(np.random.default_rng(seed + 1)
+                              .standard_normal(x.shape), x.dtype), params)
+    back = basis.unrotate(basis.rotate(tree))
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5, err_msg=kind)
+
+
+@pytest.mark.parametrize("kind", PYTREE_KINDS)
+def test_pytree_basis_roundtrip(kind):
+    """rotate/unrotate is the identity (to fp) for every registered pytree
+    basis, including the structured DCT/Hadamard rotations."""
+    for seed in (0, 1, 2):
+        _check_pytree_roundtrip(kind, seed)
+
+
+@pytest.mark.requires_hypothesis
+@settings(max_examples=12, deadline=None)
+@given(kind=st.sampled_from(PYTREE_KINDS), seed=st.integers(0, 5000))
+def test_pytree_basis_roundtrip_prop(kind, seed):
+    _check_pytree_roundtrip(kind, seed)
+
+
+@pytest.mark.parametrize("kind", PYTREE_KINDS)
+def test_pytree_basis_batched_agreement(kind):
+    """Rotating an (n, ...) client stack equals stacking per-client
+    rotations — the batched engine's wire is the per-client wire."""
+    params = _dnn_params(3)
+    basis = make_bases(kind, params)
+    rng = np.random.default_rng(4)
+    n = 5
+    stack = jax.tree.map(
+        lambda x: jnp.asarray(rng.standard_normal((n,) + x.shape),
+                              jnp.float32), params)
+    rot = basis.rotate(stack)
+    for i in range(n):
+        per = basis.rotate(jax.tree.map(lambda x: x[i], stack))
+        for a, b in zip(jax.tree.leaves(rot), jax.tree.leaves(per)):
+            np.testing.assert_allclose(np.asarray(a)[i], np.asarray(b),
+                                       rtol=1e-5, atol=1e-6, err_msg=kind)
+
+
+def test_structured_tree_basis_ships_free():
+    params = _dnn_params(5)
+    for kind in ("dct_tree", "hadamard_tree"):
+        basis = make_bases(kind, params)
+        assert isinstance(basis, StructuredTreeBasis)
+        assert basis.ship_floats() == 0.0
+        shipped, bits = basis.shipped(BasisShipSpec(float_bits=8))
+        assert shipped is basis and bits == 0.0
+    svd = make_bases("per_layer_svd", params)
+    assert svd.ship_floats() == (12 * 12 + 8 * 8) + (8 * 8 + 7 * 7)
+
+
+@pytest.mark.parametrize("kind", PYTREE_KINDS)
+def test_pytree_ship_floats_matches_ledger(kind):
+    """End-to-end: the BL-DNN ledger's basis_ship leg equals exactly what
+    the basis object says it ships (0 for the structured rotations)."""
+    from repro.fed import bldnn
+
+    batch, p0 = bldnn.make_synthetic_classification(0, 4, 16, 24, 3, 8)
+    cfg = bldnn.BLDNNConfig(top_k_frac=0.25, lr=0.05, basis_kind=kind)
+    h = bldnn.run_bldnn(bldnn.make_loss_fn(3), bldnn.make_eval_fn(),
+                        p0, batch, 4, cfg, seed=0)
+    ship = make_bases(kind, p0).ship_floats() * 32
+    assert h.legs["basis_ship"] == [ship] * 4
+
+
+# --------------------------------------------------------------------------
+# compressed shipment: quantizer contract + bf16 eigen convergence envelope
+# --------------------------------------------------------------------------
+def _check_quantize_contract(seed, rows, cols):
+    rng = np.random.default_rng(seed)
+    M = jnp.asarray(rng.standard_normal((rows, cols)), jnp.float32)
+    # dense f32 shipment is the identity on f32 inputs
+    W32, bits32 = quantize_ship_factor(M, BasisShipSpec(float_bits=32))
+    np.testing.assert_array_equal(np.asarray(W32), np.asarray(M))
+    assert bits32 == rows * cols * 32
+    # bf16 is idempotent: re-quantizing a quantized factor is a no-op
+    W16, bits16 = quantize_ship_factor(M, BasisShipSpec(float_bits=16))
+    W16b, _ = quantize_ship_factor(W16, BasisShipSpec(float_bits=16))
+    np.testing.assert_array_equal(np.asarray(W16), np.asarray(W16b))
+    assert bits16 == rows * cols * 16
+    # int8 error is bounded by half a quantization step per column
+    W8, bits8 = quantize_ship_factor(M, BasisShipSpec(float_bits=8))
+    scale = np.max(np.abs(np.asarray(M)), axis=0, keepdims=True) / 127.0
+    assert np.all(np.abs(np.asarray(W8) - np.asarray(M))
+                  <= scale * 0.5 + 1e-7)
+    assert bits8 == rows * cols * 8 + cols * 32
+    # sparsified columns keep exactly ceil(col_frac·rows) entries each
+    ship = BasisShipSpec(float_bits=32, col_frac=0.5)
+    Ws, bitss = quantize_ship_factor(M, ship)
+    kept = max(1, min(rows, int(np.ceil(0.5 * rows))))
+    nnz = np.count_nonzero(np.asarray(Ws), axis=0)
+    assert np.all(nnz <= kept)
+    assert bitss == kept * cols * 32 + kept * cols * 32  # values + indices
+
+
+@pytest.mark.requires_hypothesis
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), rows=st.integers(2, 40),
+       cols=st.integers(1, 40))
+def test_quantize_ship_factor_prop(seed, rows, cols):
+    """f32 dense = identity; bf16 idempotent; int8 within half a step;
+    top-k column sparsity keeps what the counts bill."""
+    _check_quantize_contract(seed, rows, cols)
+
+
+def test_quantize_ship_factor_battery():
+    for seed, rows, cols in ((0, 2, 1), (1, 12, 7), (2, 40, 40), (3, 5, 30)):
+        _check_quantize_contract(seed, rows, cols)
+
+
+def test_eigen_bf16_ship_convergence_envelope(problem):
+    """fig1-regime acceptance: a bf16-shipped eigen basis (half the
+    basis_ship bits) still drives BL1 into the same convergence envelope —
+    quantizing Q costs accuracy in the basis, not the method."""
+    clients, x0, xs = problem
+    bases = make_bases("eigen", clients, x0=x0)
+    comp = [TopK(k=200) for _ in clients]
+    q16, bits16 = bases[0].shipped(BasisShipSpec(float_bits=16))
+    assert bits16 == 30 * 30 * 16 == basis_transmission_bits(bases[0], 16)
+    assert isinstance(q16, EigenBasis)
+    # quantized Q is near-orthogonal (bf16 has ~3 decimal digits)
+    QtQ = np.asarray(q16.Q.T @ q16.Q)
+    np.testing.assert_allclose(QtQ, np.eye(30), atol=0.05)
+    h64 = bl.bl1(clients, bases, comp, Identity(), x0, xs, 12,
+                 backend="fast")
+    h16 = bl.bl1(clients, [q16] * len(clients), comp, Identity(), x0, xs,
+                 12, backend="fast")
+    assert h64.gaps[-1] < 1e-8
+    assert h16.gaps[-1] < 1e-6, "bf16 basis must stay in the envelope"

@@ -1,0 +1,185 @@
+"""Basis-shipment subsystem regressions: amortized refresh accounting,
+chunk-boundary invariance, and the Pallas two-sided transform parity pin.
+
+Three contracts the ISSUE pins bitwise:
+
+  * `rounds_per_refresh == 1` (re-ship every round) leaves the TRAJECTORY
+    bitwise identical to the policy-off default on both reducers — the
+    refresh policy is pure accounting; only the `basis_ship` ledger leg
+    moves, and it moves to exactly the analytic ship-every-round stream.
+  * refresh placement is a pure function of the absolute round index, so
+    any `run_chunk` segmentation (including boundaries that split a
+    refresh round) reproduces the unsegmented streams bit-for-bit.
+  * the Pallas `basis_transform` kernel (REPRO_BL_PALLAS=1 routing in
+    `basis._two_sided`) is bitwise the XLA `A @ g @ B` it replaces.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import rounds  # noqa: E402
+from repro.core.basis import make_bases  # noqa: E402
+from repro.core.specs import BasisRefreshPolicy  # noqa: E402
+from repro.fed import bldnn  # noqa: E402
+
+STEPS = 6
+
+
+@pytest.fixture(scope="module")
+def dnn_problem():
+    batch, p0 = bldnn.make_synthetic_classification(0, 8, 16, 24, 3, 8)
+    return batch, p0, bldnn.make_loss_fn(3), bldnn.make_eval_fn()
+
+
+def _run(dnn_problem, cfg, backend="fast"):
+    batch, p0, loss_fn, eval_fn = dnn_problem
+    return bldnn.run_bldnn(loss_fn, eval_fn, p0, batch, STEPS, cfg,
+                           seed=0, backend=backend)
+
+
+def _ship_bits(p0):
+    return make_bases("per_layer_svd", p0).ship_floats() * 32.0
+
+
+# --------------------------------------------------------------------------
+# T=1 parity: re-ship every round is pure accounting
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["fast", "fast+sharded"])
+def test_refresh_every_round_is_pure_accounting(dnn_problem, backend):
+    """T=1 (θ=0 ⇒ the drift trigger always fires) must be BITWISE the
+    policy-off trajectory on both reducers; the basis_ship stream becomes
+    exactly ship·max(1, k) at round entry k (round 0's shipment is billed
+    by init, refreshes bill at entry of rounds 1, 2, ...)."""
+    _, p0, _, _ = dnn_problem
+    base = bldnn.BLDNNConfig(top_k_frac=0.25, lr=0.05)
+    amort = bldnn.BLDNNConfig(top_k_frac=0.25, lr=0.05,
+                              rounds_per_refresh=1, drift_threshold=0.0)
+    h0 = _run(dnn_problem, base, backend)
+    h1 = _run(dnn_problem, amort, backend)
+    np.testing.assert_array_equal(np.asarray(h0.gaps), np.asarray(h1.gaps))
+    np.testing.assert_array_equal(np.asarray(h0.metrics["loss"]),
+                                  np.asarray(h1.metrics["loss"]))
+    for leg in ("hess_up", "grad_up", "model_down"):
+        np.testing.assert_array_equal(np.asarray(h0.legs[leg]),
+                                      np.asarray(h1.legs[leg]), err_msg=leg)
+    ship = _ship_bits(p0)
+    np.testing.assert_array_equal(
+        np.asarray(h0.legs["basis_ship"]), np.full(STEPS, ship))
+    np.testing.assert_array_equal(
+        np.asarray(h1.legs["basis_ship"]),
+        np.asarray([ship * max(1, k) for k in range(STEPS)]))
+
+
+def test_high_drift_threshold_never_reships(dnn_problem):
+    """A drift threshold no leakage can reach (θ=2: leakage ≤ 1 by
+    construction) turns the policy into the policy-off billing exactly."""
+    _, p0, _, _ = dnn_problem
+    cfg = bldnn.BLDNNConfig(top_k_frac=0.25, lr=0.05,
+                            rounds_per_refresh=2, drift_threshold=2.0)
+    h = _run(dnn_problem, cfg)
+    h0 = _run(dnn_problem, bldnn.BLDNNConfig(top_k_frac=0.25, lr=0.05))
+    np.testing.assert_array_equal(np.asarray(h0.gaps), np.asarray(h.gaps))
+    np.testing.assert_array_equal(
+        np.asarray(h.legs["basis_ship"]), np.full(STEPS, _ship_bits(p0)))
+
+
+def test_refresh_policy_validation():
+    with pytest.raises(ValueError):
+        BasisRefreshPolicy(rounds_per_refresh=-1)
+    with pytest.raises(ValueError):
+        BasisRefreshPolicy(drift_threshold=-0.5)
+    assert not BasisRefreshPolicy().amortized
+    assert BasisRefreshPolicy(rounds_per_refresh=3).amortized
+
+
+def test_refresh_due_pure_in_absolute_round():
+    due = [bool(rounds.refresh_due(t, 3)) for t in range(7)]
+    assert due == [True, False, False, True, False, False, True]
+    assert not bool(rounds.refresh_due(5, 0))  # policy off
+    assert all(bool(rounds.refresh_due(t, 1)) for t in range(4))
+
+
+# --------------------------------------------------------------------------
+# chunk-boundary invariance: refresh placement survives any segmentation
+# --------------------------------------------------------------------------
+def _chunked_streams(dnn_problem, segs, *, T=3):
+    batch, p0, loss_fn, eval_fn = dnn_problem
+    cfg = bldnn.BLDNNConfig(top_k_frac=0.25, lr=0.05,
+                            rounds_per_refresh=T, drift_threshold=0.0)
+    basis = make_bases("per_layer_svd", p0)
+    spec = bldnn.build_spec(loss_fn, eval_fn, p0, cfg,
+                            basis_ship_bits=basis.ship_floats() * 32.0)
+    key = jax.random.PRNGKey(7)
+    carry = rounds.init_serve_carry(spec, batch, basis, p0)
+    outs, t = [], 0
+    for s in segs:
+        carry, ys = rounds.run_chunk(spec, batch, basis, p0, carry, t, s,
+                                     key)
+        outs.append(ys)
+        t += s
+    cat = jax.tree.map(lambda *a: jnp.concatenate(a, 0), *outs)
+    return carry, cat
+
+
+def test_chunk_boundary_refresh_invariance(dnn_problem):
+    """T=3 refreshes fire at absolute rounds 3, 6, ... — segmentations
+    whose boundaries fall ON and OFF refresh rounds must all reproduce the
+    unsegmented ledger streams and final carry bit-for-bit (mirrors the
+    cohort engine's segmentation pin in tests/test_cohort.py)."""
+    c_ref, ys_ref = _chunked_streams(dnn_problem, [6])
+    for segs in ([3, 3], [2, 2, 2], [1, 2, 3], [4, 2]):
+        c, ys = _chunked_streams(dnn_problem, segs)
+        for a, b in zip(jax.tree.leaves(ys_ref), jax.tree.leaves(ys)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"streams @ {segs}")
+        for a, b in zip(jax.tree.leaves(c_ref), jax.tree.leaves(c)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"carry @ {segs}")
+
+
+# --------------------------------------------------------------------------
+# Pallas two-sided transform: bitwise parity with the XLA path
+# --------------------------------------------------------------------------
+def test_pallas_basis_transform_bitwise_parity():
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((12, 12)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((5, 12, 8)), jnp.float32)
+    got = np.asarray(ops.basis_transform(A, g, B))
+    want = np.asarray(A @ g @ B)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_routing_in_rotate_is_bitwise(dnn_problem, monkeypatch):
+    """`basis._two_sided` routed through the kernel (REPRO_BL_PALLAS=1)
+    must be bitwise the default XLA rotate — kernel selection can never
+    move a trajectory."""
+    batch, p0, _, _ = dnn_problem
+    basis = make_bases("per_layer_svd", p0)
+    rng = np.random.default_rng(1)
+    stack = jax.tree.map(
+        lambda x: jnp.asarray(rng.standard_normal((4,) + x.shape),
+                              jnp.float32), p0)
+    monkeypatch.setenv("REPRO_BL_PALLAS", "0")
+    xla = basis.rotate(stack)
+    monkeypatch.setenv("REPRO_BL_PALLAS", "1")
+    pallas = basis.rotate(stack)
+    for a, b in zip(jax.tree.leaves(xla), jax.tree.leaves(pallas)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_basis_transform_rejects_bad_inputs():
+    from repro.kernels import basis_transform as bt
+
+    A = jnp.eye(4, dtype=jnp.float32)
+    g3 = jnp.zeros((2, 4, 4), jnp.float32)
+    with pytest.raises(TypeError):
+        bt.basis_transform(A.astype(jnp.float64), g3.astype(jnp.float64),
+                           A.astype(jnp.float64))
+    with pytest.raises(ValueError):
+        bt.basis_transform(A, jnp.zeros((4, 4), jnp.float32), A)

@@ -1,0 +1,329 @@
+"""Property-test harness for the wire-accounting contract (repro.core.comm).
+
+Pins the `WireFormat`/`Counts`/`price()` algebra the whole bit ledger rests
+on: pricing is additive over pytree leaves (what lets specs sum per-leaf
+counts onto one ledger leg), `with_float_bits` is idempotent and never
+touches index/entry widths, `BasisShipSpec` prices exactly what its
+factor counts say, `CommLedger.snapshot/restore` round-trips bitwise, and
+every method's per-leg ledger streams are mutually consistent (BL1 / BL2 /
+BL3 / FedNL-BAG / BL-DNN).
+
+Layout: each algebraic property lives in a plain ``_check_*`` helper.  The
+``@given`` wrappers (tagged ``requires_hypothesis``; they run for real in
+CI where requirements-dev.txt installs hypothesis) drive the helpers with
+randomized cases; deterministic companions sweep a fixed case battery so
+the SAME assertions execute locally where conftest.py stubs hypothesis
+out.  The method-stream contract is deterministic-only (real engine runs —
+randomizing them buys nothing but wall clock).
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import baselines, bl, comm, glm  # noqa: E402
+from repro.core.basis import (  # noqa: E402
+    StandardBasis,
+    make_bases,
+    orth_basis_from_data,
+)
+from repro.core.comm import (  # noqa: E402
+    CommLedger,
+    Counts,
+    WireFormat,
+    price,
+    with_float_bits,
+)
+from repro.core.compressors import Identity, RankR, TopK  # noqa: E402
+from repro.fed import bldnn  # noqa: E402
+
+# --------------------------------------------------------------------------
+# fixed wire-tree zoo: plain formats and composed (tuple) trees, with
+# nonzero index/entry widths so the "untouched" assertions have teeth
+# --------------------------------------------------------------------------
+WIRES = (
+    WireFormat(),
+    WireFormat(float_bits=32),
+    WireFormat(float_bits=64, index_bits=16, entry_bits=4.5),
+    WireFormat(float_bits=32, index_bits=0, entry_bits=9.0),
+    (WireFormat(float_bits=32), WireFormat(64, 16, 9.0)),
+    (WireFormat(), (WireFormat(16, 8, 1.0), WireFormat(64, 32, 2.0))),
+)
+
+
+def _flat_wires(wire):
+    if isinstance(wire, tuple):
+        return [w for leg in wire for w in _flat_wires(leg)]
+    return [wire]
+
+
+def _counts_like(wire, rng):
+    """Counts tree mirroring `wire`, with small-integer leaves — integers
+    are exact in f64, so additivity can be asserted with == not ≈."""
+    if isinstance(wire, tuple):
+        return tuple(_counts_like(w, rng) for w in wire)
+    return Counts(*(float(rng.integers(0, 512)) for _ in range(3)))
+
+
+def _add_counts(ca, cb):
+    if isinstance(ca, tuple) and not isinstance(ca, Counts):
+        return tuple(_add_counts(a, b) for a, b in zip(ca, cb))
+    return Counts(ca.floats + cb.floats, ca.indices + cb.indices,
+                  ca.entries + cb.entries)
+
+
+# --------------------------------------------------------------------------
+# property: pricing is additive over leaves
+# --------------------------------------------------------------------------
+def _check_price_additive(wire, seed):
+    rng = np.random.default_rng(seed)
+    ca, cb = _counts_like(wire, rng), _counts_like(wire, rng)
+    per_leaf = price(wire, ca) + price(wire, cb)
+    joint = price(wire, _add_counts(ca, cb))
+    np.testing.assert_array_equal(np.asarray(per_leaf), np.asarray(joint))
+
+
+@pytest.mark.requires_hypothesis
+@given(wire_i=st.integers(0, len(WIRES) - 1),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_price_additive_over_leaves_prop(wire_i, seed):
+    """price(w, a) + price(w, b) == price(w, a+b) — the algebra that lets
+    BLDNNSpec._bill sum per-leaf counts onto one ledger leg."""
+    _check_price_additive(WIRES[wire_i], seed)
+
+
+def test_price_additive_over_leaves_battery():
+    for wire in WIRES:
+        for seed in (0, 1, 2, 3):
+            _check_price_additive(wire, seed)
+
+
+def _scale_counts(c, k):
+    if isinstance(c, tuple) and not isinstance(c, Counts):
+        return tuple(_scale_counts(x, k) for x in c)
+    return Counts(c.floats * k, c.indices * k, c.entries * k)
+
+
+def _check_price_homogeneous(wire, seed, k):
+    rng = np.random.default_rng(seed)
+    c = _counts_like(wire, rng)
+    np.testing.assert_array_equal(
+        np.asarray(price(wire, _scale_counts(c, float(k)))),
+        np.asarray(k * price(wire, c)))
+
+
+@pytest.mark.requires_hypothesis
+@given(wire_i=st.integers(0, len(WIRES) - 1),
+       seed=st.integers(0, 2**31 - 1), k=st.integers(0, 1024))
+@settings(max_examples=60, deadline=None)
+def test_price_homogeneous_prop(wire_i, seed, k):
+    """price(w, k·c) == k·price(w, c) — shipping the same payload k times
+    (amortized-refresh billing) costs exactly k× one shipment."""
+    _check_price_homogeneous(WIRES[wire_i], seed, k)
+
+
+def test_price_homogeneous_battery():
+    for wire in WIRES:
+        for seed, k in ((0, 0), (1, 1), (2, 7), (3, 1024)):
+            _check_price_homogeneous(wire, seed, k)
+
+
+def test_price_structure_mismatch_raises():
+    wire = (WireFormat(), WireFormat(32))
+    with pytest.raises(ValueError):
+        price(wire, Counts(1.0))
+    with pytest.raises(ValueError):
+        price(wire, (Counts(1.0),))
+
+
+# --------------------------------------------------------------------------
+# property: with_float_bits idempotent, index/entry widths untouched
+# --------------------------------------------------------------------------
+def _check_with_float_bits(wire, bits):
+    once = with_float_bits(wire, bits)
+    twice = with_float_bits(once, bits)
+    assert once == twice, "with_float_bits must be idempotent"
+    for w0, w1 in zip(_flat_wires(wire), _flat_wires(once)):
+        assert w1.float_bits == bits
+        assert w1.index_bits == w0.index_bits, "index width must not move"
+        assert w1.entry_bits == w0.entry_bits, "entry width must not move"
+
+
+@pytest.mark.requires_hypothesis
+@given(wire_i=st.integers(0, len(WIRES) - 1),
+       bits=st.sampled_from([8, 16, 32, 64]))
+@settings(max_examples=40, deadline=None)
+def test_with_float_bits_prop(wire_i, bits):
+    """Remapping float width is idempotent and only ever touches floats."""
+    _check_with_float_bits(WIRES[wire_i], bits)
+
+
+def test_with_float_bits_battery():
+    for wire in WIRES:
+        for bits in (8, 16, 32, 64):
+            _check_with_float_bits(wire, bits)
+
+
+# --------------------------------------------------------------------------
+# property: BasisShipSpec prices exactly its declared factor counts
+# --------------------------------------------------------------------------
+def _check_ship_spec_price(float_bits, col_frac, rows, cols):
+    ship = comm.BasisShipSpec(float_bits=float_bits, col_frac=col_frac)
+    kept = max(1, min(rows, int(np.ceil(col_frac * rows)))) * cols
+    idx_bits = 0 if ship.dense else kept * comm.INDEX_BITS
+    if float_bits == 8:
+        expect = kept * 8 + cols * 32 + idx_bits   # entries + scales + idx
+    else:
+        expect = kept * float_bits + idx_bits
+    got = float(price(ship.wire, ship.factor_counts(rows, cols)))
+    assert got == float(expect), (ship, rows, cols, got, expect)
+
+
+@pytest.mark.requires_hypothesis
+@given(float_bits=st.sampled_from([8, 16, 32, 64]),
+       col_frac=st.sampled_from([0.1, 0.25, 0.5, 0.75, 1.0]),
+       rows=st.integers(1, 200), cols=st.integers(1, 200))
+@settings(max_examples=80, deadline=None)
+def test_ship_spec_price_prop(float_bits, col_frac, rows, cols):
+    """Shipment bits == the closed-form count: kept values at the wire's
+    width, int8 scale floats, kept-row indices when sparsified."""
+    _check_ship_spec_price(float_bits, col_frac, rows, cols)
+
+
+def test_ship_spec_price_battery():
+    for fb in (8, 16, 32, 64):
+        for cf in (0.1, 0.5, 1.0):
+            for rows, cols in ((1, 1), (7, 3), (96, 32), (200, 200)):
+                _check_ship_spec_price(fb, cf, rows, cols)
+
+
+def test_ship_spec_validation():
+    with pytest.raises(ValueError):
+        comm.BasisShipSpec(float_bits=12)
+    with pytest.raises(ValueError):
+        comm.BasisShipSpec(col_frac=0.0)
+    with pytest.raises(ValueError):
+        comm.BasisShipSpec(col_frac=1.5)
+
+
+# --------------------------------------------------------------------------
+# property: CommLedger.snapshot/restore round-trips bitwise
+# --------------------------------------------------------------------------
+def _check_ledger_roundtrip(vals):
+    led = CommLedger.create(**dict(zip(CommLedger.LEGS, vals)))
+    led2 = CommLedger.restore(led.snapshot())
+    for leg in CommLedger.LEGS:
+        a = np.asarray(getattr(led, leg))
+        b = np.asarray(getattr(led2, leg))
+        assert a.dtype == b.dtype == np.float64
+        np.testing.assert_array_equal(a, b)
+    # and the derived totals agree exactly
+    np.testing.assert_array_equal(np.asarray(led.uplink),
+                                  np.asarray(led2.uplink))
+
+
+@pytest.mark.requires_hypothesis
+@given(vals=st.lists(st.floats(min_value=0.0, max_value=1e18,
+                               allow_nan=False), min_size=4, max_size=4))
+@settings(max_examples=60, deadline=None)
+def test_ledger_snapshot_roundtrip_prop(vals):
+    """restore(snapshot(led)) is the identity, bitwise, on f64 counters."""
+    _check_ledger_roundtrip(vals)
+
+
+def test_ledger_snapshot_roundtrip_battery():
+    cases = [
+        (0.0, 0.0, 0.0, 0.0),
+        (1.0, 2.0, 3.0, 4.0),
+        (0.1, 1e-300, 1e300, 123456789.123456789),
+        (2.0 ** 53, 2.0 ** 53 + 2.0, np.pi, np.e),
+    ]
+    for vals in cases:
+        _check_ledger_roundtrip(vals)
+
+
+def test_ledger_restore_missing_leg_raises():
+    snap = CommLedger.create(1.0, 2.0, 3.0, 4.0).snapshot()
+    snap.pop("basis_ship")
+    with pytest.raises(ValueError):
+        CommLedger.restore(snap)
+
+
+# --------------------------------------------------------------------------
+# method-stream contract: every spec's per-leg streams are cumulative and
+# sum to the History totals (BL1 / BL2 / BL3 / FedNL-BAG / BL-DNN)
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def glm_problem():
+    clients = glm.make_synthetic(seed=0, n_clients=4, m=20, d=12, r=4,
+                                 lam=1e-3)
+    x0 = np.zeros(12)
+    xs = glm.newton_solve(clients, x0, iters=20)
+    return clients, x0, xs
+
+
+def _method_histories(glm_problem):
+    clients, x0, xs = glm_problem
+    n = len(clients)
+    data_bases = [orth_basis_from_data(c.A) for c in clients]
+    std_bases = [StandardBasis(12) for _ in clients]
+    runs = {
+        "bl1": bl.bl1(clients, data_bases,
+                      [TopK(k=b.r) for b in data_bases], Identity(),
+                      x0, xs, steps=6),
+        "bl2": bl.bl2(clients, std_bases, [TopK(k=24) for _ in clients],
+                      [Identity() for _ in clients], x0, xs, steps=6,
+                      tau=2, seed=1),
+        "bl3": bl.bl3(clients, [TopK(k=24) for _ in clients],
+                      [Identity() for _ in clients], x0, xs, steps=6,
+                      tau=2, seed=1),
+        "fednl_bag": baselines.fednl_bag(clients, std_bases,
+                                         [RankR(r=1) for _ in clients],
+                                         x0, xs, steps=6, q=0.5, seed=1),
+    }
+    del n
+    return runs
+
+
+def _check_leg_streams(name, h):
+    assert h.legs is not None, f"{name}: batched engine must emit legs"
+    T = len(h.up_bits)
+    for leg, stream in h.legs.items():
+        s = np.asarray(stream, np.float64)
+        assert s.shape == (T,), (name, leg)
+        assert np.all(np.diff(s) >= 0.0), (
+            f"{name}: leg {leg} must be a CUMULATIVE stream")
+    # per-leg streams sum to the History uplink total at EVERY round, and
+    # the final total is the sum of round increments on top of round 0
+    up = sum(np.asarray(h.legs[leg], np.float64)
+             for leg in ("hess_up", "grad_up", "basis_ship"))
+    np.testing.assert_array_equal(up, np.asarray(h.up_bits, np.float64),
+                                  err_msg=name)
+    for leg in CommLedger.LEGS:
+        s = np.asarray(h.legs[leg], np.float64)
+        np.testing.assert_array_equal(
+            s[0] + np.cumsum(np.diff(s)), s[1:], err_msg=(name, leg))
+
+
+def test_method_leg_streams_glm(glm_problem):
+    """BL1/BL2/BL3/FedNL-BAG: per-leg totals equal the sum of the
+    per-round stream, every leg cumulative, legs sum to up_bits."""
+    for name, h in _method_histories(glm_problem).items():
+        _check_leg_streams(name, h)
+
+
+def test_method_leg_streams_bldnn():
+    """BL-DNN: the same stream contract on the pytree engine, plus the
+    exact one-time shipment value on basis_ship."""
+    batch, p0 = bldnn.make_synthetic_classification(0, 4, 16, 24, 3, 8)
+    h = bldnn.run_bldnn(bldnn.make_loss_fn(3), bldnn.make_eval_fn(),
+                        p0, batch, 5,
+                        bldnn.BLDNNConfig(top_k_frac=0.25, lr=0.05), seed=0)
+    _check_leg_streams("bldnn", h)
+    ship = make_bases("per_layer_svd", p0).ship_floats() * 32
+    np.testing.assert_array_equal(np.asarray(h.legs["basis_ship"]),
+                                  np.full(5, ship))
