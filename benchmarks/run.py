@@ -19,7 +19,9 @@ field so BENCH trajectories can tell the two apart), for kernels GFLOP/s
 (interpret-mode: correctness-path timing only).
 
 ``--json`` additionally writes one ``BENCH_<name>.json`` perf record per
-bench group (per-bench µs + derived metric + extras), seeding the repo's
+bench group (per-bench µs + derived metric + extras, plus an
+``environment`` block — jax/jaxlib versions, backend, device population —
+so records from different machines are comparable), seeding the repo's
 benchmark trajectory; ``--json-dir`` picks the output directory.
 """
 from __future__ import annotations
@@ -580,6 +582,93 @@ def cohort_stream():
     return rows
 
 
+@bench("cold_start")
+def cold_start():
+    """Cold vs warm-restart time-to-first-round through the two-tier
+    program cache (`repro.core.progcache`): each backend serves a short
+    run twice in fresh subprocesses against the SAME checkpoint directory
+    — the cold child compiles and populates ``<ckpt>/progcache``, then its
+    checkpoints are deleted (cache kept) and the warm child replays the
+    identical run from deserialized executables.  Rows report both TTFRs,
+    the speedup, and an ACTUAL bitwise-equality verdict over the full
+    served histories (gaps + per-leg ledger bits + events), plus the warm
+    child's hit/miss counters — a warm run that silently recompiles
+    (fingerprint drift across processes) fails the bench rather than
+    reporting a ~1x speedup.  ``REPRO_BENCH_TINY=1`` shrinks the round
+    budget for CI smoke."""
+    import shutil
+    import subprocess
+    import sys
+    import tempfile
+
+    tiny = os.environ.get("REPRO_BENCH_TINY", "0") == "1"
+    max_rounds, chunk = (4, 2) if tiny else (12, 6)
+    grid = (
+        ("stacked", "fig4", "BL2_tau_half", "fast", None),
+        ("sharded", "fig4", "BL2_tau_half", "fast+sharded", 8),
+        ("cohort", "cohort-smoke", "BL2", None, None),
+    )
+    rows = []
+    for name, exp, cell, backend, ndev in grid:
+        work = tempfile.mkdtemp(prefix=f"bench_cold_start_{name}_")
+        ckpt = os.path.join(work, "ckpt")
+        env = dict(os.environ, PYTHONPATH="src")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        if ndev:
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                                + f" --xla_force_host_platform_device_count"
+                                  f"={ndev}")
+        try:
+            recs = {}
+            for phase in ("cold", "warm"):
+                if phase == "warm":
+                    # drop the checkpoints (else the warm child resumes a
+                    # finished run and serves 0 rounds) but keep the
+                    # progcache subdirectory they sit next to
+                    for f in os.listdir(ckpt):
+                        path = os.path.join(ckpt, f)
+                        if os.path.isfile(path):
+                            os.remove(path)
+                res = os.path.join(work, f"{phase}.json")
+                cmd = [sys.executable, "-m", "repro.launch.fed_serve",
+                       "--exp", exp, "--cell", cell, "--ckpt-dir", ckpt,
+                       "--chunk", str(chunk),
+                       "--max-rounds", str(max_rounds), "--result", res]
+                if backend:
+                    cmd += ["--backend", backend]
+                proc = subprocess.run(cmd, capture_output=True, text=True,
+                                      timeout=900, env=env)
+                if proc.returncode != 0:
+                    raise RuntimeError(
+                        f"cold_start {name}/{phase} failed:\n"
+                        + proc.stdout[-2000:] + proc.stderr[-2000:])
+                with open(res) as f:
+                    recs[phase] = json.load(f)
+            cold_s = recs["cold"]["meta"]["ttfr_s"]
+            warm_s = recs["warm"]["meta"]["ttfr_s"]
+            warm_stats = (recs["warm"]["meta"]["progcache"]
+                          or {}).get("stats", {})
+            if not warm_stats.get("hit"):
+                raise RuntimeError(
+                    f"cold_start {name}: warm run hit nothing "
+                    f"(stats {warm_stats}) — cache key unstable across "
+                    "processes?")
+            eq = recs["cold"]["history"] == recs["warm"]["history"]
+            speedup = cold_s / warm_s
+            rows.append((
+                f"cold_start_{name}", warm_s * 1e6,
+                f"ttfr_cold={cold_s:.3f}s;ttfr_warm={warm_s:.3f}s"
+                f";speedup={speedup:.1f}x;bitwise_equal_histories={eq}",
+                {"ttfr_cold_s": cold_s, "ttfr_warm_s": warm_s,
+                 "speedup": speedup, "bitwise_equal_histories": eq,
+                 "rounds": max_rounds, "chunk": chunk,
+                 "backend": backend or "cohort",
+                 "progcache_warm_stats": warm_stats}))
+        finally:
+            shutil.rmtree(work, ignore_errors=True)
+    return rows
+
+
 # ---------------- kernel micro-benches --------------------------------------
 @bench("kernel_matmul")
 def kmatmul():
@@ -631,9 +720,12 @@ def kbasis():
 
 
 def _write_json(json_dir, group, rows):
+    from repro.core.progcache import env_fingerprint
+
     record = {
         "bench": group,
         "unix_time": time.time(),
+        "environment": env_fingerprint(),
         "rows": [
             {"name": row[0], "us_per_call": row[1], "derived": row[2],
              **({"extra": row[3]} if len(row) > 3 else {})}

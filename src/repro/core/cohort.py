@@ -230,8 +230,10 @@ class CohortEngine:
             R = rounds.VmapReducer(n=sn)
             # the SAME cached program the stacked serve path inits with —
             # at one slab (== full mode at test scale) the carry is
-            # bitwise the stacked engine's carry
-            carry = rounds._init_jit(spec, R, batch, basisb, x0)
+            # bitwise the stacked engine's carry; `serve_init` also shares
+            # the stacked path's AOT cache entries when a program cache is
+            # active
+            carry = rounds.serve_init(spec, R, batch, basisb, x0)
             if self._is_client is None:
                 self._split_carry_contract(spec, names, carry, batch,
                                            basisb, x0)
@@ -472,6 +474,48 @@ class CohortEngine:
         self._cur = {"epoch": None, "idx": np.arange(self.n),
                      "batch": batch, "carry": self._full_carry(),
                      "frozen_np": {}}
+
+    # ------------------------------------------------------------------
+    # program warming (repro.core.progcache)
+    # ------------------------------------------------------------------
+    def warm_programs(self, chunk: int) -> bool:
+        """Resolve this engine's chunk program — load from the active
+        program cache or compile-and-persist — without running a round or
+        touching engine state.  All arguments are zero-valued templates at
+        dispatch shapes (the store's dtypes, the padded capacity, the
+        epoch-aligned first-segment length), so the serve loop can warm
+        BEFORE checkpoint restore.  Returns False when no cache is
+        active."""
+        if rounds.progcache.active() is None:
+            return False
+        chunk = int(chunk)
+        rows = self.n if self.full else self.cap
+        batch = client_batch.ClientBatch(
+            A=jnp.zeros((rows,) + self.store.A.shape[1:],
+                        self.store.A.dtype),
+            b=jnp.zeros((rows,) + self.store.b.shape[1:],
+                        self.store.b.dtype),
+            lam=self.store.lam)
+        carry = self.carry_template()
+        if self.full:
+            return rounds.warm_chunk_program(
+                self.spec, batch, self._basis_full, self.x0, carry, chunk,
+                self.root_key, sharded=self.sharded, exact=self.exact)
+        # frozen templates mirror `_load_epoch`'s jnp.asarray(float64)
+        # conversion so the warm signature matches the dispatch signature
+        frozen = {}
+        for agg, (leaf, op) in self._aggs.items():
+            shape = (self._totals[agg].shape if op == "mean"
+                     else self.store.state[leaf].shape[1:])
+            frozen[agg] = jnp.asarray(np.zeros(shape, np.float64))
+        # run_chunk cuts segments at epoch boundaries, so the first (and
+        # dominant) segment length is min(chunk, rounds_per_cohort)
+        return rounds.warm_cohort_chunk_program(
+            self.spec, batch, self._basis_cap, self.x0, carry,
+            min(chunk, self.rpc), self.root_key,
+            cidx=np.zeros(self.cap, np.int32),
+            creal=np.ones(self.cap, bool), frozen=frozen, n_global=self.n,
+            sharded=self.sharded, exact=self.exact)
 
     # ------------------------------------------------------------------
     # driver

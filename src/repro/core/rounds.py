@@ -65,6 +65,7 @@ into three pieces:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Callable, Tuple
@@ -75,7 +76,7 @@ import numpy as np
 
 from repro.sharding.rules import CLIENT_AXIS
 
-from . import client_batch, comm
+from . import client_batch, comm, progcache
 
 
 # ==========================================================================
@@ -952,6 +953,32 @@ def run_rounds(spec, batch, basisb, x0, f_star, keys, *,
 # ==========================================================================
 # Chunked service-loop driver (repro.launch.fed_serve)
 # ==========================================================================
+# Retrace audit — every trace of a dispatch-path program body bumps a
+# counter.  The invariant the audit pins (tests/test_retrace_audit.py):
+# ONE trace per (spec, shapes) per process and ZERO retraces across
+# chunk/epoch boundaries, on every backend — so the dispatch-cost
+# regressions PR 7 closed (a retrace costs ~1000× the compiled per-round
+# dispatch) can never silently return.  Shape-only evaluations
+# (`carry_client_flags` runs `spec.init` under `jax.eval_shape` twice) are
+# tagged with a "/shape_eval" suffix so real retraces stand out.
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+_IN_SHAPE_EVAL = False
+
+
+def _note_trace(kind: str) -> None:
+    _TRACE_COUNTS[kind + "/shape_eval" if _IN_SHAPE_EVAL else kind] += 1
+
+
+def trace_counts() -> dict:
+    """Snapshot of {program kind: trace count} since the last reset.
+    Kinds: "init", "chunk", "cohort_chunk" (+ "/shape_eval" variants)."""
+    return dict(_TRACE_COUNTS)
+
+
+def reset_trace_audit() -> None:
+    _TRACE_COUNTS.clear()
+
+
 def _with_client_dim(tree, n_new: int):
     """Abstract (shape-only) copy of a client-stacked pytree with the
     leading client axis resized — every leaf of `ClientBatch` /
@@ -963,6 +990,7 @@ def _with_client_dim(tree, n_new: int):
 
 
 def _init_body(spec, R: Reducer, batch, basisb, x0):
+    _note_trace("init")
     env = Env(batch=batch, basisb=basisb, x0=x0,
               extra=spec.prepare(R, batch, basisb, x0))
     return spec.init(R, env)
@@ -985,12 +1013,17 @@ def carry_client_flags(spec, batch, basisb, x0):
     def init_at(b, bb, nn):
         return _init_body(spec, VmapReducer(n=nn), b, bb, x0)
 
-    s1 = jax.eval_shape(functools.partial(init_at, nn=n), batch, basisb)
-    b2 = _with_client_dim(batch, 2 * n)
-    bb2 = (basisb if basisb is None
-           or getattr(spec, "basis_replicated", False)
-           else _with_client_dim(basisb, 2 * n))
-    s2 = jax.eval_shape(functools.partial(init_at, nn=2 * n), b2, bb2)
+    global _IN_SHAPE_EVAL
+    _IN_SHAPE_EVAL = True
+    try:
+        s1 = jax.eval_shape(functools.partial(init_at, nn=n), batch, basisb)
+        b2 = _with_client_dim(batch, 2 * n)
+        bb2 = (basisb if basisb is None
+               or getattr(spec, "basis_replicated", False)
+               else _with_client_dim(basisb, 2 * n))
+        s2 = jax.eval_shape(functools.partial(init_at, nn=2 * n), b2, bb2)
+    finally:
+        _IN_SHAPE_EVAL = False
     return jax.tree.map(lambda a, b: a.shape != b.shape, s1, s2)
 
 
@@ -1028,6 +1061,7 @@ def _carry_flags_key_cached(spec, batch, basisb, x0):
 
 
 def _chunk_body(spec, R: Reducer, batch, basisb, x0, carry, ts, keys, avail):
+    _note_trace("chunk")
     env = Env(batch=batch, basisb=basisb, x0=x0,
               extra=spec.prepare(R, batch, basisb, x0))
 
@@ -1047,13 +1081,110 @@ _chunk_jit = functools.partial(
     jax.jit, static_argnames=("spec", "R"),
     donate_argnames=("carry",))(_chunk_body)
 
+# AOT twin WITHOUT donation, used for every program that goes through the
+# progcache (`_AotProgram`).  Executables that came back through
+# serialize/deserialize mishandle donated carry buffers once calls are
+# CHAINED through engine state (outputs aliased into donated memory feed
+# the next call): outputs go bitwise-wrong with bitwise-identical inputs,
+# while the same executable on fresh copies is correct.  Donation never
+# affects values, only buffer reuse, so compiling the cache path from a
+# donation-free lowering pins hit == miss == uncached bitwise — at the cost
+# of one in-flight carry copy per chunk call.  REPRO_PROGCACHE=0 restores
+# the donating fast path above.
+_chunk_jit_aot = functools.partial(
+    jax.jit, static_argnames=("spec", "R"))(_chunk_body)
+
+
+# --------------------------------------------------------------------------
+# AOT program dispatch (repro.core.progcache tier 1)
+# --------------------------------------------------------------------------
+# resolved executables, keyed (kind, spec, backend scope, abstract arg sig)
+# — module-level so the memo survives `_serve_backend`'s per-dispatch
+# wrapper construction (a closure-held memo would be rebuilt every call)
+_AOT_PROGS: dict = {}
+
+
+def clear_aot_memo() -> None:
+    """Drop the in-process executable memo (tests use this to force the
+    next dispatch back through the on-disk cache)."""
+    _AOT_PROGS.clear()
+
+
+class _AotProgram:
+    """One serve program behind cache-aware dispatch.
+
+    With no active `progcache` cache, ``__call__`` IS the plain jitted
+    ``fast`` path — the pre-subsystem dispatch, byte for byte.  With a
+    cache active, the first call per abstract argument signature resolves
+    an AOT executable — deserialized from disk on a hit, compiled from the
+    *identical* lowering on any miss and persisted — and every later call
+    reuses it.  AOT lowerings are DONATION-FREE (see `_chunk_jit_aot`):
+    deserialized executables corrupt chained donated-carry calls, and
+    donation is invisible to values, so the cache path trades the in-place
+    carry update for a bitwise hit == miss == uncached guarantee.  Callers
+    must still treat the carry argument as consumed — which path runs is a
+    cache-availability detail.
+
+    ``resolve`` is the execution-free half (lower/load only): the serve
+    loop warms programs through it *before* checkpoint restore, which is
+    what moves compile latency out of time-to-first-round."""
+
+    def __init__(self, kind: str, spec, scope: tuple, fast: Callable,
+                 lower: Callable):
+        self.kind = kind
+        self._spec = spec
+        self._scope = scope
+        self._fast = fast
+        self._lower = lower
+
+    def resolve(self, *args):
+        """The compiled executable for these (concrete) args, or None when
+        no cache is active.  Never executes the program."""
+        cache = progcache.active()
+        if cache is None:
+            return None
+        sig = _abstract_sig(*args)
+        memo_key = (self.kind, self._spec, self._scope, sig)
+        prog = _AOT_PROGS.get(memo_key)
+        if prog is None:
+            prog, _ = cache.load_or_compile(
+                name=self.kind,
+                key_parts=(self.kind, progcache.fingerprint(self._spec),
+                           progcache.fingerprint(self._scope), repr(sig)),
+                lower=lambda: self._lower(*args),
+                aux={"scope": [str(s) for s in self._scope]})
+            _AOT_PROGS[memo_key] = prog
+        return prog
+
+    def __call__(self, *args):
+        prog = self.resolve(*args)
+        if prog is None:
+            return self._fast(*args)
+        return prog(*args)
+
+
+def _vmap_init_program(spec, R: Reducer) -> _AotProgram:
+    return _AotProgram(
+        "serve_init", spec, ("vmap", R.n),
+        functools.partial(_init_jit, spec, R),
+        functools.partial(_init_jit.lower, spec, R))
+
+
+def serve_init(spec, R: Reducer, batch, basisb, x0):
+    """The single-device init program under AOT dispatch — shared by the
+    stacked serve backend and the cohort engine's fleet initialisation
+    (`repro.core.cohort._init_fleet`), so both populate the same cache
+    entries."""
+    return _vmap_init_program(spec, R)(batch, basisb, x0)
+
 
 @functools.lru_cache(maxsize=None)
 def _sharded_chunk_fns(spec, R: "ShardMapReducer", mesh, flags_key):
     """Jitted shard_map (init, chunk) programs whose carry crosses the
     shard_map boundary: client-stacked carry leaves shard over the mesh,
     everything else is replicated (per `carry_client_flags`).  The chunk
-    program donates its carry argument like the vmap path."""
+    program donates its carry argument like the vmap path; its AOT twin
+    (third element) is donation-free like `_chunk_jit_aot`."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -1065,29 +1196,37 @@ def _sharded_chunk_fns(spec, R: "ShardMapReducer", mesh, flags_key):
     in_specs, out_specs = client_chunk_specs(
         carry_specs,
         basis_replicated=getattr(spec, "basis_replicated", False))
+    body = shard_map(
+        functools.partial(_chunk_body, spec, R), mesh=mesh,
+        in_specs=in_specs, out_specs=out_specs, check_rep=False)
     init = jax.jit(shard_map(
         functools.partial(_init_body, spec, R), mesh=mesh,
         in_specs=in_specs[:3], out_specs=carry_specs, check_rep=False))
-    chunk = jax.jit(shard_map(
-        functools.partial(_chunk_body, spec, R), mesh=mesh,
-        in_specs=in_specs, out_specs=out_specs, check_rep=False),
-        donate_argnums=(3,))  # (batch, basisb, x0, carry, ts, keys, avail)
-    return init, chunk
+    # (batch, basisb, x0, carry, ts, keys, avail) — carry is argument 3
+    chunk = jax.jit(body, donate_argnums=(3,))
+    chunk_aot = jax.jit(body)
+    return init, chunk, chunk_aot
 
 
 def _serve_backend(spec, batch, basisb, x0, sharded: bool, exact: bool):
     if not sharded:
         R = VmapReducer(n=batch.n)
-        return (functools.partial(_init_jit, spec, R),
-                functools.partial(_chunk_jit, spec, R))
+        return (_vmap_init_program(spec, R),
+                _AotProgram("serve_chunk", spec, ("vmap", R.n),
+                            functools.partial(_chunk_jit, spec, R),
+                            functools.partial(_chunk_jit_aot.lower, spec,
+                                              R)))
     from repro.launch.mesh import make_client_mesh
+    from repro.sharding.rules import mesh_fingerprint
 
     mesh, ndev = make_client_mesh(batch.n)
     R = ShardMapReducer(n=batch.n, ndev=ndev, exact=exact,
                         plan=getattr(spec, "reduce_plan", ReducePlan()))
     fk = _carry_flags_key_cached(spec, batch, basisb, x0)
-    init, chunk = _sharded_chunk_fns(spec, R, mesh, fk)
-    return init, chunk
+    init, chunk, chunk_aot = _sharded_chunk_fns(spec, R, mesh, fk)
+    scope = ("shmap", ndev, exact, mesh_fingerprint(mesh))
+    return (_AotProgram("serve_init", spec, scope, init, init.lower),
+            _AotProgram("serve_chunk", spec, scope, chunk, chunk_aot.lower))
 
 
 def init_serve_carry(spec, batch, basisb, x0, *, sharded: bool = False,
@@ -1117,9 +1256,12 @@ def run_chunk(spec, batch, basisb, x0, carry, t0: int, steps: int, root_key,
     reach specs as `RoundCtx.avail`.  An all-ones schedule (the default) is
     bitwise-equivalent to no fault layer at all.
 
-    The input ``carry``'s buffers are DONATED to the chunk program: continue
-    (or checkpoint) from the returned carry, never the argument — reusing
-    the argument raises jax's deleted-buffer error.
+    The input ``carry`` is CONSUMED: continue (or checkpoint) from the
+    returned carry, never the argument.  On the fast (no-progcache) path
+    its buffers are donated outright — reuse raises jax's deleted-buffer
+    error; under an active program cache the AOT executable is
+    donation-free (see `_chunk_jit_aot`), but the consumed contract is the
+    same on both paths.
 
     Chunk programs compile once per (spec, backend, chunk length); the
     service loop reuses one length for every full chunk, so only a trailing
@@ -1141,6 +1283,27 @@ def run_chunk(spec, batch, basisb, x0, carry, t0: int, steps: int, root_key,
     return chunk(batch, basisb, x0, carry, ts, keys, avail)
 
 
+def warm_chunk_program(spec, batch, basisb, x0, carry, steps: int, root_key,
+                       *, sharded: bool = False, exact: bool = True) -> bool:
+    """Resolve the serve (init, chunk) programs for this cell — load from
+    the active program cache or compile-and-persist — WITHOUT executing a
+    round.  ``carry`` is a template (e.g. `init_serve_carry`'s output) used
+    only for its shapes; nothing is donated or mutated.  The serve loop
+    calls this before checkpoint restore so a warm restart's
+    time-to-first-round contains no compilation.  Returns False (no-op)
+    when no cache is active."""
+    if progcache.active() is None:
+        return False
+    steps = int(steps)
+    init, chunk = _serve_backend(spec, batch, basisb, x0, sharded, exact)
+    init.resolve(batch, basisb, x0)
+    ts = jnp.arange(0, steps)
+    keys = jax.vmap(lambda t: jax.random.fold_in(root_key, t))(ts)
+    avail = jnp.ones((steps, batch.n), bool)
+    chunk.resolve(batch, basisb, x0, carry, ts, keys, avail)
+    return True
+
+
 # ==========================================================================
 # Cohort-streaming chunk programs (repro.core.cohort)
 # ==========================================================================
@@ -1151,6 +1314,7 @@ def _cohort_chunk_body(spec, R, n_global, batch, basisb, x0, carry, ts, keys,
     cohort-capacity reducer `R`.  ``cidx``/``creal``/``frozen`` are
     constant for the chunk (the cohort engine cuts chunks at epoch
     boundaries), so they ride in as plain traced inputs, not scan xs."""
+    _note_trace("cohort_chunk")
     CR = CohortReducer(inner=R, idx=cidx, real=creal, frozen=frozen,
                        n_global=n_global)
     env = Env(batch=batch, basisb=basisb, x0=x0,
@@ -1166,6 +1330,11 @@ def _cohort_chunk_body(spec, R, n_global, batch, basisb, x0, carry, ts, keys,
 _cohort_chunk_jit = functools.partial(
     jax.jit, static_argnames=("spec", "R", "n_global"),
     donate_argnames=("carry",))(_cohort_chunk_body)
+
+# donation-free AOT twin — see `_chunk_jit_aot` for why cached programs
+# must not donate
+_cohort_chunk_jit_aot = functools.partial(
+    jax.jit, static_argnames=("spec", "R", "n_global"))(_cohort_chunk_body)
 
 
 @functools.lru_cache(maxsize=None)
@@ -1185,12 +1354,34 @@ def _sharded_cohort_chunk_fns(spec, R: "ShardMapReducer", mesh, flags_key,
     in_specs, out_specs = cohort_chunk_specs(
         carry_specs,
         basis_replicated=getattr(spec, "basis_replicated", False))
-    chunk = jax.jit(shard_map(
+    body = shard_map(
         functools.partial(_cohort_chunk_body, spec, R, n_global), mesh=mesh,
-        in_specs=in_specs, out_specs=out_specs, check_rep=False),
-        donate_argnums=(3,))
+        in_specs=in_specs, out_specs=out_specs, check_rep=False)
     # (batch, basisb, x0, carry, ts, keys, cidx, creal, frozen) — carry is 3
-    return chunk
+    chunk = jax.jit(body, donate_argnums=(3,))
+    chunk_aot = jax.jit(body)  # donation-free twin for the progcache path
+    return chunk, chunk_aot
+
+
+def _cohort_backend(spec, batch, basisb, x0, n_global: int, sharded: bool,
+                    exact: bool) -> _AotProgram:
+    if not sharded:
+        R = VmapReducer(n=batch.n)
+        return _AotProgram(
+            "cohort_chunk", spec, ("vmap", n_global),
+            functools.partial(_cohort_chunk_jit, spec, R, n_global),
+            functools.partial(_cohort_chunk_jit_aot.lower, spec, R,
+                              n_global))
+    from repro.launch.mesh import make_client_mesh
+    from repro.sharding.rules import mesh_fingerprint
+
+    mesh, ndev = make_client_mesh(batch.n)
+    R = ShardMapReducer(n=batch.n, ndev=ndev, exact=exact,
+                        plan=getattr(spec, "reduce_plan", ReducePlan()))
+    fk = _carry_flags_key_cached(spec, batch, basisb, x0)
+    chunk, chunk_aot = _sharded_cohort_chunk_fns(spec, R, mesh, fk, n_global)
+    scope = ("shmap", ndev, exact, mesh_fingerprint(mesh), n_global)
+    return _AotProgram("cohort_chunk", spec, scope, chunk, chunk_aot.lower)
 
 
 def run_cohort_chunk(spec, batch, basisb, x0, carry, t0: int, steps: int,
@@ -1204,20 +1395,33 @@ def run_cohort_chunk(spec, batch, basisb, x0, carry, t0: int, steps: int,
     (c,) bool, ``frozen`` the dict of fleet aggregate statistics for the
     epoch's ABSENT clients.  Per-round keys are ``fold_in(root_key, t)``
     exactly like `run_chunk`, so cohort trajectories share the serve
-    driver's chunk-boundary invariance.  The carry is DONATED."""
+    driver's chunk-boundary invariance.  The carry is CONSUMED (donated on
+    the fast path, left intact but still not reusable by contract under an
+    active program cache — see `_chunk_jit_aot`)."""
     ts = jnp.arange(t0, t0 + steps)
     keys = jax.vmap(lambda t: jax.random.fold_in(root_key, t))(ts)
     cidx = jnp.asarray(cidx, jnp.int32)
     creal = jnp.asarray(creal, bool)
-    if not sharded:
-        R = VmapReducer(n=batch.n)
-        return _cohort_chunk_jit(spec, R, int(n_global), batch, basisb, x0,
-                                 carry, ts, keys, cidx, creal, frozen)
-    from repro.launch.mesh import make_client_mesh
-
-    mesh, ndev = make_client_mesh(batch.n)
-    R = ShardMapReducer(n=batch.n, ndev=ndev, exact=exact,
-                        plan=getattr(spec, "reduce_plan", ReducePlan()))
-    fk = _carry_flags_key_cached(spec, batch, basisb, x0)
-    chunk = _sharded_cohort_chunk_fns(spec, R, mesh, fk, int(n_global))
+    chunk = _cohort_backend(spec, batch, basisb, x0, int(n_global), sharded,
+                            exact)
     return chunk(batch, basisb, x0, carry, ts, keys, cidx, creal, frozen)
+
+
+def warm_cohort_chunk_program(spec, batch, basisb, x0, carry, steps: int,
+                              root_key, *, cidx, creal, frozen,
+                              n_global: int, sharded: bool = False,
+                              exact: bool = True) -> bool:
+    """`warm_chunk_program` for the cohort chunk program: resolve (load or
+    compile-and-persist) without executing.  All array arguments are shape
+    templates; `repro.core.cohort.CohortEngine.warm_programs` builds them
+    from the store's dtypes before any epoch is gathered."""
+    if progcache.active() is None:
+        return False
+    ts = jnp.arange(0, int(steps))
+    keys = jax.vmap(lambda t: jax.random.fold_in(root_key, t))(ts)
+    prog = _cohort_backend(spec, batch, basisb, x0, int(n_global), sharded,
+                           exact)
+    prog.resolve(batch, basisb, x0, carry, ts, keys,
+                 jnp.asarray(cidx, jnp.int32), jnp.asarray(creal, bool),
+                 frozen)
+    return True

@@ -159,6 +159,11 @@ CKPT_SCHEMA = f"repro.exp/ckpt@{CKPT_SCHEMA_VERSION}"
 SERVE_SCHEMA_VERSION = 1
 SERVE_SCHEMA = f"repro.exp/serve@{SERVE_SCHEMA_VERSION}"
 
+# the AOT program-cache entry schema lives with its validation logic in
+# repro.core.progcache; re-exported here so every artifact schema tag the
+# repo writes is enumerable from one module
+from repro.core.progcache import PROGCACHE_SCHEMA  # noqa: E402,F401
+
 
 def _ckpt_base(ckpt_dir: str, t: int) -> str:
     return os.path.join(ckpt_dir, f"ckpt-{t:08d}")

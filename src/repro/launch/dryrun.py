@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core import progcache
 from repro.launch.mesh import make_production_mesh
 from repro.launch import shapes as SH
 from repro.models import model as M
@@ -104,6 +105,23 @@ def collective_bytes(hlo_text: str) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 # Lowering one (arch, shape, mesh)
 # ---------------------------------------------------------------------------
+def _compile_via_progcache(lowered, *key_bits):
+    """``lowered.compile()`` routed through the active program cache
+    (`repro.core.progcache`) when one is on: repeat dry-runs of the same
+    (arch, shape, mesh, config) deserialize instead of recompiling — the
+    analyses below (`memory_analysis`, `cost_analysis`, `as_text`) all work
+    on deserialized executables.  With no cache active this IS
+    ``lowered.compile()``.  Returns ``(compiled, status)``; status is None
+    when uncached, else the cache outcome ("hit"/"miss")."""
+    cache = progcache.active()
+    if cache is None:
+        return lowered.compile(), None
+    return cache.load_or_compile(
+        name="dryrun",
+        key_parts=("dryrun",) + tuple(str(b) for b in key_bits),
+        lower=lambda: lowered)
+
+
 def lower_case(
     arch: str,
     shape_name: str,
@@ -161,8 +179,16 @@ def lower_case(
             out["status"] = "lowered"
             return out
         t1 = time.time()
-        compiled = lowered.compile()
+        from repro.models import layers as _layers
+        # the cfg fingerprint keys depth-truncated variants
+        # (`lower_case_depth` swaps the registry) apart from the full model
+        compiled, pc_status = _compile_via_progcache(
+            lowered, arch, shape_name, out["mesh"], shape.kind,
+            jnp.dtype(adam_dtype).name, progcache.fingerprint(cfg),
+            getattr(_layers, "UNROLL_FOR_COSTS", False))
         out["compile_s"] = round(time.time() - t1, 1)
+        if pc_status is not None:
+            out["progcache"] = pc_status
 
         mem = compiled.memory_analysis()
         out["memory"] = {
@@ -254,7 +280,12 @@ def main(argv=None):
     ap.add_argument("--extrapolate", action="store_true",
                     help="also compute loop-corrected costs via G=1/G=2 compiles")
     ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--progcache-dir", type=str, default=None,
+                    help="persist compiled dry-run programs here; repeat "
+                         "runs deserialize instead of recompiling")
     args = ap.parse_args(argv)
+    if args.progcache_dir:
+        progcache.activate(args.progcache_dir)
 
     cases = []
     archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]

@@ -22,6 +22,16 @@ chunks the orchestrator
      (schema-versioned, atomically written, digest-keyed to this serve
      config).
 
+Start-up is **compile-free on a warm restart**: the serve programs resolve
+through the AOT program cache (`repro.core.progcache`, rooted at
+``<ckpt_dir>/progcache`` by default, ``--progcache-dir``/``--no-progcache``
+to move/disable) *before* checkpoint restore, so a restarted server
+deserializes its executables in milliseconds instead of recompiling —
+time-to-first-round and cache outcomes land in the record's ``meta``
+(``ttfr_s``, ``progcache``).  ``--metrics-out`` additionally streams an
+append-only, crash-safe JSONL line per round (round, gap, degradation
+events, per-leg ledger bits — `MetricsSink`).
+
 Because per-round PRNG keys are ``fold_in(root_key, t)`` and every fault
 draw is a pure function of ``(fault seed, t)``, the trajectory is invariant
 to chunk boundaries: kill -9 the process at any point, rerun the same
@@ -43,6 +53,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import os
 import time
 from typing import Optional
@@ -51,7 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import batched, comm, faults, rounds
+from repro.core import batched, comm, faults, progcache, rounds
 from repro.exp import artifacts
 from repro.exp.engine import (
     StreamProblem,
@@ -180,11 +191,96 @@ def _restore_carry(ck: dict, template) -> object:
         treedef, [jnp.asarray(g) for g in got])
 
 
+class MetricsSink:
+    """Append-only, crash-safe JSONL metrics stream for a serve run.
+
+    One line per round: ``{"round", "gap", "events", "legs": {leg: bits}}``
+    (cumulative per-leg `comm.CommLedger` bits, like the history record).
+    Crash safety mirrors the checkpoint walk: on open, the existing file is
+    scanned up to its last PARSEABLE line and emission resumes strictly
+    after that round — a torn tail line from a killed process is simply
+    overwritten territory (a lone "\\n" terminates it first), and re-served
+    chunks after a resume never duplicate rounds.  Each chunk's lines are
+    flushed and fsynced together, so the stream trails the trajectory by at
+    most one chunk."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.last_round = -1
+        self._needs_newline = False
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                raw = f.read()
+            for line in raw.splitlines():
+                try:
+                    rec = json.loads(line)
+                    self.last_round = max(self.last_round, int(rec["round"]))
+                except (ValueError, KeyError, TypeError):
+                    break               # torn tail — ignore it and beyond
+            self._needs_newline = bool(raw) and not raw.endswith(b"\n")
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+
+    def emit_chunk(self, ts, gaps, events, legs: dict) -> None:
+        """Append rounds ``ts`` (parallel arrays); rounds at or below the
+        resume point are skipped."""
+        lines = []
+        for i, t in enumerate(ts):
+            t = int(t)
+            if t <= self.last_round:
+                continue
+            lines.append(json.dumps({
+                "round": t,
+                "gap": float(gaps[i]),
+                "events": int(events[i]),
+                "legs": {leg: float(legs[leg][i]) for leg in legs},
+            }))
+            self.last_round = t
+        if not lines:
+            return
+        with open(self.path, "a") as f:
+            if self._needs_newline:
+                f.write("\n")
+                self._needs_newline = False
+            f.write("\n".join(lines) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def as_stream_hook(self, every: int, batch, f_star) -> rounds.StreamHook:
+        """Adapter for the batch driver: a `rounds.StreamHook` whose
+        emissions land in this sink (gap computed from the emitted
+        iterate; chunk-boundary rounds only)."""
+        def cb(t, eval_x, ledger):
+            gap = rounds.default_gap_stream(
+                batch, jnp.asarray(eval_x)[None, :], f_star)[0]
+            self.emit_chunk([t], [float(gap)], [0],
+                            {leg: [float(getattr(ledger, leg))]
+                             for leg in comm.CommLedger.LEGS})
+        return rounds.StreamHook(every=every, callback=cb)
+
+
+def _activate_progcache(ckpt_dir: str, progcache_dir: Optional[str],
+                        no_progcache: bool, log):
+    """Serve-loop cache policy: ON by default, rooted next to the
+    checkpoints (``<ckpt_dir>/progcache``) so a warm restart finds both."""
+    if no_progcache:
+        progcache.deactivate()
+        return None
+    cache = progcache.activate(progcache_dir
+                               or os.path.join(ckpt_dir, "progcache"))
+    log(f"[serve] program cache at {cache.root}")
+    return cache
+
+
 def _serve_cohort(exp, cell, prob: StreamProblem, *, seed: int, chunk: int,
                   max_rounds: int, ckpt_dir: str, backend: Optional[str],
                   keep: int, plan: Optional[faults.FaultPlan],
                   crash_after_round: Optional[int],
-                  result_path: Optional[str], log) -> dict:
+                  result_path: Optional[str],
+                  progcache_dir: Optional[str] = None,
+                  no_progcache: bool = False,
+                  metrics_out: Optional[str] = None, log=print) -> dict:
     """The serve loop over the cohort-streaming engine: same chunked
     checkpoint/resume/crash contract as the stacked path, with the engine's
     host plane (client store, fleet totals, frozen epoch stats) riding in
@@ -211,11 +307,17 @@ def _serve_cohort(exp, cell, prob: StreamProblem, *, seed: int, chunk: int,
     config = serve_config(exp, cell, seed, backend, plan)
     digest = artifacts.config_digest(config)
     root_key = jax.random.PRNGKey(seed)
+    cache = _activate_progcache(ckpt_dir, progcache_dir, no_progcache, log)
+    t0_wall = time.perf_counter()      # time-to-first-round starts here
     eng = cohort.CohortEngine(
         spec, prob.store, prob.x0, cohort=csize, rounds_per_cohort=rpc,
         root_key=root_key, basis=basis,
         sharded=backend == "cohort+sharded")
     template = eng.carry_template()
+    # resolve the chunk program BEFORE checkpoint restore: on a warm
+    # restart the executable deserializes in milliseconds and the first
+    # round starts compile-free
+    eng.warm_programs(min(chunk, max_rounds))
     ck = artifacts.load_checkpoint(ckpt_dir, config_digest=digest)
     resumed_from = None
     if ck is not None:
@@ -233,8 +335,10 @@ def _serve_cohort(exp, cell, prob: StreamProblem, *, seed: int, chunk: int,
         log(f"[serve] {exp.name}/{cell.name}: fresh run (config {digest}, "
             f"cohort {eng.cohort}/{eng.n})")
 
-    t0_wall = time.perf_counter()
+    sink = MetricsSink(metrics_out) if metrics_out else None
+    f_star = cohort.store_loss(prob.store, prob.x_star) if sink else None
     chunks_run = 0
+    ttfr_s = None
     try:
         while t < max_rounds:
             steps = min(chunk, max_rounds - t)
@@ -242,8 +346,19 @@ def _serve_cohort(exp, cell, prob: StreamProblem, *, seed: int, chunk: int,
             streams = _append_chunk(streams, ys)
             t += steps
             chunks_run += 1
+            if ttfr_s is None:
+                ttfr_s = time.perf_counter() - t0_wall
             log(f"[serve] rounds {t - steps}..{t - 1} done "
                 f"(epoch {(t - 1) // rpc})")
+            if sink is not None:
+                xs_new = np.asarray(streams["eval_x"][-steps:])
+                sink.emit_chunk(
+                    range(t - steps, t),
+                    [cohort.store_loss(prob.store, x) - f_star
+                     for x in xs_new],
+                    streams["events"][-steps:],
+                    {leg: streams[f"led_{leg}"][-steps:]
+                     for leg in comm.CommLedger.LEGS})
             if crash is not None:
                 crash.maybe_crash(t - 1)
             leaves, host_state = eng.checkpoint_payload()
@@ -257,7 +372,8 @@ def _serve_cohort(exp, cell, prob: StreamProblem, *, seed: int, chunk: int,
     # fleet gaps evaluate slab-wise on the host (the device never holds
     # more than the cohort)
     xs = np.asarray(streams["eval_x"])
-    f_star = cohort.store_loss(prob.store, prob.x_star)
+    f_star = (cohort.store_loss(prob.store, prob.x_star)
+              if f_star is None else f_star)
     evals = {"gap": np.array([cohort.store_loss(prob.store, xs[i]) - f_star
                               for i in range(xs.shape[0])])}
     led_streams = comm.CommLedger(
@@ -289,6 +405,8 @@ def _serve_cohort(exp, cell, prob: StreamProblem, *, seed: int, chunk: int,
             "resumed_from": resumed_from,
             "straggler_wait_s": 0.0,
             "runtime_s": time.perf_counter() - t0_wall,
+            "ttfr_s": ttfr_s,
+            "progcache": cache.summary() if cache is not None else None,
             "cohort": eng.cohort,
             "rounds_per_cohort": rpc,
             "n_clients": eng.n,
@@ -308,9 +426,16 @@ def serve(*, exp_name: str, cell_name: str, seed: int = 0, chunk: int = 25,
           max_rounds: int = 200, ckpt_dir: str, backend: Optional[str] = None,
           keep: int = 3, plan: Optional[faults.FaultPlan] = None,
           crash_after_round: Optional[int] = None,
-          result_path: Optional[str] = None, log=print) -> dict:
+          result_path: Optional[str] = None,
+          progcache_dir: Optional[str] = None, no_progcache: bool = False,
+          metrics_out: Optional[str] = None, log=print) -> dict:
     """Run (or resume) a serve loop to ``max_rounds``; returns the final
-    serve record (also written to ``result_path`` when given)."""
+    serve record (also written to ``result_path`` when given).
+
+    ``progcache_dir`` roots the AOT program cache (default
+    ``<ckpt_dir>/progcache``; ``no_progcache=True`` disables both cache
+    tiers); ``metrics_out`` appends a crash-safe JSONL metrics line per
+    round (`MetricsSink`)."""
     if chunk < 1:
         raise SystemExit(f"--chunk must be >= 1, got {chunk}")
     exp = get_experiment(exp_name)
@@ -321,7 +446,8 @@ def serve(*, exp_name: str, cell_name: str, seed: int = 0, chunk: int = 25,
             exp, cell, prob, seed=seed, chunk=chunk, max_rounds=max_rounds,
             ckpt_dir=ckpt_dir, backend=backend, keep=keep, plan=plan,
             crash_after_round=crash_after_round, result_path=result_path,
-            log=log)
+            progcache_dir=progcache_dir, no_progcache=no_progcache,
+            metrics_out=metrics_out, log=log)
     spec, batch, basisb = build_setup(exp, cell, prob)
     plan = plan if plan is not None else faults.FaultPlan(n=batch.n)
     if plan.n != batch.n:
@@ -341,8 +467,16 @@ def serve(*, exp_name: str, cell_name: str, seed: int = 0, chunk: int = 25,
 
     config = serve_config(exp, cell, seed, backend, plan)
     digest = artifacts.config_digest(config)
+    cache = _activate_progcache(ckpt_dir, progcache_dir, no_progcache, log)
+    t0_wall = time.perf_counter()      # time-to-first-round starts here
     template = rounds.init_serve_carry(spec, batch, basisb, x0,
                                        sharded=sharded)
+    # resolve the chunk program BEFORE checkpoint restore: on a warm
+    # restart the executable deserializes in milliseconds and the first
+    # round starts compile-free
+    rounds.warm_chunk_program(spec, batch, basisb, x0, template,
+                              min(chunk, max_rounds),
+                              jax.random.PRNGKey(seed), sharded=sharded)
     ck = artifacts.load_checkpoint(ckpt_dir, config_digest=digest)
     resumed_from = None
     if ck is not None:
@@ -360,9 +494,11 @@ def serve(*, exp_name: str, cell_name: str, seed: int = 0, chunk: int = 25,
         root_key = jax.random.PRNGKey(seed)
         log(f"[serve] {exp.name}/{cell.name}: fresh run (config {digest})")
 
-    t0_wall = time.perf_counter()
+    sink = MetricsSink(metrics_out) if metrics_out else None
+    f_star = batched._f_star(batch, x_star) if sink else None
     chunks_run = 0
     waited_total = 0.0
+    ttfr_s = None
     while t < max_rounds:
         steps = min(chunk, max_rounds - t)
         if plan.trivial:
@@ -378,6 +514,17 @@ def serve(*, exp_name: str, cell_name: str, seed: int = 0, chunk: int = 25,
         t += steps
         chunks_run += 1
         waited_total += waited
+        if ttfr_s is None:
+            ttfr_s = time.perf_counter() - t0_wall
+        if sink is not None:
+            gaps = spec.eval_streams(
+                batch, jnp.asarray(streams["eval_x"][-steps:]),
+                f_star)["gap"]
+            sink.emit_chunk(
+                range(t - steps, t), np.asarray(gaps),
+                streams["events"][-steps:],
+                {leg: streams[f"led_{leg}"][-steps:]
+                 for leg in comm.CommLedger.LEGS})
         evs = streams["events"][-steps:]
         n_deg = int(np.count_nonzero(evs))
         log(f"[serve] rounds {t - steps}..{t - 1} done"
@@ -427,6 +574,8 @@ def serve(*, exp_name: str, cell_name: str, seed: int = 0, chunk: int = 25,
             "resumed_from": resumed_from,
             "straggler_wait_s": waited_total,
             "runtime_s": time.perf_counter() - t0_wall,
+            "ttfr_s": ttfr_s,
+            "progcache": cache.summary() if cache is not None else None,
         },
     }
     if result_path:
@@ -475,6 +624,14 @@ def main(argv=None):
                     help="checkpoints retained after pruning")
     ap.add_argument("--result", default=None,
                     help="write the final serve record JSON here")
+    ap.add_argument("--progcache-dir", default=None,
+                    help="AOT program cache directory (default: "
+                         "<ckpt-dir>/progcache)")
+    ap.add_argument("--no-progcache", action="store_true",
+                    help="disable the program cache (always live-compile)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append per-round JSONL metrics (round, gap, "
+                         "events, per-leg ledger bits) to this file")
     # fault injection
     ap.add_argument("--dropout-p", type=float, default=0.0,
                     help="i.i.d. per-(client, round) dropout probability")
@@ -510,7 +667,8 @@ def main(argv=None):
           ckpt_dir=args.ckpt_dir, backend=args.backend, keep=args.keep,
           plan=_build_plan(args, prob.n),
           crash_after_round=args.crash_after_round,
-          result_path=args.result)
+          result_path=args.result, progcache_dir=args.progcache_dir,
+          no_progcache=args.no_progcache, metrics_out=args.metrics_out)
     return 0
 
 

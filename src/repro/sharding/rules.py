@@ -27,6 +27,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 CLIENT_AXIS = "data"
 
 
+def mesh_fingerprint(mesh: "Mesh") -> str:
+    """Identity-free description of a mesh for program-cache keys
+    (`repro.core.progcache`): axis names/sizes plus the device platform and
+    kind.  Two processes building the same-shape mesh over the same device
+    model produce the same string; device ordinals and hostnames are
+    deliberately excluded (an executable compiled for device 0..7 loads
+    fine on any same-kind 8-device world)."""
+    axes = ",".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names)
+    dev = mesh.devices.ravel()[0]
+    return f"mesh({axes}|{dev.platform}:{dev.device_kind})"
+
+
 def client_chunk_specs(carry_specs, basis_replicated: bool = False):
     """shard_map specs for the unified chunked round driver's body
     (`repro.core.rounds._chunk_body` — the one scan program behind both

@@ -3,6 +3,7 @@
 
     python tools/schema_diff.py <generated_dir> <committed_results_dir>
     python tools/schema_diff.py --ckpt <checkpoint_dir>
+    python tools/schema_diff.py --progcache <progcache_dir>
 
 For every figure CSV in <generated_dir>, the same-named committed CSV must
 share the exact header row (the versioned `repro.exp.artifacts.CSV_COLUMNS`
@@ -18,6 +19,13 @@ artifacts is comparable.  Exits 1 listing every mismatch.
 payload whose sha256 matches the manifest, and agree with the payload on
 the carry leaf count; a serve result JSON in the directory (if present) is
 checked for the ``repro.exp/serve@N`` tag and its history keys.
+
+``--progcache`` validates an AOT program-cache directory
+(`repro.core.progcache` output): every ``<name>-<key>.json`` manifest must
+carry the current ``repro.progcache/entry@N`` schema tag, the required
+keys, and reference a ``.bin`` payload whose sha256 matches.  The entry
+check itself lives in ``repro.core.progcache.validate_entry`` so the tool
+and the runtime's own load-time validation can never disagree.
 """
 from __future__ import annotations
 
@@ -119,6 +127,28 @@ def check_ckpt_dir(ckpt_dir):
     return problems
 
 
+def check_progcache_dir(cache_dir):
+    """Validate every AOT cache-entry manifest in a progcache directory via
+    the runtime's own `repro.core.progcache.validate_entry`."""
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                    os.pardir, "src"))
+    from repro.core.progcache import validate_entry
+
+    if not os.path.isdir(cache_dir):
+        return [f"{cache_dir}: not a directory"]
+    manifests = sorted(f for f in os.listdir(cache_dir)
+                       if f.endswith(".json"))
+    if not manifests:
+        return [f"no cache-entry manifests found in {cache_dir}"]
+    problems = []
+    for f in manifests:
+        problems.extend(validate_entry(os.path.join(cache_dir, f)))
+    if not problems:
+        print(f"progcache schema ok: {len(manifests)} entry manifest(s) "
+              f"in {cache_dir}")
+    return problems
+
+
 def check_serve_result(path):
     """Validate one serve result record (callable with a file outside the
     checkpoint dir, e.g. a CI-archived result)."""
@@ -141,6 +171,9 @@ def check_serve_result(path):
 def main(argv):
     if len(argv) == 2 and argv[0] == "--ckpt":
         problems = check_ckpt_dir(argv[1])
+        return _fail(problems) if problems else 0
+    if len(argv) == 2 and argv[0] == "--progcache":
+        problems = check_progcache_dir(argv[1])
         return _fail(problems) if problems else 0
     if len(argv) != 2:
         print(__doc__)
